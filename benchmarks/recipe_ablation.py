@@ -1,0 +1,134 @@
+"""Paper Fig 11 + §2.4.3 "Gradient profiling" — hybrid (E4M3 fwd / E5M2 bwd)
+vs pure-E4M3 E2E FP8 training.
+
+Reproduces the diagnostic that explains the paper's pure-E4M3 collapse:
+per-tile statistics of grad-output tensors across layers.  MoE fc1 is the
+paper's worst offender (5% mean tile exceedance, 21% at layer 0).  We
+capture grad-outputs with GradTap on a reduced MoE model and report
+exceed / underflow / loss fractions per tensor under both grad formats.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.grad_profile import tile_exceedance_stats
+from repro.core.precision import E4M3, E5M2
+from repro.data import tasks
+from repro.models import forward_train, init_params
+from repro.models.moe import router_logits
+
+
+def _grad_outputs(cfg, params, tokens, key):
+    """Grad-outputs of every linear via explicit vjp through one block.
+
+    We capture dL/d(pre-activation) for fc1/fc2 (MoE) and wq/wo via taps:
+    rebuild the forward with tap tensors added at each linear output.
+    """
+    from repro.core.grad_profile import grad_tap
+
+    taps = {}
+
+    def loss(p, taps):
+        # single-layer manual forward mirroring blocks.apply_slot_full,
+        # instrumented with taps (enough for the per-tensor-kind profile)
+        from repro.models.common import rms_norm
+        x = jnp.take(p["emb"], tokens, axis=0)
+        blk = jax.tree.map(lambda a: a[0], p["blocks"])
+        s0 = blk["s0"]
+        ap = s0["attn"]
+        xn = rms_norm(x, ap["norm_scale"], cfg.norm_eps)
+        b, t, _ = x.shape
+        h, kvh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+        q = grad_tap(xn @ ap["wq"], taps, "wq_out")
+        k = xn @ ap["wk"]
+        v = xn @ ap["wv"]
+        qh = q.reshape(b, t, h, dh)
+        kh = jnp.repeat(k.reshape(b, t, kvh, dh), h // kvh, 2)
+        vh = jnp.repeat(v.reshape(b, t, kvh, dh), h // kvh, 2)
+        sc = jnp.einsum("bqhd,bkhd->bhqk", qh, kh) / dh ** 0.5
+        sc = jnp.where(jnp.tril(jnp.ones((t, t), bool)), sc, -1e30)
+        o = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(sc, -1), vh)
+        o = grad_tap(o.reshape(b, t, h * dh) @ ap["wo"], taps, "o_proj_out")
+        x = x + o
+        mp = s0["moe"]
+        xn = rms_norm(x, mp["norm_scale"], cfg.norm_eps)
+        logits = router_logits(xn.reshape(-1, cfg.d_model), mp["router"])
+        probs = jax.nn.softmax(logits, -1)
+        topp, topi = jax.lax.top_k(probs, cfg.top_k)
+        # dense-expert eval weighted by gates (profiling path; no dispatch)
+        gu = grad_tap(jnp.einsum("btd,edf->btef", xn, mp["fc1"]), taps,
+                      "fc1_out")
+        g, u = jnp.split(gu, 2, axis=-1)
+        hexp = jax.nn.silu(g) * u
+        eout = grad_tap(jnp.einsum("btef,efd->bted", hexp, mp["fc2"]), taps,
+                        "fc2_out")
+        w = jnp.zeros_like(probs).at[
+            jnp.arange(probs.shape[0])[:, None], topi].set(topp)
+        w = (w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)).reshape(
+            b, t, cfg.n_experts)
+        x = x + jnp.einsum("bted,bte->btd", eout, w)
+        lp = jax.nn.log_softmax((x @ p["emb"].T).astype(jnp.float32), -1)
+        return -jnp.mean(jnp.take_along_axis(lp, tokens[..., None], -1))
+
+    loss(params, taps)  # populate tap shapes
+    _, tap_grads = jax.grad(loss, argnums=(0, 1))(params, taps)
+    return tap_grads
+
+
+def run(seed: int = 0):
+    cfg = get_config("qwen3-30b-a3b").reduced(
+        n_layers=2, d_model=128, d_ff=64, vocab_size=tasks.VOCAB_SIZE,
+        n_heads=4, n_kv_heads=2, d_head=32)
+    params = init_params(cfg, jax.random.key(seed), dtype=jnp.float32)
+    tokens = jax.random.randint(jax.random.key(seed + 1), (8, 32), 0,
+                                cfg.vocab_size)
+    grads = _grad_outputs(cfg, params, tokens, jax.random.key(seed))
+
+    out = {}
+    for name, g in grads.items():
+        g2 = g.reshape(-1, g.shape[-1])
+        # delayed-scale reference calibrated on the tensor's own p50 tile --
+        # models the TE amax-history lag during rapid gradient growth
+        for fmt, fname in ((E4M3, "e4m3"), (E5M2, "e5m2")):
+            stats = tile_exceedance_stats(g2, fmt, tile=min(128, g2.shape[-1]))
+            ref = stats.p99_tile_amax / 448.0 / 8.0   # lagging scale
+            stats_d = tile_exceedance_stats(g2, fmt,
+                                            tile=min(128, g2.shape[-1]),
+                                            ref_scale=ref)
+            out[f"{name}/{fname}"] = {
+                "exceed_frac": float(stats_d.exceed_frac),
+                "underflow_frac": float(stats.underflow_frac),
+                "loss_frac": float(stats.loss_frac),
+            }
+    return out
+
+
+def summarize(stats):
+    rows = []
+    for key, s in stats.items():
+        rows.append((f"recipe_ablation/{key}", 0.0,
+                     f"exceed={s['exceed_frac']:.4f};"
+                     f"underflow={s['underflow_frac']:.4f};"
+                     f"loss={s['loss_frac']:.4f}"))
+    # the paper's headline: fc1 grads lose the most data under E4M3 and the
+    # E5M2 backward (hybrid recipe) strictly reduces the loss fraction
+    fc1_e4 = stats["fc1_out/e4m3"]["loss_frac"]
+    fc1_e5 = stats["fc1_out/e5m2"]["loss_frac"]
+    others_e4 = max(s["loss_frac"] for k, s in stats.items()
+                    if k.endswith("e4m3") and not k.startswith("fc1"))
+    rows.append(("recipe_ablation/headline", 0.0,
+                 f"fc1_worst_under_e4m3={fc1_e4 >= others_e4};"
+                 f"hybrid_reduces_loss={fc1_e5 <= fc1_e4}"))
+    return rows
+
+
+def main(quick: bool = False):
+    for name, us, derived in summarize(run()):
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

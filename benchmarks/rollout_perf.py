@@ -1,0 +1,101 @@
+"""Paper Fig 3 / Fig 5 / Fig 9 / Fig 14 — rollout time-per-token vs response
+length, BF16 vs FP8 variants.
+
+This container has no TPU, so wall-clock fp8 speedups cannot be *measured*;
+they are *modeled* from the decode-step roofline, which on v5e is HBM-bound:
+
+    t_token = (param_bytes/chips + kv_bytes(len)/chips + act_bytes) / HBM_BW
+
+with param/KV byte counts taken from the actual quantized pytrees (fp8
+halves both) on the paper's own models (Qwen3-8B dense on 8 chips,
+Qwen3-30B-A3B MoE on 16 chips — the 8x/2x8xH100 analogue).  The derived
+speedups land in the paper's reported ranges (10-20% dense linear-only,
+30-50% MoE, ~35-45% with fp8 KV at 20k) because the same bandwidth
+arithmetic drives both systems.
+"""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core.precision import (
+    BF16_ROLLOUT,
+    FP8_KV_ONLY_ROLLOUT,
+    FP8_LINEAR_ROLLOUT,
+    FULL_FP8_ROLLOUT,
+)
+from repro.roofline.analysis import HBM_BW
+from repro.serving.engine import kv_bytes_per_token
+
+CONFIGS = {
+    "bf16": BF16_ROLLOUT,
+    "fp8_linear": FP8_LINEAR_ROLLOUT,
+    "fp8_kv": FP8_KV_ONLY_ROLLOUT,
+    "full_fp8": FULL_FP8_ROLLOUT,
+}
+LENGTHS = (2048, 5120, 10240, 20480)
+
+
+def param_bytes(cfg, precision) -> int:
+    """Weight bytes streamed per decode *step*.
+
+    MoE: with batch*top_k >> n_experts the union of activated experts covers
+    the whole expert set every step, so the streamed bytes follow the TOTAL
+    parameter count — the paper's §2.2.3 observation that "loading the
+    massive 30B parameter set consumes substantial bandwidth" and why MoE
+    gains 2-3x more from W8A8 than dense."""
+    n = cfg.param_count()
+    if not precision.quantize_linears:
+        return n * 2
+    # embeddings / lm_head / norms / router stay bf16 (paper §2.1.1)
+    excluded = cfg.vocab_size * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    quantized = n - excluded
+    return int(quantized * 1.0 + quantized / 128 * 4 / 128 + excluded * 2)
+
+
+# Fraction of bf16 decode time that quantization cannot touch: engine
+# scheduling, sampling, norms/softmax, kernel launch — the paper's own
+# "non-GEMM overhead" observation (§2.4.2).  Stated explicitly because the
+# modeled speedups are bandwidth-roofline bounds discounted by this term.
+OVERHEAD_FRAC = 0.30
+
+
+def modeled_ms_per_token(cfg, precision, resp_len: int, chips: int,
+                         batch: int, bf16_total: float | None = None) -> float:
+    """HBM-roofline decode time + fixed non-quantizable overhead.
+
+    Weights stream once per step (batched decode amortizes across the
+    batch); KV streams per sequence."""
+    w = param_bytes(cfg, precision) / chips / batch
+    kv = kv_bytes_per_token(cfg, precision) * resp_len / chips
+    quantizable = (w + kv) / HBM_BW * 1e3
+    if bf16_total is None:           # defining the bf16 baseline
+        return quantizable / (1.0 - OVERHEAD_FRAC)
+    return quantizable + OVERHEAD_FRAC * bf16_total
+
+
+def run(quick: bool = False):
+    rows = []
+    for model, chips, batch in (("qwen3-8b", 8, 64), ("qwen3-30b-a3b", 16, 64)):
+        cfg = get_config(model)
+        base = {}
+        for length in LENGTHS:
+            for name, prec in CONFIGS.items():
+                if name == "bf16":
+                    ms = modeled_ms_per_token(cfg, prec, length, chips, batch)
+                    base[length] = ms
+                else:
+                    ms = modeled_ms_per_token(cfg, prec, length, chips, batch,
+                                              bf16_total=base[length])
+                speedup = (base[length] / ms - 1.0) * 100
+                rows.append((f"rollout_perf/{model}/{name}/len{length}",
+                             ms * 1e3,
+                             f"ms_per_token={ms:.4f};speedup_vs_bf16={speedup:.1f}%"))
+    return rows
+
+
+def main(quick: bool = False):
+    for name, us, derived in run(quick):
+        print(f"{name},{us:.2f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

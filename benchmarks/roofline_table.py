@@ -1,0 +1,68 @@
+"""§Roofline / §Dry-run table builder: reads benchmarks/dryrun_results/*.json
+and emits the per-cell roofline rows (also consumed by EXPERIMENTS.md)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "dryrun_results")
+
+
+def load(mesh: str | None = None, precision: str | None = None,
+         tag: str = ""):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if mesh and r.get("mesh") != mesh:
+            continue
+        if precision and r.get("precision") != precision:
+            continue
+        if (r.get("tag") or "") != tag:
+            continue
+        rows.append(r)
+    return rows
+
+
+def markdown_table(rows):
+    hdr = ("| arch | shape | mesh | status | peak GB/dev | compute s | "
+           "memory s | collective s | dominant | useful-FLOPs | MFU-bound |")
+    sep = "|" + "---|" * 11
+    lines = [hdr, sep]
+    for r in rows:
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"ERROR | - | - | - | - | - | - | - |")
+            continue
+        mem = r.get("memory", {})
+        peak = mem.get("peak_bytes_est", 0) / 1e9
+        rf = r.get("roofline")
+        if not rf:
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"ok (compile proof) | {peak:.2f} | - | - | - | - | - | - |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | {peak:.2f} | "
+            f"{rf['compute_s']:.3e} | {rf['memory_s']:.3e} | "
+            f"{rf['collective_s']:.3e} | {rf['dominant']} | "
+            f"{rf['useful_flops_fraction']:.2f} | {rf['mfu']:.3f} |")
+    return "\n".join(lines)
+
+
+def main(quick: bool = False):
+    rows = load()
+    ok = sum(1 for r in rows if r.get("status") == "ok")
+    print(f"roofline_table/cells,0.0,total={len(rows)};ok={ok}")
+    for r in rows:
+        rf = r.get("roofline")
+        if r.get("status") == "ok" and rf:
+            print(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']},0.0,"
+                  f"dominant={rf['dominant']};mfu={rf['mfu']:.3f};"
+                  f"compute_s={rf['compute_s']:.3e};memory_s={rf['memory_s']:.3e};"
+                  f"collective_s={rf['collective_s']:.3e}")
+
+
+if __name__ == "__main__":
+    print(markdown_table(load()))

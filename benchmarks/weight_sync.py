@@ -1,0 +1,71 @@
+"""Paper §2.1.2 / Fig 1 — dynamic weight synchronization: per-step cost of
+quantizing the fresh policy into the inference engine, plus kernel-level
+timing of the fused Pallas quantizer (interpret mode on CPU; the BlockSpec
+tiling is the TPU artifact).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_call
+from repro.configs import get_config
+from repro.core.fp8_params import count_quantized
+from repro.core.precision import FULL_FP8_ROLLOUT
+from repro.core.quant import quantize_weight
+from repro.data import tasks
+from repro.models import init_params
+from repro.rl import sync_policy_weights, weight_quant_error
+
+
+def run():
+    cfg = get_config("qwen3-8b").reduced(
+        n_layers=4, d_model=256, d_ff=512, vocab_size=tasks.VOCAB_SIZE,
+        n_heads=8, n_kv_heads=4, d_head=32)
+    params = init_params(cfg, jax.random.key(0))
+
+    # end-to-end sync (jit'd pytree transform)
+    roll, stats = sync_policy_weights(params, FULL_FP8_ROLLOUT)
+    t0 = time.perf_counter()
+    roll, stats = sync_policy_weights(params, FULL_FP8_ROLLOUT)
+    sync_ms = (time.perf_counter() - t0) * 1e3
+    err = weight_quant_error(params, roll)
+    q = count_quantized(roll)
+
+    # single-weight quantization micro-bench (XLA path)
+    w = jax.random.normal(jax.random.key(1), (2048, 2048), jnp.bfloat16)
+    us = time_call(jax.jit(quantize_weight), w)
+
+    n_param = sum(l.size for l in jax.tree.leaves(params))
+    return {
+        "sync_ms": sync_ms,
+        "quantized_leaves": q["quantized_leaves"],
+        "bytes_ratio": q["quantized_bytes"] /
+        max(q["quantized_bytes"] + q["raw_bytes"], 1),
+        "mean_rel_err": err["mean_rel_err"],
+        "worst": err["worst"][0] if err["worst"] else ("-", 0.0),
+        "quant_2048x2048_us": us,
+        "params": n_param,
+    }
+
+
+def summarize(r):
+    return [
+        ("weight_sync/e2e", r["sync_ms"] * 1e3,
+         f"sync_ms={r['sync_ms']:.1f};leaves={r['quantized_leaves']};"
+         f"mean_rel_err={r['mean_rel_err']:.4f};"
+         f"worst={r['worst'][0]}:{r['worst'][1]:.4f}"),
+        ("weight_sync/quantize_2048x2048", r["quant_2048x2048_us"],
+         "blockwise 128x128 E4M3 + fp32 scales"),
+    ]
+
+
+def main(quick: bool = False):
+    for name, us, derived in summarize(run()):
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

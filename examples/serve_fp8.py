@@ -1,0 +1,47 @@
+"""Serving demo: continuous batching under a KV byte budget, BF16 vs FP8 KV.
+
+    PYTHONPATH=src python examples/serve_fp8.py
+
+Shows the paper's §2.3.2 mechanism end-to-end: the same byte budget admits
+2x the tokens under fp8 KV -> higher occupancy, fewer preemptions, higher
+useful-token throughput.
+"""
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.precision import BF16_ROLLOUT, FP8_KV_ONLY_ROLLOUT
+from repro.data import tasks
+from repro.models import init_params
+from repro.rl import sync_policy_weights
+from repro.serving import ServingEngine, kv_bytes_per_token
+
+
+def main():
+    cfg = get_config("qwen3-8b").reduced(vocab_size=tasks.VOCAB_SIZE)
+    params = init_params(cfg, jax.random.key(0))
+    budget = kv_bytes_per_token(cfg, BF16_ROLLOUT) * 60   # ~2.5 bf16 requests
+
+    rng = np.random.default_rng(0)
+    prompts = []
+    for _ in range(10):
+        prob = tasks.sample_problem(rng)
+        prompts.append(prob.prompt_ids)
+
+    for name, prec in (("BF16 KV", BF16_ROLLOUT),
+                       ("FP8  KV", FP8_KV_ONLY_ROLLOUT)):
+        roll, _ = sync_policy_weights(params, prec)
+        eng = ServingEngine(roll, cfg, prec, max_slots=8, max_seq_len=32,
+                            kv_budget_bytes=budget)
+        for i, p in enumerate(prompts):
+            eng.submit(p, max_new=10, rid=i)
+        r = eng.run(max_steps=500)
+        print(f"{name}: budget={r.budget_tokens:4d} tok  "
+              f"occupancy={r.mean_occupancy:.2f}  "
+              f"preemptions={r.preemptions}  "
+              f"useful tokens/step={r.useful_token_rate:.2f}  "
+              f"steps={r.steps}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""End-to-end driver: DAPO RL with FP8 rollout on a ~100M-parameter policy.
+
+    # full run (a few hundred steps, ~100M params — hours on CPU):
+    PYTHONPATH=src python examples/train_rl_fp8.py --preset 100m --steps 300
+
+    # smoke run (seconds-per-step scale):
+    PYTHONPATH=src python examples/train_rl_fp8.py --preset small --steps 8
+
+Produces the paper's Fig-2-style metric stream (reward, accuracy, response
+length, mismatch KL) and checkpoints that survive kill/restart (--resume).
+"""
+import argparse
+import json
+
+from repro.configs import get_config
+from repro.core.precision import FULL_FP8_ROLLOUT
+from repro.data import tasks
+from repro.optim import AdamWConfig
+from repro.rl import RLConfig, RLTrainer
+
+PRESETS = {
+    # ~100M params: the assignment's end-to-end scale
+    "100m": dict(n_layers=12, d_model=768, d_ff=2048, n_heads=12,
+                 n_kv_heads=4, d_head=64, vocab_size=tasks.VOCAB_SIZE),
+    # ~1M params: smoke scale
+    "small": dict(n_layers=2, d_model=128, d_ff=256, n_heads=4,
+                  n_kv_heads=2, d_head=32, vocab_size=tasks.VOCAB_SIZE),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=sorted(PRESETS), default="small")
+    ap.add_argument("--steps", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default="/tmp/fp8rl_example_ckpt")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config("qwen3-8b").reduced(**PRESETS[args.preset])
+    rl = RLConfig(
+        precision=FULL_FP8_ROLLOUT,          # W8A8 + fp8 KV + TIS (C=2)
+        prompt_batch=8, n_per_prompt=8, max_new_tokens=10,
+        optimizer=AdamWConfig(lr=5e-4, b2=0.98, grad_clip=1.0),
+        ckpt_dir=args.ckpt_dir, ckpt_every=10,
+    )
+    trainer = RLTrainer(cfg, rl)
+    if args.resume and trainer.restore_checkpoint():
+        print(f"# resumed at step {trainer.step_idx}")
+
+    for _ in range(args.steps):
+        m = trainer.train_step()
+        print(json.dumps({k: round(v, 4) if isinstance(v, float) else v
+                          for k, v in m.items()
+                          if k in ("step", "reward_mean", "accuracy",
+                                   "response_len_mean", "mismatch_kl",
+                                   "loss", "rollout_tokens_per_s")}),
+              flush=True)
+    acc = trainer.evaluate(n_problems=64)
+    print(f"# final greedy eval accuracy: {acc:.3f}")
+
+
+if __name__ == "__main__":
+    main()

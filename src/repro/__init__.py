@@ -1,0 +1,3 @@
+"""repro: FP8-RL (NVIDIA 2026) — a practical, stable FP8 rollout stack for
+LLM reinforcement learning, reproduced as a multi-pod JAX/Pallas framework."""
+__version__ = "0.1.0"

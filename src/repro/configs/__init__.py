@@ -1,0 +1,48 @@
+"""Architecture registry: `get_config(name)` / `--arch <id>`.
+
+10 assigned architectures + the paper's own two Qwen3 models.
+"""
+from repro.configs.base import (
+    ALL_SHAPES,
+    DECODE_32K,
+    LONG_500K,
+    PREFILL_32K,
+    TRAIN_4K,
+    ArchConfig,
+    ShapeConfig,
+)
+
+from repro.configs.seamless_m4t_medium import CONFIG as seamless_m4t_medium
+from repro.configs.stablelm_3b import CONFIG as stablelm_3b
+from repro.configs.llama3_2_3b import CONFIG as llama3_2_3b
+from repro.configs.mistral_large_123b import CONFIG as mistral_large_123b
+from repro.configs.starcoder2_15b import CONFIG as starcoder2_15b
+from repro.configs.jamba_1_5_large_398b import CONFIG as jamba_1_5_large_398b
+from repro.configs.granite_moe_3b_a800m import CONFIG as granite_moe_3b_a800m
+from repro.configs.grok_1_314b import CONFIG as grok_1_314b
+from repro.configs.mamba2_780m import CONFIG as mamba2_780m
+from repro.configs.pixtral_12b import CONFIG as pixtral_12b
+from repro.configs.qwen3_8b import CONFIG as qwen3_8b
+from repro.configs.qwen3_30b_a3b import CONFIG as qwen3_30b_a3b
+
+ASSIGNED = {
+    c.name: c for c in (
+        seamless_m4t_medium, stablelm_3b, llama3_2_3b, mistral_large_123b,
+        starcoder2_15b, jamba_1_5_large_398b, granite_moe_3b_a800m,
+        grok_1_314b, mamba2_780m, pixtral_12b,
+    )
+}
+PAPER = {c.name: c for c in (qwen3_8b, qwen3_30b_a3b)}
+REGISTRY = {**ASSIGNED, **PAPER}
+
+
+def get_config(name: str) -> ArchConfig:
+    key = name.replace("_", "-")
+    if key not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(REGISTRY)}")
+    return REGISTRY[key]
+
+
+__all__ = ["ArchConfig", "ShapeConfig", "get_config", "REGISTRY", "ASSIGNED",
+           "PAPER", "ALL_SHAPES", "TRAIN_4K", "PREFILL_32K", "DECODE_32K",
+           "LONG_500K"]

@@ -1,0 +1,31 @@
+"""Jamba-1.5-Large 398B [arXiv:2403.19887; hf] — Mamba+attention 1:7
+interleave, MoE 16 experts top-2 every other layer.
+
+Pattern period 8 (1 attention + 7 mamba), scanned 9x for 72 layers.
+long_500k runs: only 9 layers hold a dense KV cache (DESIGN.md §4).
+SSM state stays bf16 (DESIGN.md §6).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="jamba-1.5-large-398b",
+    family="hybrid",
+    source="[arXiv:2403.19887; hf]",
+    n_layers=72,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=24576,
+    vocab_size=65536,
+    n_experts=16,
+    top_k=2,
+    moe_period=2,
+    moe_offset=1,
+    attn_period=8,
+    ssm_state=128,
+    ssm_conv=4,
+    ssm_expand=2,
+    ssm_head_dim=128,
+    rope_theta=10000.0,
+)

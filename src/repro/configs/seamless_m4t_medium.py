@@ -1,0 +1,27 @@
+"""SeamlessM4T-medium backbone [arXiv:2308.11596; hf] — enc-dec, multimodal.
+
+12 encoder + 12 decoder layers; the speech frontend is a STUB: input_specs
+provides precomputed frame embeddings (B, S_src, d_model).  FP8-RL scope:
+W8A8 on enc+dec linears; fp8 KV on decoder self-attn; cross-attn KV
+quantized once at prefill (DESIGN.md §6).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="seamless-m4t-medium",
+    family="audio",
+    source="[arXiv:2308.11596; hf]",
+    n_layers=12,
+    n_enc_layers=12,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_head=64,
+    d_ff=4096,
+    vocab_size=256206,
+    frontend="audio_frames",
+    frontend_len=0,
+    rope_theta=10000.0,
+    act="relu",
+    mlp_gated=False,
+)

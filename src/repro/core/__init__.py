@@ -1,0 +1,37 @@
+"""Core FP8-RL primitives: quantization, precision recipes, fp8 linears."""
+from repro.core.precision import (
+    ACT_BLOCK,
+    BF16_ROLLOUT,
+    E2E_FP8,
+    E4M3,
+    E4M3_MAX,
+    E5M2,
+    E5M2_MAX,
+    FP8_LINEAR_ROLLOUT,
+    FP8_KV_ONLY_ROLLOUT,
+    FP8_MAX,
+    FULL_FP8_ROLLOUT,
+    Fp8Recipe,
+    PrecisionConfig,
+    RolloutCorrection,
+    RouterDtype,
+    ScaleFormat,
+    WEIGHT_BLOCK,
+)
+from repro.core.quant import (
+    QuantizedTensor,
+    calibrate_scale,
+    dequantize,
+    dequantize_per_tensor,
+    encode_scale,
+    qdq,
+    qdq_weight,
+    quantization_rel_error,
+    quantize_activation,
+    quantize_blockwise,
+    quantize_per_tensor,
+    quantize_weight,
+    saturating_cast,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

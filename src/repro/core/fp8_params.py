@@ -1,0 +1,119 @@
+"""Param-pytree quantization — the substrate of the weight-sync phase.
+
+Paper §2.1.2: every RL step, BF16 weights from the training backend are
+blockwise-quantized and loaded into the inference engine.  In JAX this is a
+pure pytree transform: linear-layer weight leaves become `QuantizedTensor`s
+(fp8 payload + fp32/ue8m0 scales); excluded leaves (embeddings, norms,
+lm_head, routers — paper §2.1.1 quantization scope) pass through unchanged.
+
+The transform is jit-compatible and sharding-preserving, so under pjit the
+"load into the inference engine" step is just GSPMD resharding of the
+quantized pytree.
+"""
+from __future__ import annotations
+
+import re
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import E4M3, PrecisionConfig, RouterDtype, ScaleFormat
+from repro.core.quant import QuantizedTensor, quantize_weight
+
+# Leaves whose *path* matches any of these are quantized (paper §2.1.1
+# "Quantized" list: attention projections, MLP layers, MoE expert layers).
+QUANTIZE_PATTERNS = (
+    r"\bwq\b", r"\bwk\b", r"\bwv\b", r"\bwo\b",            # attention proj
+    r"\bwg\b", r"\bwu\b", r"\bwd\b",                        # gate/up/down MLP
+    r"\bfc1\b", r"\bfc2\b",                                 # MoE experts
+    r"\bw_in\b", r"\bw_out\b", r"\bw_x\b", r"\bw_z\b",      # SSM projections
+    r"\bwqkv\b", r"\bw_cross_", r"\bw_patch\b",
+)
+# Never quantized (paper §2.1.1 "Excluded" + §2.2.4 router recommendation).
+EXCLUDE_PATTERNS = (
+    r"\bemb", r"lm_head", r"\bnorm", r"\bln", r"\bscale\b", r"\bbias\b",
+    r"router", r"\brope", r"\ba_log\b", r"\bdt_bias\b", r"\bD\b",
+)
+
+_QUANT_RE = re.compile("|".join(QUANTIZE_PATTERNS))
+_EXCL_RE = re.compile("|".join(EXCLUDE_PATTERNS))
+
+
+def default_quant_filter(path: str, leaf) -> bool:
+    """True -> quantize this leaf for rollout."""
+    if not hasattr(leaf, "ndim") or leaf.ndim < 2:
+        return False
+    if _EXCL_RE.search(path):
+        return False
+    return bool(_QUANT_RE.search(path))
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def quantize_params(
+    params,
+    precision: PrecisionConfig,
+    quant_filter: Callable[[str, jax.Array], bool] = default_quant_filter,
+):
+    """BF16 training params -> rollout params (paper Fig 1, "weight
+    synchronization phase").
+
+    Stacked (scan-over-layers) weights of shape (L, K, N) keep per-layer
+    128x128 blocks — `quantize_weight` blocks only the last two dims.
+    Router weights get cast to the configured router dtype instead.
+    """
+    if not precision.quantize_linears:
+        return _apply_router_dtype(params, precision)
+
+    def convert(path, leaf):
+        p = _path_str(path)
+        if "router" in p:
+            return _router_cast(leaf, precision.router_dtype)
+        if quant_filter(p, leaf):
+            return quantize_weight(leaf, E4M3, precision.scale_format)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(convert, params)
+
+
+def _router_cast(leaf, router_dtype: RouterDtype):
+    if router_dtype == RouterDtype.FP32:
+        return leaf.astype(jnp.float32)
+    if router_dtype == RouterDtype.FP8:
+        # router quantized along with other layers (ablation, paper fig 6)
+        return quantize_weight(leaf, E4M3, ScaleFormat.FP32)
+    return leaf.astype(jnp.bfloat16)
+
+
+def _apply_router_dtype(params, precision: PrecisionConfig):
+    def convert(path, leaf):
+        if "router" in _path_str(path):
+            return _router_cast(leaf, precision.router_dtype)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(convert, params)
+
+
+def count_quantized(params) -> dict:
+    """Telemetry for EXPERIMENTS.md: how much of the model went fp8."""
+    n_q = n_raw = bytes_q = bytes_raw = 0
+    for leaf in jax.tree.leaves(params, is_leaf=lambda x: isinstance(x, QuantizedTensor)):
+        if isinstance(leaf, QuantizedTensor):
+            n_q += 1
+            bytes_q += leaf.data.size + leaf.scales.size * 4
+        else:
+            n_raw += 1
+            bytes_raw += leaf.size * leaf.dtype.itemsize
+    return dict(quantized_leaves=n_q, raw_leaves=n_raw,
+                quantized_bytes=bytes_q, raw_bytes=bytes_raw)

@@ -1,0 +1,118 @@
+"""Precision configuration for the FP8-RL stack.
+
+Mirrors the paper's configuration surface (§2.1.4, §B.1):
+
+  * rollout linear quantization          (W8A8 blockwise E4M3)
+  * KV-cache dtype                       (bf16 | fp8_e4m3)
+  * attention-compute quantization       ("full FP8" configuration)
+  * router precision for MoE             (fp8 | bf16 | fp32)
+  * end-to-end FP8 training recipe       (hybrid E4M3/E5M2 | pure E4M3)
+  * scaling-factor format                (fp32 | ue8m0)
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+
+import jax.numpy as jnp
+
+
+class ScaleFormat(str, enum.Enum):
+    """Scaling-factor representation (paper §2.4.3)."""
+
+    FP32 = "fp32"
+    UE8M0 = "ue8m0"  # power-of-2 scales; cheap bit-shift multiply
+
+
+class Fp8Recipe(str, enum.Enum):
+    """End-to-end FP8 training recipe (paper §2.4.3)."""
+
+    HYBRID = "hybrid"  # E4M3 forward, E5M2 backward (recommended)
+    E4M3 = "e4m3"      # pure E4M3 both directions (DeepSeek-V3 style; ablation)
+
+
+class RouterDtype(str, enum.Enum):
+    FP8 = "fp8"
+    BF16 = "bf16"
+    FP32 = "fp32"
+
+
+class RolloutCorrection(str, enum.Enum):
+    """Importance-sampling rollout correction variant (paper §2.1.3)."""
+
+    NONE = "none"
+    TIS = "tis"    # token-level truncated importance sampling
+    MIS = "mis"    # masked importance sampling
+
+
+# FP8 format constants.  XLA's cast-to-fp8 produces NaN on overflow, so every
+# quantizer in this package clips to the representable max *before* casting.
+E4M3_MAX = 448.0
+E5M2_MAX = 57344.0
+E4M3 = jnp.float8_e4m3fn
+E5M2 = jnp.float8_e5m2
+
+# keyed by both the jnp scalar-type class and the numpy dtype instance, so
+# `FP8_MAX[x.dtype]` works as well as `FP8_MAX[E4M3]`
+FP8_MAX = {
+    E4M3: E4M3_MAX, E5M2: E5M2_MAX,
+    jnp.dtype(E4M3): E4M3_MAX, jnp.dtype(E5M2): E5M2_MAX,
+}
+
+# The paper's blocking (§2.1.1, following DeepSeek-V3): 128x128 blocks for
+# weights, 1x128 tiles for dynamically-quantized activations.  128 is also the
+# TPU MXU/lane tile, making per-block scale application MXU-native.
+WEIGHT_BLOCK = 128
+ACT_BLOCK = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionConfig:
+    """Full precision recipe for one run.
+
+    Defaults correspond to the paper's recommended configuration: FP8 W8A8
+    blockwise rollout with fp8 KV cache, BF16 MoE router, FP32 scales, hybrid
+    E2E recipe (if e2e fp8 training is enabled), and token-level TIS.
+    """
+
+    # --- rollout (inference engine) side -----------------------------------
+    quantize_linears: bool = True              # W8A8 blockwise FP8 for linear layers
+    kv_cache_dtype: str = "fp8_e4m3"           # "bf16" | "fp8_e4m3"
+    quantize_attention: bool = False           # fp8 QK^T / PV compute ("Full FP8")
+    calculate_kv_scales: bool = True           # per-step QKV scale recalibration
+    router_dtype: RouterDtype = RouterDtype.BF16
+    scale_format: ScaleFormat = ScaleFormat.FP32
+
+    # --- trainer side -------------------------------------------------------
+    fp8_training: bool = False                 # end-to-end FP8 (paper §2.4)
+    recipe: Fp8Recipe = Fp8Recipe.HYBRID
+
+    # --- correction ---------------------------------------------------------
+    correction: RolloutCorrection = RolloutCorrection.TIS
+    tis_clip: float = 2.0                      # C=2 in all paper experiments
+    mis_low: float = 0.5                       # MIS mask band (w outside -> token masked)
+    mis_high: float = 2.0
+
+    # --- misc ---------------------------------------------------------------
+    rollout_router_replay: bool = False        # RRR: replay rollout expert choices
+
+    @property
+    def kv_quantized(self) -> bool:
+        return self.kv_cache_dtype.startswith("fp8")
+
+    @property
+    def any_fp8_rollout(self) -> bool:
+        return self.quantize_linears or self.kv_quantized or self.quantize_attention
+
+    def replace(self, **kw) -> "PrecisionConfig":
+        return dataclasses.replace(self, **kw)
+
+
+BF16_ROLLOUT = PrecisionConfig(
+    quantize_linears=False, kv_cache_dtype="bf16", quantize_attention=False,
+    calculate_kv_scales=False, correction=RolloutCorrection.NONE,
+)
+FP8_LINEAR_ROLLOUT = PrecisionConfig(kv_cache_dtype="bf16", calculate_kv_scales=False)
+FP8_KV_ONLY_ROLLOUT = PrecisionConfig(quantize_linears=False)
+FULL_FP8_ROLLOUT = PrecisionConfig(quantize_attention=True)
+E2E_FP8 = PrecisionConfig(quantize_attention=True, fp8_training=True)

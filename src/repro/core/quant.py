@@ -1,0 +1,224 @@
+"""Blockwise FP8 quantization (paper §2.1.1).
+
+Weights: static per-128x128-block scales, E4M3.
+Activations: dynamic per-1x128-row-tile scales, E4M3.
+Gradients (E2E FP8 hybrid recipe): per-tile E5M2.
+
+Scales are `amax/fmt_max`, stored FP32 (default) or UE8M0 (power-of-2,
+paper §2.4.3).  All casts clip to the representable max first — XLA's
+float->fp8 cast yields NaN on overflow rather than saturating.
+
+Shapes are kept fully static; non-multiple-of-128 trailing blocks are handled
+by padded amax reduction, so these functions are jit- and GSPMD-safe.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import (
+    ACT_BLOCK,
+    E4M3,
+    E5M2,
+    FP8_MAX,
+    WEIGHT_BLOCK,
+    ScaleFormat,
+)
+
+_EPS = 1e-12
+
+
+def encode_scale(scale: jax.Array, scale_format: ScaleFormat) -> jax.Array:
+    """Encode a positive FP32 scale in the configured format.
+
+    UE8M0 rounds *up* to the next power of two so that `x/scale` never exceeds
+    the fp8 max (coarser granularity, never overflow).
+    """
+    if scale_format == ScaleFormat.FP32:
+        return scale.astype(jnp.float32)
+    # UE8M0: unsigned, 8 exponent bits, 0 mantissa -> 2^ceil(log2(scale)).
+    exp = jnp.ceil(jnp.log2(jnp.maximum(scale, _EPS)))
+    return jnp.exp2(exp).astype(jnp.float32)
+
+
+def _amax_to_scale(amax: jax.Array, fp8_dtype, scale_format: ScaleFormat) -> jax.Array:
+    scale = jnp.maximum(amax, _EPS) / FP8_MAX[fp8_dtype]
+    return encode_scale(scale, scale_format)
+
+
+def saturating_cast(x: jax.Array, fp8_dtype) -> jax.Array:
+    """Clip-then-cast; the clip provides saturation semantics."""
+    m = FP8_MAX[fp8_dtype]
+    return jnp.clip(x.astype(jnp.float32), -m, m).astype(fp8_dtype)
+
+
+class QuantizedTensor(NamedTuple):
+    """An fp8 tensor plus its block scales.
+
+    `data`   — fp8 array, same shape as the source.
+    `scales` — fp32 scales, one per block; shape = ceil(shape/block) per axis
+               for blocked axes, broadcast against `data` via `dequantize`.
+    `block`  — static (python) per-axis block sizes used (1 = per element axis).
+    """
+
+    data: jax.Array
+    scales: jax.Array
+    block: tuple  # static metadata
+
+    @property
+    def shape(self):
+        return self.data.shape
+
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+
+jax.tree_util.register_pytree_node(
+    QuantizedTensor,
+    lambda qt: ((qt.data, qt.scales), qt.block),
+    lambda block, children: QuantizedTensor(children[0], children[1], block),
+)
+
+
+def _block_amax(x: jax.Array, block: tuple) -> jax.Array:
+    """Per-block max(|x|).  Supports shapes not divisible by block (pads)."""
+    shape = x.shape
+    assert len(block) == len(shape), (block, shape)
+    pads = []
+    needs_pad = False
+    for dim, blk in zip(shape, block):
+        rem = (-dim) % blk
+        pads.append((0, rem))
+        needs_pad = needs_pad or rem > 0
+    ax = jnp.abs(x.astype(jnp.float32))
+    if needs_pad:
+        ax = jnp.pad(ax, pads)  # zeros never win the max
+    # reshape (d0/b0, b0, d1/b1, b1, ...) then reduce the block axes
+    new_shape = []
+    reduce_axes = []
+    for i, (dim, blk) in enumerate(zip(ax.shape, block)):
+        new_shape.extend((dim // blk, blk))
+        reduce_axes.append(2 * i + 1)
+    return ax.reshape(new_shape).max(axis=tuple(reduce_axes))
+
+
+def _broadcast_scales(scales: jax.Array, shape: tuple, block: tuple) -> jax.Array:
+    """Expand per-block scales to elementwise, cropped to `shape`."""
+    out = scales
+    for i, blk in enumerate(block):
+        if blk != 1:
+            out = jnp.repeat(out, blk, axis=i)
+    return out[tuple(slice(0, d) for d in shape)]
+
+
+def quantize_blockwise(
+    x: jax.Array,
+    block: tuple,
+    fp8_dtype=E4M3,
+    scale_format: ScaleFormat = ScaleFormat.FP32,
+) -> QuantizedTensor:
+    """Quantize with one scale per `block` region (any rank)."""
+    amax = _block_amax(x, block)
+    scales = _amax_to_scale(amax, fp8_dtype, scale_format)
+    full = _broadcast_scales(scales, x.shape, block)
+    q = saturating_cast(x.astype(jnp.float32) / full, fp8_dtype)
+    return QuantizedTensor(q, scales, block)
+
+
+def dequantize(qt: QuantizedTensor, dtype=jnp.bfloat16) -> jax.Array:
+    # Right-align the static block metadata with the data rank: vmap over a
+    # stacked QuantizedTensor strips leading axes from data/scales but not
+    # from the (static) block tuple.
+    block = qt.block[len(qt.block) - qt.data.ndim:]
+    full = _broadcast_scales(qt.scales, qt.data.shape, block)
+    return (qt.data.astype(jnp.float32) * full).astype(dtype)
+
+
+def quantize_weight(
+    w: jax.Array,
+    fp8_dtype=E4M3,
+    scale_format: ScaleFormat = ScaleFormat.FP32,
+    block_size: int = WEIGHT_BLOCK,
+) -> QuantizedTensor:
+    """Paper §2.1.1: 128x128 blocks over the last two dims; leading dims
+    (layer-stacked params) get per-slice blocks of 1."""
+    assert w.ndim >= 2, "weight quantization expects a matrix"
+    block = (1,) * (w.ndim - 2) + (block_size, block_size)
+    return quantize_blockwise(w, block, fp8_dtype, scale_format)
+
+
+def quantize_activation(
+    x: jax.Array,
+    fp8_dtype=E4M3,
+    scale_format: ScaleFormat = ScaleFormat.FP32,
+    block_size: int = ACT_BLOCK,
+) -> QuantizedTensor:
+    """Paper §2.1.1: dynamic 1x128 tiles along the contraction (last) dim."""
+    block = (1,) * (x.ndim - 1) + (block_size,)
+    return quantize_blockwise(x, block, fp8_dtype, scale_format)
+
+
+def qdq(
+    x: jax.Array,
+    block: tuple | None = None,
+    fp8_dtype=E4M3,
+    scale_format: ScaleFormat = ScaleFormat.FP32,
+) -> jax.Array:
+    """Quantize-dequantize: exact fp8 value semantics in the source dtype.
+
+    This is how the CPU/GPU-less container reproduces FP8 numerics; the Pallas
+    kernels implement the same math with fp8 storage in HBM.
+    """
+    if block is None:
+        block = (1,) * (x.ndim - 1) + (ACT_BLOCK,)
+    return dequantize(quantize_blockwise(x, block, fp8_dtype, scale_format), x.dtype)
+
+
+def qdq_weight(x, scale_format: ScaleFormat = ScaleFormat.FP32, fp8_dtype=E4M3):
+    return dequantize(quantize_weight(x, fp8_dtype, scale_format), x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Per-tensor quantization (used for KV-cache scales, paper §2.3: vLLM-style
+# per-layer k_scale / v_scale calibrated from observed amax).
+# ---------------------------------------------------------------------------
+
+def quantize_per_tensor(
+    x: jax.Array,
+    scale: jax.Array,
+    fp8_dtype=E4M3,
+) -> jax.Array:
+    """Quantize with an externally-calibrated scalar (or broadcastable) scale."""
+    return saturating_cast(x.astype(jnp.float32) / scale, fp8_dtype)
+
+
+def dequantize_per_tensor(q: jax.Array, scale: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    # compute the scale-multiply in the *target* dtype: an f32 intermediate
+    # here becomes the tensor GSPMD gathers for sharded attention — observed
+    # as 4x the fp8 payload bytes on the decode path (§Perf decode log)
+    if dtype != jnp.float32:
+        return q.astype(dtype) * jnp.asarray(scale, jnp.float32).astype(dtype)
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def calibrate_scale(
+    amax: jax.Array,
+    fp8_dtype=E4M3,
+    scale_format: ScaleFormat = ScaleFormat.FP32,
+    margin: float = 1.0,
+) -> jax.Array:
+    """amax -> scale with optional safety margin (for drifting distributions)."""
+    return _amax_to_scale(amax * margin, fp8_dtype, scale_format)
+
+
+# ---------------------------------------------------------------------------
+# Quantization error metrics (used by tests and the weight-sync monitor).
+# ---------------------------------------------------------------------------
+
+def quantization_rel_error(x: jax.Array, qt: QuantizedTensor) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    err = jnp.linalg.norm((xf - dequantize(qt, jnp.float32)).ravel())
+    return err / (jnp.linalg.norm(xf.ravel()) + _EPS)

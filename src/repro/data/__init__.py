@@ -1,0 +1,3 @@
+from repro.data import tasks
+from repro.data.pipeline import PromptBatch, PromptPipeline
+__all__ = ["tasks", "PromptBatch", "PromptPipeline"]

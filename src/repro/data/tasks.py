@@ -1,0 +1,81 @@
+"""Synthetic verifiable tasks + toy tokenizer (the AIME/DAPO stand-in).
+
+The paper's reward is rule-based (exact answer match on math problems).
+We preserve that structure with programmatic arithmetic tasks: the policy
+must emit the correct result digits inside an answer tag.  Rewards are
+exactly verifiable, so DAPO/GRPO learning dynamics (reward climbing,
+response-length growth, entropy collapse under no-correction FP8) are
+reproducible on CPU with ~1M-param models.
+
+Token space (small, fixed): digits 0-9, operators, structural tokens.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import numpy as np
+
+PAD, BOS, EOS, ANS = 0, 1, 2, 3
+_SPECIALS = ["<pad>", "<bos>", "<eos>", "<ans>"]
+_DIGITS = [str(d) for d in range(10)]
+_OPS = ["+", "-", "*", "=", " "]
+VOCAB: List[str] = _SPECIALS + _DIGITS + _OPS
+TOK = {t: i for i, t in enumerate(VOCAB)}
+VOCAB_SIZE = len(VOCAB)  # 19
+
+
+def encode(text: str) -> List[int]:
+    return [TOK[c] for c in text]
+
+
+def decode_ids(ids) -> str:
+    out = []
+    for i in ids:
+        i = int(i)
+        if i < len(VOCAB) and i >= len(_SPECIALS):
+            out.append(VOCAB[i])
+        elif i == ANS:
+            out.append("<ans>")
+        elif i == EOS:
+            break
+    return "".join(out)
+
+
+@dataclasses.dataclass
+class Problem:
+    prompt_ids: List[int]
+    answer: str
+
+
+def sample_problem(rng: np.random.Generator, max_operand: int = 99) -> Problem:
+    a = int(rng.integers(0, max_operand + 1))
+    b = int(rng.integers(0, max_operand + 1))
+    op = rng.choice(["+", "-"])
+    val = a + b if op == "+" else a - b
+    text = f"{a}{op}{b}="
+    return Problem(prompt_ids=[BOS] + encode(text), answer=str(val))
+
+
+def reward_fn(problem: Problem, response_ids) -> float:
+    """Rule-based verifiable reward (paper's reward model analogue):
+    response must contain `<ans>` followed by exactly the right digits and
+    then EOS.  Partial credit 0.1 for a well-formed but wrong answer."""
+    ids = [int(i) for i in response_ids]
+    if ANS not in ids:
+        return 0.0
+    start = ids.index(ANS) + 1
+    try:
+        end = ids.index(EOS, start)
+    except ValueError:
+        return 0.0
+    text = decode_ids(ids[start:end]) if end > start else ""
+    expected = problem.answer
+    if text == expected:
+        return 1.0
+    return 0.1 if text.lstrip("-").isdigit() else 0.0
+
+
+def solution_ids(problem: Problem) -> List[int]:
+    """Gold completion (for sanity baselines / SFT warmstart)."""
+    return [ANS] + encode(problem.answer) + [EOS]

@@ -1,0 +1,7 @@
+"""Distributed runtime: sharding rules, pipeline parallelism, compression."""
+from repro.distributed.sharding import ShardingRules, safe_spec
+from repro.distributed.compression import compressed_pmean, compressed_psum
+from repro.distributed.pipeline import bubble_fraction, pipeline_apply
+
+__all__ = ["ShardingRules", "safe_spec", "compressed_psum",
+           "compressed_pmean", "pipeline_apply", "bubble_fraction"]

@@ -1,0 +1,52 @@
+"""FP8-compressed gradient synchronization (distributed-optimization trick).
+
+On-theme with the paper: the same blockwise E4M3 + fp32-scale format used
+for rollout weights halves the bytes on the wire for the DP gradient
+all-reduce.  Scheme (inside shard_map over the DP axis):
+
+    local grad chunk --quantize--> fp8 payload + scales
+    all_gather(fp8 payload, scales)        # 1 byte/elem instead of 2
+    dequantize + sum locally               # f32 accumulation
+
+This trades ICI bytes for a little VPU work — the right trade whenever the
+gradient all-reduce is ICI-bound (multi-pod DCN links especially).  The
+quantization error is bounded by the E4M3 roundoff of each *contribution*
+(not of the sum), and `compressed_psum` is an unbiased-ish drop-in for
+`lax.psum` validated against it in tests.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import E4M3
+from repro.core.quant import dequantize, quantize_activation
+
+
+def compressed_psum(x: jax.Array, axis: str) -> jax.Array:
+    """psum with fp8-compressed contributions.  Call inside shard_map."""
+    orig_shape = x.shape
+    flat = x.reshape(1, -1)
+    pad = (-flat.shape[1]) % 128
+    if pad:
+        flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    qt = quantize_activation(flat.astype(jnp.float32), fp8_dtype=E4M3)
+    payload = jax.lax.all_gather(qt.data, axis)      # (W, 1, n) fp8
+    scales = jax.lax.all_gather(qt.scales, axis)     # (W, 1, n/128) f32
+    expanded = jnp.repeat(scales, 128, axis=-1)
+    total = jnp.sum(payload.astype(jnp.float32) * expanded, axis=0)
+    total = total.reshape(-1)[: x.size].reshape(orig_shape)
+    return total.astype(x.dtype)
+
+
+def compressed_pmean(x: jax.Array, axis: str) -> jax.Array:
+    world = jax.lax.psum(jnp.ones((), jnp.float32), axis)
+    return (compressed_psum(x.astype(jnp.float32), axis) / world).astype(x.dtype)
+
+
+def comm_bytes(n_elems: int, world: int, compressed: bool) -> int:
+    """Wire bytes per device for one all-gather-based all-reduce."""
+    per_elem = 1 + 4 / 128 if compressed else 2   # fp8+scales vs bf16
+    return int(n_elems * per_elem * (world - 1))

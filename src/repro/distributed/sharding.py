@@ -1,0 +1,279 @@
+"""Sharding rules: DP / TP / EP / SP / ZeRO-3 over the production mesh.
+
+Conventions (DESIGN.md §3):
+  * DP spans the ("pod", "data") axes (pod present only in multi-pod mode).
+  * TP spans "model": Megatron column/row parallel on *fused* head and d_ff
+    dims — fused dims divide 16 for every assigned arch even when head
+    counts (24, 48) do not.
+  * EP: expert dim sharded over "model" when n_experts % tp == 0 (jamba:16),
+    else TP-in-expert (d_ff over "model": granite 512/16, grok 32768/16).
+  * ZeRO-3: params/optimizer additionally sharded over "data" on the dim not
+    taken by TP; GSPMD inserts the per-layer all-gathers inside the scan.
+  * SP: residual activations sharded over "model" along the sequence dim.
+
+Every explicit spec passes through `safe_spec`, which drops axis shardings
+that do not divide the dim (explicit NamedShardings require divisibility;
+interior tensors are left to GSPMD propagation instead).
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional, Sequence, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+Axis = Union[str, Sequence[str], None]
+
+
+def _axis_size(mesh: Mesh, axis: Axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, str):
+        return mesh.shape[axis]
+    return int(np.prod([mesh.shape[a] for a in axis]))
+
+
+def safe_spec(mesh: Mesh, shape, spec: P) -> P:
+    """Drop axis assignments that don't divide their dim."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, axis in zip(shape, entries[:len(shape)]):
+        if axis is None:
+            out.append(None)
+            continue
+        out.append(axis if dim % _axis_size(mesh, axis) == 0 else None)
+    return P(*out)
+
+
+class ShardingRules:
+    """Maps param paths / activation names to NamedShardings."""
+
+    def __init__(
+        self,
+        mesh: Mesh,
+        *,
+        tp_axis: str = "model",
+        dp_axes: Axis = None,        # default: every non-tp axis
+        zero3: bool = True,
+        sequence_parallel: bool = False,
+        vocab_parallel_ce: bool = False,   # §Perf iteration 1
+    ):
+        self.mesh = mesh
+        self.tp = tp_axis            # str or tuple of axes (full-TP decode)
+        if dp_axes is None:
+            tp_set = {tp_axis} if isinstance(tp_axis, str) else set(tp_axis)
+            dp_axes = tuple(a for a in mesh.axis_names if a not in tp_set)
+        if isinstance(dp_axes, str):
+            dp_axes = (dp_axes,)
+        # empty dp (full-TP): use None so P(...) entries stay valid
+        self.dp = tuple(dp_axes) if dp_axes else None
+        self.zero3 = zero3 and self.dp is not None
+        self.sp = sequence_parallel
+        self.vp_ce = vocab_parallel_ce
+
+    # -- helpers ---------------------------------------------------------
+    @property
+    def dpz(self) -> Axis:
+        """The data axes used for ZeRO param sharding (None if disabled)."""
+        return self.dp if self.zero3 else None
+
+    def tp_size(self) -> int:
+        return _axis_size(self.mesh, self.tp)
+
+    def named(self, shape, *spec_entries) -> NamedSharding:
+        return NamedSharding(self.mesh, safe_spec(self.mesh, shape,
+                                                  P(*spec_entries)))
+
+    # -- parameters --------------------------------------------------------
+    # order matters: first match wins
+    _RULES = (
+        # (pattern, spec builder (ndim-agnostic from the right))
+        (r"\bemb\b",               ("tp", "dpz")),        # vocab-parallel
+        (r"lm_head",               ("dpz", "tp")),        # column-parallel
+        (r"\bwq\b|\bwk\b|\bwv\b",  ("dpz", "tp")),        # column-parallel
+        (r"\bwo\b",                ("tp", "dpz")),        # row-parallel
+        (r"\bwg\b|\bwu\b",         ("dpz", "tp")),
+        (r"\bwd\b",                ("tp", "dpz")),
+        (r"\bw_in\b",              ("dpz", "tp")),
+        (r"\bw_out\b",             ("tp", "dpz")),
+        (r"\bw_patch\b",           ("dpz", "tp")),
+        (r"router",                ("dpz", None)),
+        (r"\bfc1\b",               "moe_fc1"),
+        (r"\bfc2\b",               "moe_fc2"),
+        (r"\bconv_w\b",            (None, "tp")),
+        (r"\bconv_b\b",            ("tp",)),
+        (r"gate_norm_scale",       ("tp",)),
+    )
+
+    def _resolve(self, token):
+        return {"tp": self.tp, "dpz": self.dpz, None: None}[token]
+
+    def param_spec(self, path: str, leaf) -> NamedSharding:
+        shape = leaf.shape
+        ndim = len(shape)
+        for pat, rule in self._RULES:
+            if re.search(pat, path):
+                if rule == "moe_fc1":
+                    # (.., E, D, 2F): EP over E when divisible, else TP on 2F
+                    if shape[-3] % self.tp_size() == 0:
+                        spec = [self.tp, self._resolve("dpz"), None]
+                    else:
+                        spec = [None, self._resolve("dpz"), self.tp]
+                elif rule == "moe_fc2":
+                    if shape[-3] % self.tp_size() == 0:
+                        spec = [self.tp, None, self._resolve("dpz")]
+                    else:
+                        spec = [None, self.tp, self._resolve("dpz")]
+                else:
+                    spec = [self._resolve(t) for t in rule]
+                full = [None] * max(0, ndim - len(spec)) + spec[-ndim:] \
+                    if ndim >= 1 else []
+                return self.named(shape, *full)
+        # default: replicated (norm scales, biases, dt params)
+        return self.named(shape)
+
+    def params(self, params_tree):
+        """Pytree of NamedShardings matching `params_tree` (works on concrete
+        arrays or ShapeDtypeStructs).  QuantizedTensor leaves: .data and
+        .scales both inherit the weight rule's axes — scale dims are the
+        weight dims / 128, so `safe_spec` keeps whatever still divides."""
+        return jax.tree_util.tree_map_with_path(
+            lambda path, leaf: self.param_spec(_path_str(path), leaf),
+            params_tree)
+
+    # -- activations --------------------------------------------------------
+    def activation(self, name: str, shape, meta=None) -> Optional[NamedSharding]:
+        """Logical activation shardings.  Decode shapes (T == 1) and
+        batch=1 cells fall back gracefully through safe_spec."""
+        dp, tp = self.dp, self.tp
+        tps = self.tp_size()
+        meta = meta or {}
+        if name == "act_btd":       # (B, T, D) residual stream
+            spec = P(dp, tp if self.sp else None, None)
+        elif name == "act_btf":     # (B, T, F) mlp hidden
+            spec = P(dp, None, tp)
+        elif name == "act_qkv":     # (B, S, H, Dh) attention heads
+            if shape[2] % tps == 0:
+                spec = P(dp, None, tp, None)         # head-parallel
+            elif shape[1] % tps == 0 and shape[1] > 1:
+                spec = P(dp, tp, None, None)         # seq-parallel fallback
+            else:
+                spec = P(dp, None, None, None)
+        elif name == "act_kv":      # (B, S, KVH, Dh) GQA key/value heads
+            # KV sharding must be *compatible with q's*: when kvh < tp but q
+            # is head-parallel, REPLICATE KV over tp (Megatron kv-head
+            # duplication) — a mismatched seq-shard here triggers SPMD
+            # "involuntary full rematerialization" (f32 full-activation
+            # all-gathers; observed 48 GB/layer/dev on mistral — §Perf it3).
+            n_heads = meta.get("n_heads", 0)
+            if shape[2] % tps == 0:
+                spec = P(dp, None, tp, None)
+            elif n_heads % tps == 0:
+                spec = P(dp, None, None, None)       # duplicate KV over tp
+            elif shape[1] % tps == 0 and shape[1] > 1:
+                spec = P(dp, tp, None, None)         # match seq-parallel q
+            else:
+                spec = P(dp, None, None, None)
+        elif name == "logits":      # (B, T, V) or (B, V)
+            # §Perf iteration 1 — vocab-parallel CE (Megatron-style): keep V
+            # sharded where lm_head produced it; log_softmax reductions over
+            # the sharded axis become two tiny all-reduces instead of an
+            # O(B*T*V) reshard.  Baseline: seq-parallel logits.
+            if len(shape) == 3:
+                if self.vp_ce and shape[2] % tps == 0:
+                    spec = P(dp, None, tp)
+                elif shape[1] % tps == 0 and shape[1] > 1:
+                    spec = P(dp, tp, None)
+                else:
+                    spec = P(dp, None, None)
+            else:
+                spec = P(dp, tp if self.vp_ce and shape[-1] % tps == 0
+                         else None)
+        elif name == "act_ecd":     # (E, M, D) dispatched expert tokens
+            if shape[0] % tps == 0:
+                spec = P(tp, dp, None)               # EP over experts
+            else:
+                spec = P(None, dp, None)             # TP lives in d_ff instead
+        elif name == "kv_gather":   # (B, S, KVH, D) decode-path KV payload
+            # batch-sharded, replicated over tp: the resharding collective
+            # then moves fp8 bytes, and dequantization happens locally
+            spec = P(dp, None, None, None)
+        elif name == "act_gnd":     # (G, N, D) MoE per-group tokens/gathers
+            spec = P(dp, None, None)
+        elif name == "act_gnkd":    # (G, N, K, D) MoE combine gather
+            spec = P(dp, None, None, None)
+        elif name == "tokens":      # (B, T)
+            spec = P(dp, None)
+        elif name == "batch":       # (B, ...)
+            spec = P(dp)
+        else:
+            return None
+        return NamedSharding(self.mesh, safe_spec(self.mesh, shape, spec))
+
+    def batch_spec(self, tree):
+        """Shard the leading (batch) dim of every leaf."""
+        return jax.tree.map(
+            lambda leaf: self.named(leaf.shape, self.dp), tree)
+
+    # -- rollout caches ----------------------------------------------------
+    def cache_spec(self, cache_tree):
+        """Shardings for a rollout cache pytree (launch/steps.cache_specs).
+
+        KV payloads (R, B, S, KVH, D): batch over dp; the model axis takes
+        KVH when it divides, else D (head-dim sharding — GSPMD inserts the
+        small per-step all-reduce), else nothing.  When B doesn't divide dp
+        (long_500k: B=1) the sequence dim takes dp so a 500k cache is not
+        replicated.  SSM state (R, B, H, P, N): heads over tp, batch dp.
+        """
+        tp, dp = self.tp, self.dp
+
+        def spec(path, leaf):
+            p = _path_str(path)
+            shape = leaf.shape
+            if "lengths" in p:
+                return self.named(shape)
+            if ("/k" in p or "/v" in p or p.endswith("k") or p.endswith("v")) \
+                    and len(shape) == 5:
+                r, b, s, kvh, d = shape
+                dp_size = _axis_size(self.mesh, dp)
+                batch_ok = b % dp_size == 0
+                model_dim = 3 if kvh % self.tp_size() == 0 else \
+                    (4 if d % self.tp_size() == 0 else None)
+                entries = [None] * 5
+                if batch_ok:
+                    entries[1] = dp
+                else:
+                    entries[2] = dp          # shard S instead (B=1 decode)
+                if model_dim is not None:
+                    entries[model_dim] = tp
+                return self.named(shape, *entries)
+            if "scale" in p:
+                return self.named(shape)
+            if "/h" in p and len(shape) == 5:      # SSM state (R,B,H,P,N)
+                return self.named(shape, None, dp, tp, None, None)
+            if "conv" in p and len(shape) == 4:    # (R,B,W-1,C)
+                return self.named(shape, None, dp, None, tp)
+            return self.named(shape)
+
+        return jax.tree_util.tree_map_with_path(spec, cache_tree)
+
+    def replicated(self, tree=None):
+        sh = NamedSharding(self.mesh, P())
+        if tree is None:
+            return sh
+        return jax.tree.map(lambda _: sh, tree)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)

@@ -1,0 +1,21 @@
+"""Pallas TPU kernels for the FP8-RL hot spots (DESIGN.md §2).
+
+fp8_gemm          — blockwise-scaled FP8 GEMM (DeepGEMM analogue)
+fp8_quant         — fused blockwise quantization (weight-sync / activations)
+fp8_kv_attention  — FlashDecoding over an fp8 KV cache
+
+`ops` is the public API (backend dispatch + padding); `ref` holds the
+pure-jnp oracles the kernels are validated against.
+"""
+from repro.kernels import ops, ref
+from repro.kernels.ops import (
+    fp8_decode_attention,
+    fp8_matmul,
+    quantize_activation,
+    quantize_weight,
+)
+
+__all__ = [
+    "ops", "ref", "fp8_decode_attention", "fp8_matmul",
+    "quantize_activation", "quantize_weight",
+]

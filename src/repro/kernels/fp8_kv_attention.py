@@ -1,0 +1,141 @@
+"""Pallas TPU kernel: decode attention over an FP8 KV cache.
+
+Paper §2.3: fp8 KV storage with per-step recalibrated scales removes the
+long-context memory bottleneck.  On TPU the decode step is purely
+HBM-bandwidth bound — each generated token must stream the whole KV cache
+through VMEM — so storing KV as fp8 halves the dominant traffic term.
+
+This is a FlashDecoding-style kernel specialized to the RL rollout decode
+shape (one new query token per sequence):
+
+  q        (B, KVH, G, D)  bf16   G = query heads per KV head (GQA)
+  k_cache  (B, S, KVH, D)  fp8    + k_scale (per-layer scalar, recalibrated
+  v_cache  (B, S, KVH, D)  fp8      every RL step; paper fig 7)
+  lengths  (B, 1) int32            current sequence lengths (mask limit)
+  out      (B, KVH, G, D)  bf16
+
+Grid (B, KVH, S/BS); the S axis is innermost so the online-softmax state
+(m, l, acc) for one (batch, kv-head) stays in VMEM scratch across S blocks.
+
+VMEM at BS=512, D=128, G=8: k/v tiles 512*128*1B = 64KiB each, acc 8*128*4B,
+q 8*128*2B — far below budget; larger BS amortizes grid overhead and is the
+hillclimb knob (§Perf).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BS = 512
+_NEG_INF = -1e30
+
+
+def _decode_attn_kernel(
+    q_ref,        # (1, 1, G, D)
+    k_ref,        # (1, BS, 1, D) fp8
+    v_ref,        # (1, BS, 1, D) fp8
+    ks_ref,       # (1, 1) f32
+    vs_ref,       # (1, 1) f32
+    len_ref,      # (1, 1) int32
+    o_ref,        # (1, 1, G, D)
+    m_ref,        # scratch (G, 1) f32
+    l_ref,        # scratch (G, 1) f32
+    acc_ref,      # scratch (G, D) f32
+    *,
+    bs: int,
+    n_s: int,
+    sm_scale: float,
+):
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                     # (G, D)
+    # Dequantize the fp8 KV tile in VMEM (bandwidth already saved in HBM).
+    k = k_ref[0, :, 0, :].astype(jnp.float32) * ks_ref[0, 0]  # (BS, D)
+    v = v_ref[0, :, 0, :].astype(jnp.float32) * vs_ref[0, 0]  # (BS, D)
+
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * sm_scale                                             # (G, BS)
+
+    # mask positions >= current length
+    pos = s * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    valid = pos < len_ref[0, 0]
+    scores = jnp.where(valid, scores, _NEG_INF)
+
+    # online softmax update
+    m_prev = m_ref[...]                                      # (G, 1)
+    m_cur = jnp.max(scores, axis=1, keepdims=True)           # (G, 1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new)                              # (G, BS)
+    p = jnp.where(valid, p, 0.0)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(s == n_s - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(
+            o_ref.dtype
+        )
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "sm_scale", "interpret"))
+def fp8_decode_attention(
+    q: jax.Array,         # (B, KVH, G, D) bf16
+    k_cache: jax.Array,   # (B, S, KVH, D) fp8 (or bf16 — dequant is a no-op)
+    v_cache: jax.Array,   # (B, S, KVH, D) fp8
+    k_scale: jax.Array,   # () or (1,) f32
+    v_scale: jax.Array,   # () or (1,) f32
+    lengths: jax.Array,   # (B,) int32
+    *,
+    bs: int = DEFAULT_BS,
+    sm_scale: float | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    b, kvh, g, d = q.shape
+    b2, s_len, kvh2, d2 = k_cache.shape
+    assert (b, kvh, d) == (b2, kvh2, d2), (q.shape, k_cache.shape)
+    bs = min(bs, s_len)
+    assert s_len % bs == 0, (s_len, bs)
+    n_s = s_len // bs
+    if sm_scale is None:
+        sm_scale = 1.0 / (d ** 0.5)
+
+    kernel = functools.partial(_decode_attn_kernel, bs=bs, n_s=n_s, sm_scale=sm_scale)
+    ks = jnp.asarray(k_scale, jnp.float32).reshape(1, 1)
+    vs = jnp.asarray(v_scale, jnp.float32).reshape(1, 1)
+    lengths2 = lengths.astype(jnp.int32).reshape(b, 1)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(b, kvh, n_s),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda i, h, s: (i, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, d), lambda i, h, s: (i, s, h, 0)),
+            pl.BlockSpec((1, bs, 1, d), lambda i, h, s: (i, s, h, 0)),
+            pl.BlockSpec((1, 1), lambda i, h, s: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, h, s: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, h, s: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda i, h, s: (i, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k_cache, v_cache, ks, vs, lengths2)

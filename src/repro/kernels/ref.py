@@ -1,0 +1,84 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are validated against (interpret=True
+on CPU, shape/dtype sweeps in tests/).  They are deliberately written in the
+most obvious way possible — no tiling, no online softmax.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import E4M3, FP8_MAX, ScaleFormat
+
+_EPS = 1e-12
+
+
+def fp8_gemm_ref(a, w, a_scales, w_scales, out_dtype=jnp.bfloat16):
+    """Blockwise-scaled FP8 GEMM oracle.
+
+    a (M,K) fp8, w (K,N) fp8, a_scales (M,K/128), w_scales (K/128,N/128).
+    Computes sum_kb (a_kb @ w_kb) * a_s[:, kb, None] * w_s[kb, None-per-128].
+    """
+    m, k = a.shape
+    _, n = w.shape
+    nkb = k // 128
+    af = a.astype(jnp.float32).reshape(m, nkb, 128)
+    wf = w.astype(jnp.float32).reshape(nkb, 128, n)
+    # expand w scales to (nkb, n)
+    ws_full = jnp.repeat(w_scales, 128, axis=1)[:, :n]            # (nkb, n)
+    # per k-block partial products, scaled
+    partial = jnp.einsum("mbk,bkn->bmn", af, wf)                  # (nkb, m, n)
+    partial = partial * a_scales.T[:, :, None] * ws_full[:, None, :]
+    return jnp.sum(partial, axis=0).astype(out_dtype)
+
+
+def quantize_activation_ref(x, fp8_dtype=E4M3,
+                            scale_format: ScaleFormat = ScaleFormat.FP32):
+    """1x128 row-tile quantization oracle: returns (q, scales)."""
+    m, k = x.shape
+    nkb = k // 128
+    xf = x.astype(jnp.float32).reshape(m, nkb, 128)
+    amax = jnp.max(jnp.abs(xf), axis=2)                           # (m, nkb)
+    scale = jnp.maximum(amax, _EPS) / FP8_MAX[fp8_dtype]
+    if scale_format == ScaleFormat.UE8M0:
+        scale = jnp.exp2(jnp.ceil(jnp.log2(scale)))
+    q = jnp.clip(xf / scale[:, :, None], -FP8_MAX[fp8_dtype], FP8_MAX[fp8_dtype])
+    return q.astype(fp8_dtype).reshape(m, k), scale
+
+
+def quantize_weight_ref(w, fp8_dtype=E4M3,
+                        scale_format: ScaleFormat = ScaleFormat.FP32):
+    """128x128 block quantization oracle: returns (q, scales)."""
+    k, n = w.shape
+    kb, nb = k // 128, n // 128
+    wf = w.astype(jnp.float32).reshape(kb, 128, nb, 128)
+    amax = jnp.max(jnp.abs(wf), axis=(1, 3))                      # (kb, nb)
+    scale = jnp.maximum(amax, _EPS) / FP8_MAX[fp8_dtype]
+    if scale_format == ScaleFormat.UE8M0:
+        scale = jnp.exp2(jnp.ceil(jnp.log2(scale)))
+    q = jnp.clip(
+        wf / scale[:, None, :, None], -FP8_MAX[fp8_dtype], FP8_MAX[fp8_dtype]
+    )
+    return q.astype(fp8_dtype).reshape(k, n), scale
+
+
+def fp8_decode_attention_ref(q, k_cache, v_cache, k_scale, v_scale, lengths,
+                             sm_scale=None):
+    """Decode attention oracle.
+
+    q (B,KVH,G,D); k/v (B,S,KVH,D) fp8-or-bf16; lengths (B,).
+    """
+    b, kvh, g, d = q.shape
+    s = k_cache.shape[1]
+    if sm_scale is None:
+        sm_scale = 1.0 / (d ** 0.5)
+    kf = k_cache.astype(jnp.float32) * jnp.asarray(k_scale, jnp.float32)
+    vf = v_cache.astype(jnp.float32) * jnp.asarray(v_scale, jnp.float32)
+    qf = q.astype(jnp.float32)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qf, kf) * sm_scale
+    mask = jnp.arange(s)[None, :] < lengths[:, None]              # (B, S)
+    scores = jnp.where(mask[:, None, None, :], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, vf)
+    return out.astype(q.dtype)

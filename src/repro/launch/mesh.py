@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+Kept as FUNCTIONS so importing this module never touches jax device state
+(device count is locked at first jax init — dryrun.py sets XLA_FLAGS before
+any import for exactly this reason).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _auto(n):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 multi-pod (512 chips).
+
+    DP spans ("pod", "data"); TP spans "model" (DESIGN.md §3).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, _auto(len(axes)))
+
+
+def make_test_mesh(dp: int = 2, tp: int = 4):
+    """Small mesh for in-test multi-device programs."""
+    return jax.make_mesh((dp, tp), ("data", "model"), _auto(2))

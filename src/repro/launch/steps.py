@@ -1,0 +1,150 @@
+"""Step builders + input specs for training / prefill / decode.
+
+These are the functions the dry-run lowers for every (arch x shape x mesh)
+cell and the launcher jits for real runs:
+
+  train_step(params, opt_state, batch)  -> (params, opt_state, loss)
+  prefill_step(params, batch)           -> (last_logits, cache)
+  serve_step(params, tokens, cache)     -> (logits, cache)
+
+`input_specs` produces ShapeDtypeStruct stand-ins for every model input of
+a shape cell (weak-type-correct, shardable, no allocation); `state_specs`
+does the same for params / optimizer / cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core.fp8_params import quantize_params
+from repro.core.precision import BF16_ROLLOUT, PrecisionConfig
+from repro.models import forward_train, init_cache, init_params, prefill, decode_step
+from repro.optim import AdamWConfig
+from repro.optim import init as opt_init
+from repro.optim import update as opt_update
+
+BF16 = jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins — never allocates)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    """Model inputs for one cell.  [audio]/[vlm] frontends are stubs: we
+    provide precomputed frame/patch embeddings (assignment spec)."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+
+    if shape.kind == "train":
+        specs = {}
+        if cfg.frontend == "vision_patches":
+            p = min(cfg.frontend_len, s // 2)
+            specs["patches"] = jax.ShapeDtypeStruct((b, p, cfg.d_model), BF16)
+            specs["tokens"] = jax.ShapeDtypeStruct((b, s - p), i32)
+        elif cfg.is_encdec:
+            specs["frames"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), BF16)
+            specs["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+            specs["src_lengths"] = jax.ShapeDtypeStruct((b,), i32)
+        else:
+            specs["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+        return specs
+
+    if shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), i32),
+                 "lengths": jax.ShapeDtypeStruct((b,), i32)}
+        if cfg.frontend == "vision_patches":
+            p = min(cfg.frontend_len, s // 2)
+            specs["patches"] = jax.ShapeDtypeStruct((b, p, cfg.d_model), BF16)
+            specs["tokens"] = jax.ShapeDtypeStruct((b, s - p), i32)
+        elif cfg.is_encdec:
+            specs["frames"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), BF16)
+            specs["src_lengths"] = jax.ShapeDtypeStruct((b,), i32)
+        return specs
+
+    # decode: one new token against a cache of seq_len
+    return {"tokens": jax.ShapeDtypeStruct((b,), i32)}
+
+
+def cache_specs(cfg: ArchConfig, shape: ShapeConfig,
+                precision: PrecisionConfig) -> dict:
+    """Rollout-cache ShapeDtypeStructs for decode cells (S_max = seq_len)."""
+    b, s = shape.global_batch, shape.seq_len
+    src = s if cfg.is_encdec else 0
+    return jax.eval_shape(
+        lambda: init_cache(cfg, b, s, precision, src_len=src))
+
+
+def param_specs(cfg: ArchConfig, precision: Optional[PrecisionConfig] = None):
+    """Param ShapeDtypeStructs (quantized rollout tree when precision given)."""
+    specs = jax.eval_shape(
+        functools.partial(init_params, cfg), jax.random.key(0))
+    if precision is not None and precision.any_fp8_rollout:
+        specs = jax.eval_shape(
+            functools.partial(quantize_params, precision=precision), specs)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# steps
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ArchConfig, precision: Optional[PrecisionConfig] = None,
+                    opt_cfg: Optional[AdamWConfig] = None,
+                    moe_aux_coef: float = 1e-2):
+    """Learner-side LM training step (forward + backward + AdamW)."""
+    if opt_cfg is None:
+        opt_cfg = AdamWConfig()
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            logits, aux = forward_train(p, batch, cfg, precision)
+            tokens = batch["tokens"]
+            prefix = aux.get("prefix_len", 0)
+            logits = logits[:, prefix:]
+            lp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), -1)
+            ce = -jnp.mean(jnp.take_along_axis(lp, tokens[:, 1:, None], -1))
+            if aux.get("moe"):
+                ce = ce + moe_aux_coef * sum(
+                    v["aux_loss"].mean() for v in aux["moe"].values())
+            return ce
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt_state, _ = opt_update(params, grads, opt_state, opt_cfg)
+        return params, opt_state, loss
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, shape: ShapeConfig,
+                      precision: PrecisionConfig):
+    """Prompt processing: fills the cache, returns ONLY the last-position
+    logits (avoids the 32k x vocab logit blowup)."""
+    b, s = shape.global_batch, shape.seq_len
+    src = s if cfg.is_encdec else 0
+
+    def prefill_step(params, batch):
+        cache = init_cache(cfg, b, s + 1, precision, src_len=src)
+        logits, cache = prefill(params, batch, cache, cfg, precision)
+        return logits, cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig, precision: PrecisionConfig):
+    """One decode token against an existing cache."""
+
+    def serve_step(params, tokens, cache):
+        logits, cache, _ = decode_step(params, tokens, cache, cfg, precision)
+        return logits, cache
+
+    return serve_step
+
+
+def make_opt_specs(cfg: ArchConfig, opt_cfg: AdamWConfig):
+    p_specs = param_specs(cfg)
+    return jax.eval_shape(functools.partial(opt_init, config=opt_cfg), p_specs)

@@ -1,0 +1,107 @@
+"""RL training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train \
+        --arch qwen3-8b --reduced --steps 50 --precision fp8 --tis
+
+On this CPU container you always want --reduced (full configs are exercised
+through the dry-run).  On a real pod the same entry point jits the trainer
+under the production mesh.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.configs import get_config
+from repro.core.precision import (
+    BF16_ROLLOUT,
+    E2E_FP8,
+    FP8_KV_ONLY_ROLLOUT,
+    FP8_LINEAR_ROLLOUT,
+    FULL_FP8_ROLLOUT,
+    RolloutCorrection,
+)
+from repro.data import tasks
+from repro.optim import AdamWConfig
+from repro.rl import RLConfig, RLTrainer
+
+PRECISIONS = {
+    "bf16": BF16_ROLLOUT,
+    "fp8": FULL_FP8_ROLLOUT,
+    "fp8-linear": FP8_LINEAR_ROLLOUT,
+    "fp8-kv": FP8_KV_ONLY_ROLLOUT,
+    "e2e-fp8": E2E_FP8,
+}
+
+
+def build_trainer(args) -> RLTrainer:
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced(vocab_size=tasks.VOCAB_SIZE,
+                          n_layers=args.layers, d_model=args.d_model)
+    precision = PRECISIONS[args.precision]
+    correction = RolloutCorrection.TIS if args.tis else (
+        RolloutCorrection.MIS if args.mis else RolloutCorrection.NONE)
+    precision = precision.replace(correction=correction,
+                                  rollout_router_replay=args.rrr)
+    rl = RLConfig(
+        precision=precision,
+        prompt_batch=args.prompt_batch,
+        n_per_prompt=args.n_per_prompt,
+        max_new_tokens=args.max_new_tokens,
+        optimizer=AdamWConfig(lr=args.lr, b2=0.98, grad_clip=1.0),
+        calibration=args.calibration,
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every,
+        seed=args.seed,
+    )
+    return RLTrainer(cfg, rl)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-8b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--precision", choices=sorted(PRECISIONS), default="fp8")
+    ap.add_argument("--tis", action="store_true", default=True)
+    ap.add_argument("--no-tis", dest="tis", action="store_false")
+    ap.add_argument("--mis", action="store_true")
+    ap.add_argument("--rrr", action="store_true")
+    ap.add_argument("--calibration", choices=("inference", "trainer"),
+                    default="inference")
+    ap.add_argument("--prompt-batch", type=int, default=8)
+    ap.add_argument("--n-per-prompt", type=int, default=8)
+    ap.add_argument("--max-new-tokens", type=int, default=10)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--eval-every", type=int, default=25)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--metrics-out", default=None)
+    args = ap.parse_args(argv)
+
+    trainer = build_trainer(args)
+    if args.resume and trainer.restore_checkpoint():
+        print(f"resumed from step {trainer.step_idx}")
+
+    history = []
+    for _ in range(args.steps):
+        m = trainer.train_step()
+        history.append(m)
+        if m["step"] % args.eval_every == 0 or m["step"] == 1:
+            m["eval_accuracy"] = trainer.evaluate(n_problems=32)
+        print(json.dumps({k: round(v, 5) if isinstance(v, float) else v
+                          for k, v in m.items()}), flush=True)
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            json.dump(history, f)
+    return history
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""Composable model zoo: dense / MoE / SSM / hybrid / enc-dec / VLM."""
+from repro.models import attention, blocks, common, mlp, moe, ssm, transformer
+from repro.models.transformer import (
+    decode_step,
+    forward_train,
+    init_cache,
+    init_params,
+    prefill,
+    token_logprobs,
+)
+
+__all__ = [
+    "attention", "blocks", "common", "mlp", "moe", "ssm", "transformer",
+    "init_params", "forward_train", "token_logprobs", "init_cache",
+    "prefill", "decode_step",
+]

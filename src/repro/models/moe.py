@@ -1,0 +1,159 @@
+"""Mixture-of-Experts layer with precision-controlled routing (paper §2.2.4).
+
+Router precision is the paper's MoE-specific knob: FP8 routing gives the
+highest train-inference mismatch, BF16 is sufficient, FP32 adds little
+(fig 6).  The router weight's dtype is set at weight-sync time
+(`core.fp8_params._router_cast`); this module computes logits in that dtype.
+
+Rollout Router Replay (RRR / R3): `moe_forward` returns the chosen expert
+indices in its aux dict; the trainer can pass them back as
+`forced_topk_idx`, forcing the training pass to use the rollout's expert
+selection (gate *values* are recomputed from the training-side router).
+
+Dispatch is sort/gather-based (MegaBlocks-style, not one-hot einsum):
+tokens are grouped (group = batch row for sequences, one group for decode),
+each group argsorts its (token, k) units by expert and gathers the first
+`capacity` units per expert.  Memory is O(N*K*D + E*C*D) and every shape is
+static, so the layer jits, scans, and shards (EP over the expert axis or
+TP over d_ff — distributed/sharding.py).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fp8_linear import linear
+from repro.core.precision import PrecisionConfig
+from repro.core.quant import QuantizedTensor, dequantize
+from repro.models.common import constrain, dense_init
+
+_ACT = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}
+
+
+def init_moe_params(keygen, cfg, dtype=jnp.bfloat16) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "router": dense_init(keygen(), (d, e), d, jnp.bfloat16),
+        "fc1": dense_init(keygen(), (e, d, 2 * f), d, dtype),   # fused gate|up
+        "fc2": dense_init(keygen(), (e, f, d), f, dtype),
+        "norm_scale": jnp.ones((d,), dtype),
+    }
+
+
+def group_capacity(tokens_per_group: int, cfg) -> int:
+    c = int(tokens_per_group * cfg.top_k / cfg.n_experts * cfg.capacity_factor)
+    # round up to a lane-friendly multiple where it matters
+    c = max(c, cfg.top_k)
+    return -(-c // 8) * 8 if c >= 8 else c
+
+
+def router_logits(x: jax.Array, router_w) -> jax.Array:
+    """Logits in the router weight's precision (paper fig 6 ablation)."""
+    if isinstance(router_w, QuantizedTensor):  # FP8 router (ablation)
+        w = dequantize(router_w, jnp.bfloat16)
+        return (x.astype(jnp.bfloat16) @ w).astype(jnp.float32)
+    compute_dtype = router_w.dtype  # bf16 (default) or fp32
+    return (x.astype(compute_dtype) @ router_w).astype(jnp.float32)
+
+
+def _dispatch_one_group(x_g, topk_idx_g, cap: int, n_experts: int):
+    """x_g (n, D); topk_idx_g (n, K) -> gather indices.
+
+    Returns:
+      token_for_slot (E*C,)   index into [0, n] (n = padding row)
+      flat_for_unit  (n*K,)   index into [0, E*C] (E*C = dropped sentinel)
+      keep           (n*K,)   bool
+    """
+    n, k_top = topk_idx_g.shape
+    u = n * k_top
+    unit_expert = topk_idx_g.reshape(-1)                       # (U,)
+    order = jnp.argsort(unit_expert, stable=True)
+    counts = jnp.zeros((n_experts,), jnp.int32).at[unit_expert].add(1)
+    starts = jnp.cumsum(counts) - counts
+    slot_sorted = jnp.arange(u, dtype=jnp.int32) - starts[unit_expert[order]]
+    slot = jnp.zeros((u,), jnp.int32).at[order].set(slot_sorted)
+    keep = slot < cap
+    flat = jnp.where(keep, unit_expert * cap + slot, n_experts * cap)
+    token_for_slot = jnp.full((n_experts * cap + 1,), n, jnp.int32)
+    token_for_slot = token_for_slot.at[flat].set(
+        jnp.arange(u, dtype=jnp.int32) // k_top)
+    return token_for_slot[:-1], flat, keep
+
+
+def moe_forward(
+    x: jax.Array,                     # (B, T, D)
+    params: dict,
+    cfg,
+    precision: Optional[PrecisionConfig] = None,
+    *,
+    forced_topk_idx: Optional[jax.Array] = None,   # (B, T, K) RRR replay
+) -> Tuple[jax.Array, dict]:
+    b, t, d = x.shape
+    e, k_top = cfg.n_experts, cfg.top_k
+    # groups: one per batch row for sequences; a single group for decode
+    g = b if t > 1 else 1
+    n_g = (b * t) // g
+    cap = group_capacity(n_g, cfg)
+    xg = constrain(x.reshape(g, n_g, d), "act_gnd")
+
+    logits = router_logits(xg.reshape(-1, d), params["router"])   # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    if forced_topk_idx is not None:
+        topk_idx = forced_topk_idx.reshape(-1, k_top)
+        topk_p = jnp.take_along_axis(probs, topk_idx, axis=-1)
+    else:
+        topk_p, topk_idx = jax.lax.top_k(probs, k_top)            # (N, K)
+    gates = topk_p / jnp.maximum(topk_p.sum(-1, keepdims=True), 1e-9)
+
+    token_for_slot, flat_for_unit, keep = jax.vmap(
+        lambda xi, ti: _dispatch_one_group(xi, ti, cap, e)
+    )(xg, topk_idx.reshape(g, n_g, k_top))
+    # token_for_slot (G, E*C); flat_for_unit (G, n_g*K); keep (G, n_g*K)
+
+    x_pad = jnp.concatenate([xg, jnp.zeros((g, 1, d), xg.dtype)], axis=1)
+    expert_in = jnp.take_along_axis(
+        x_pad, token_for_slot[..., None], axis=1)                 # (G, E*C, D)
+    expert_in = constrain(expert_in, "act_gnd")
+    expert_in = expert_in.reshape(g, e, cap, d).transpose(1, 0, 2, 3)
+    expert_in = expert_in.reshape(e, g * cap, d)
+    expert_in = constrain(expert_in, "act_ecd")
+
+    h = _expert_ffn(expert_in, params, cfg, precision)            # (E, G*C, D)
+    h = constrain(h, "act_ecd")
+
+    h = h.reshape(e, g, cap, d).transpose(1, 0, 2, 3).reshape(g, e * cap, d)
+    h = constrain(h, "act_gnd")
+    h_pad = jnp.concatenate([h, jnp.zeros((g, 1, d), h.dtype)], axis=1)
+    h_unit = jnp.take_along_axis(h_pad, flat_for_unit[..., None], axis=1)
+    h_unit = constrain(h_unit.reshape(g, n_g, k_top, d), "act_gnkd")
+    w_unit = (gates * keep.reshape(-1, k_top)).reshape(g, n_g, k_top, 1)
+    out = jnp.sum(h_unit.astype(jnp.float32) * w_unit, axis=2)    # (G, n_g, D)
+
+    dropped = 1.0 - keep.sum() / (b * t * k_top)
+    load = jnp.zeros((e,), jnp.float32).at[topk_idx.reshape(-1)].add(1.0)
+    load = load / jnp.maximum(load.sum(), 1.0)
+    importance = probs.mean(axis=0)
+    aux = {
+        "topk_idx": topk_idx.reshape(b, t, k_top),
+        "router_entropy": -jnp.mean(jnp.sum(probs * jnp.log(probs + 1e-9), -1)),
+        "dropped_frac": dropped,
+        "aux_loss": e * jnp.sum(load * importance),
+        "router_logits_amax": jnp.abs(logits).max(),
+    }
+    return out.reshape(b, t, d).astype(x.dtype), aux
+
+
+def _expert_ffn(expert_in: jax.Array, params: dict, cfg,
+                precision: Optional[PrecisionConfig]) -> jax.Array:
+    """Per-expert SwiGLU with fused fc1 = [gate|up] (paper's fc1/fc2 naming).
+    expert_in: (E, M, D) -> (E, M, D)."""
+    act = _ACT[cfg.act]
+
+    def one_expert(xe, w1, w2):
+        gu = linear(xe, w1, precision=precision)              # (M, 2F)
+        gate, up = jnp.split(gu, 2, axis=-1)
+        return linear(act(gate) * up, w2, precision=precision)
+
+    return jax.vmap(one_expert)(expert_in, params["fc1"], params["fc2"])

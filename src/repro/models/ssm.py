@@ -1,0 +1,230 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+Chunked SSD for training/prefill (matmul-friendly: intra-chunk quadratic
+term + inter-chunk state recurrence via scan) and an O(1) recurrent decode
+step.  Heads share one B/C group (ngroups=1), scalar decay per head.
+
+FP8-RL applicability (DESIGN.md §6): the in/out projections are W8A8
+quantized like any linear; the recurrent state h and conv buffer stay in
+bf16/f32 — quantizing state that feeds back through the recurrence every
+step compounds error and is NOT the paper's KV-cache technique (KV entries
+are written once and only read).  There is no KV cache in this block.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fp8_linear import linear
+from repro.core.precision import PrecisionConfig
+from repro.models.common import dense_init, rms_norm
+
+CHUNK = 64
+
+
+class SSMState(NamedTuple):
+    """Recurrent decode state for one SSM layer (stacked over layers under scan)."""
+
+    h: jax.Array       # (B, H, P, N) f32 — SSD state
+    conv: jax.Array    # (B, W-1, conv_ch) — causal-conv tail buffer
+
+
+def conv_channels(cfg) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_state
+
+
+def init_ssm_params(keygen, cfg, dtype=jnp.bfloat16) -> dict:
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    w = cfg.ssm_conv
+    cc = conv_channels(cfg)
+    return {
+        "w_in": dense_init(keygen(), (d, 2 * di + 2 * n + h), d, dtype),
+        "conv_w": dense_init(keygen(), (w, cc), w, dtype),
+        "conv_b": jnp.zeros((cc,), dtype),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "gate_norm_scale": jnp.ones((di,), dtype),
+        "w_out": dense_init(keygen(), (di, d), di, dtype),
+        "norm_scale": jnp.ones((d,), dtype),
+    }
+
+
+def init_ssm_state(batch: int, cfg, dtype=jnp.bfloat16) -> SSMState:
+    return SSMState(
+        h=jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                    jnp.float32),
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, conv_channels(cfg)), dtype),
+    )
+
+
+def _split_in_proj(proj: jax.Array, cfg):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z, xbc, dt = jnp.split(proj, [di, 2 * di + 2 * n], axis=-1)
+    return z, xbc, dt  # gate (.., di); conv input (.., di+2n); dt (.., h)
+
+
+def _causal_conv(xbc: jax.Array, conv_w, conv_b, tail: Optional[jax.Array]):
+    """Depthwise causal conv over time.  xbc (B,T,C); tail (B,W-1,C) or None
+    (zeros).  Returns (out (B,T,C), new_tail (B,W-1,C))."""
+    w = conv_w.shape[0]
+    b, t, c = xbc.shape
+    if tail is None:
+        tail = jnp.zeros((b, w - 1, c), xbc.dtype)
+    full = jnp.concatenate([tail, xbc], axis=1)               # (B, T+W-1, C)
+    # depthwise conv as a sum of shifted slices (W is tiny: 4)
+    out = jnp.zeros((b, t, c), jnp.float32)
+    for i in range(w):
+        out = out + full[:, i:i + t].astype(jnp.float32) * \
+            conv_w[i].astype(jnp.float32)
+    out = out + conv_b.astype(jnp.float32)
+    return jax.nn.silu(out).astype(xbc.dtype), full[:, t:]
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a (..., Q) -> (..., Q, Q): sum_{r=s+1..t} a_r on the lower triangle."""
+    q = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]              # t, s
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_scan(xh, dt, a_head, bmat, cmat, chunk: int = CHUNK,
+             h0: Optional[jax.Array] = None):
+    """Chunked SSD.
+
+    xh (B,T,H,P); dt (B,T,H) f32 (post-softplus); a_head (H,) f32 (negative);
+    bmat/cmat (B,T,N).  Returns y (B,T,H,P), final state (B,H,P,N) f32.
+    """
+    b, t, h, p = xh.shape
+    n = bmat.shape[-1]
+    q = min(chunk, t)
+    assert t % q == 0, (t, q)
+    nc = t // q
+    # compute dtype for the quadratic intra-chunk tensors: these are the
+    # memory giants ((B,nc,H,Q,Q)); keep them in the model dtype and let the
+    # MXU accumulate in f32.  The recurrent state math stays f32.
+    cd = xh.dtype
+
+    xc = xh.reshape(b, nc, q, h, p).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, q, h)
+    bc = bmat.reshape(b, nc, q, n).astype(jnp.float32)
+    cc = cmat.reshape(b, nc, q, n).astype(jnp.float32)
+    a = dtc * a_head                                          # (B,nc,Q,H) log-decay
+    a_t = a.transpose(0, 1, 3, 2)                             # (B,nc,H,Q)
+
+    # intra-chunk (quadratic within chunk)
+    l_full = jnp.exp(_segsum(a_t))                            # (B,nc,H,Q,Q)
+    scores = jnp.einsum("bcqn,bckn->bcqk", cc, bc)            # (B,nc,Q,Q)
+    m = scores[:, :, None] * l_full * dtc.transpose(0, 1, 3, 2)[:, :, :, None, :]
+    y_intra = jnp.einsum("bchqk,bckhp->bcqhp", m.astype(cd), xc.astype(cd),
+                         preferred_element_type=jnp.float32)
+
+    # chunk summaries
+    a_sum = a_t.sum(axis=-1)                                  # (B,nc,H)
+    decay_to_end = jnp.exp(a_sum[..., None] - jnp.cumsum(a_t, axis=-1))
+    s_chunk = jnp.einsum("bckn,bchk,bckh,bckhp->bchpn",
+                         bc, decay_to_end, dtc, xc)           # (B,nc,H,P,N)
+
+    # inter-chunk recurrence
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def step(hprev, inp):
+        s_c, a_s = inp                                        # (B,H,P,N), (B,H)
+        hnew = hprev * jnp.exp(a_s)[:, :, None, None] + s_c
+        return hnew, hprev                                    # emit state *entering* chunk
+
+    h_last, h_in = jax.lax.scan(
+        step, h0, (s_chunk.transpose(1, 0, 2, 3, 4), a_sum.transpose(1, 0, 2)))
+    h_in = h_in.transpose(1, 0, 2, 3, 4)                      # (B,nc,H,P,N)
+
+    decay_from_start = jnp.exp(jnp.cumsum(a_t, axis=-1))      # (B,nc,H,Q)
+    y_inter = jnp.einsum("bcqn,bchq,bchpn->bcqhp", cc, decay_from_start, h_in)
+
+    y = (y_intra + y_inter).reshape(b, t, h, p)
+    return y, h_last
+
+
+def ssm_forward(
+    x: jax.Array,                     # (B, T, D)
+    params: dict,
+    cfg,
+    precision: Optional[PrecisionConfig] = None,
+    state: Optional[SSMState] = None,
+    return_state: bool = False,
+) -> Tuple[jax.Array, Optional[SSMState]]:
+    """Full-sequence SSD pass (training / prefill when return_state)."""
+    b, t, d = x.shape
+    di, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+
+    proj = linear(x, params["w_in"], precision=precision)
+    z, xbc, dt_raw = _split_in_proj(proj, cfg)
+    tail = state.conv if state is not None else None
+    xbc, new_tail = _causal_conv(xbc, params["conv_w"], params["conv_b"], tail)
+    xs, bmat, cmat = jnp.split(xbc, [di, di + n], axis=-1)
+    xh = xs.reshape(b, t, h, p)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    a_head = -jnp.exp(params["a_log"])
+
+    # pad T to a chunk multiple (prefill lengths are arbitrary)
+    q = min(CHUNK, max(t, 1))
+    pad = (-t) % q
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    h0 = state.h if state is not None else None
+    y, h_last = ssd_scan(xh, dt, a_head, bmat, cmat, chunk=q, h0=h0)
+    y = y[:, :t]
+
+    y = y + xh[:, :t] * params["D"][None, None, :, None]
+    y = y.reshape(b, t, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 params["gate_norm_scale"], cfg.norm_eps)
+    out = linear(y, params["w_out"], precision=precision)
+    if return_state:
+        return out, SSMState(h=h_last, conv=new_tail)
+    return out, None
+
+
+def ssm_decode(
+    x: jax.Array,                     # (B, 1, D)
+    params: dict,
+    cfg,
+    state: SSMState,
+    precision: Optional[PrecisionConfig] = None,
+) -> Tuple[jax.Array, SSMState]:
+    """O(1) recurrent step: h <- h * exp(a dt) + dt * x (x) B ; y = C.h + D x."""
+    b = x.shape[0]
+    di, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    w = cfg.ssm_conv
+
+    proj = linear(x, params["w_in"], precision=precision)     # (B,1,...)
+    z, xbc, dt_raw = _split_in_proj(proj, cfg)
+    # rolling conv buffer
+    full = jnp.concatenate([state.conv, xbc], axis=1)         # (B, W, C)
+    conv_out = jnp.einsum("bwc,wc->bc", full.astype(jnp.float32),
+                          params["conv_w"].astype(jnp.float32))
+    conv_out = jax.nn.silu(conv_out + params["conv_b"].astype(jnp.float32))
+    new_conv = full[:, 1:]
+
+    xs, bvec, cvec = jnp.split(conv_out, [di, di + n], axis=-1)
+    xh = xs.reshape(b, h, p)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + params["dt_bias"])
+    a_head = -jnp.exp(params["a_log"])
+    decay = jnp.exp(a_head * dt)                              # (B, H)
+
+    hnew = state.h * decay[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, xh, bvec)
+    y = jnp.einsum("bn,bhpn->bhp", cvec, hnew)
+    y = y + xh * params["D"][None, :, None]
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 params["gate_norm_scale"], cfg.norm_eps)
+    out = linear(y, params["w_out"], precision=precision)
+    return out, SSMState(h=hnew, conv=new_conv.astype(state.conv.dtype))

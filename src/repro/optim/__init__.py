@@ -1,0 +1,2 @@
+from repro.optim.adamw import AdamWConfig, AdamWState, global_norm, init, update, state_bytes
+__all__ = ["AdamWConfig", "AdamWState", "init", "update", "global_norm", "state_bytes"]

@@ -1,0 +1,27 @@
+"""RL stack: DAPO + FP8 rollout + TIS/MIS correction (the paper's system)."""
+from repro.rl.advantage import dynamic_sampling_mask, group_advantages
+from repro.rl.correction import (
+    correction_weights,
+    importance_weights,
+    mis_mask,
+    mismatch_kl,
+    tis_weights,
+)
+from repro.rl.loss import LossConfig, dapo_token_loss
+from repro.rl.rollout import (
+    SamplerConfig,
+    Trajectory,
+    gather_response_logps,
+    generate,
+    packed_sequences,
+)
+from repro.rl.trainer import RLConfig, RLTrainer
+from repro.rl.weight_sync import sync_policy_weights, weight_quant_error
+
+__all__ = [
+    "correction_weights", "importance_weights", "tis_weights", "mis_mask",
+    "mismatch_kl", "group_advantages", "dynamic_sampling_mask", "LossConfig",
+    "dapo_token_loss", "SamplerConfig", "Trajectory", "generate",
+    "packed_sequences", "gather_response_logps", "RLConfig", "RLTrainer",
+    "sync_policy_weights", "weight_quant_error",
+]

@@ -1,0 +1,41 @@
+"""Group-relative advantages (GRPO) with DAPO refinements (paper §2.2.1).
+
+The paper trains with DAPO: n=16 responses per prompt, group-normalized
+advantages, token-level loss, clip-higher, dynamic sampling.  Advantage
+computation here; the loss lives in rl/loss.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def group_advantages(rewards: jax.Array, n_per_prompt: int,
+                     eps: float = 1e-6) -> jax.Array:
+    """rewards (B,) grouped as (B/n, n): A = (r - mean_g) / (std_g + eps)."""
+    g = rewards.reshape(-1, n_per_prompt)
+    mean = g.mean(axis=1, keepdims=True)
+    std = g.std(axis=1, keepdims=True)
+    adv = (g - mean) / (std + eps)
+    return adv.reshape(-1)
+
+
+def dynamic_sampling_mask(rewards: jax.Array, n_per_prompt: int
+                          ) -> jax.Array:
+    """DAPO dynamic sampling: groups whose rewards are all identical carry
+    zero learning signal — mask them out of the loss (the paper's system
+    *resamples*; masking is the fixed-shape equivalent and we over-provision
+    prompts, which doubles as straggler mitigation)."""
+    g = rewards.reshape(-1, n_per_prompt)
+    informative = g.std(axis=1) > 1e-6
+    return jnp.repeat(informative.astype(jnp.float32), n_per_prompt)
+
+
+def overlong_penalty(resp_lengths: jax.Array, max_len: int,
+                     soft_start_frac: float = 0.8,
+                     max_penalty: float = 0.5) -> jax.Array:
+    """DAPO overlong reward shaping: responses approaching the hard cutoff
+    get a soft penalty growing linearly to `max_penalty` at the cap."""
+    soft = int(max_len * soft_start_frac)
+    over = jnp.clip(resp_lengths - soft, 0, max_len - soft)
+    return -max_penalty * over / max(max_len - soft, 1)

@@ -1,0 +1,78 @@
+"""QKV scale calibration for the FP8 KV cache (paper §2.3.1, Fig 7).
+
+Two paradigms, both implemented:
+
+* Inference-side (verl): the rollout engine recalibrates during the first
+  forward pass after each weight sync.  In this stack that is
+  `calculate_kv_scales=True` — `attention_prefill` computes fresh k/v amax
+  per layer at prefill.  Nothing to do here beyond the flag.
+
+* Trainer-side (NeMo-RL): at the end of each training step, the *training*
+  backend runs a calibration batch (prompts + recent responses) through the
+  updated policy, extracts per-layer K/V amax, and ships the scales to the
+  inference engine for the next rollout.  `calibrate_kv_scales` implements
+  the calibration pass; `apply_kv_scales` installs the scales into a fresh
+  rollout cache (rollout then runs with `calculate_kv_scales=False`).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import PrecisionConfig
+from repro.core.quant import calibrate_scale
+from repro.models import blocks as blocks_mod
+from repro.models import init_cache, prefill
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def calibrate_kv_scales(params, calib_inputs: dict, cfg) -> dict:
+    """Run a bf16 prefill over the calibration batch and harvest per-layer
+    K/V amax.  Returns {slot: {"k_scale": (R,), "v_scale": (R,)}}.
+
+    `calib_inputs` = {"tokens": (B, T), "lengths": (B,)} — typically a
+    subset of the step's prompts + generated responses (paper §B.2).
+    """
+    from repro.core.precision import BF16_ROLLOUT
+
+    b, t = calib_inputs["tokens"].shape
+    cache = init_cache(cfg, b, t, BF16_ROLLOUT)
+    _, cache = prefill(params, calib_inputs, cache, cfg, BF16_ROLLOUT)
+
+    pattern = blocks_mod.layer_pattern(cfg)
+    scales = {}
+    for j, spec in enumerate(pattern):
+        slot = cache["slots"].get(f"s{j}", {})
+        if "kv" not in slot:
+            continue
+        kv = slot["kv"]
+        # amax over everything but the stacked layer axis
+        k_amax = jnp.max(jnp.abs(kv.k.astype(jnp.float32)),
+                         axis=tuple(range(1, kv.k.ndim)))
+        v_amax = jnp.max(jnp.abs(kv.v.astype(jnp.float32)),
+                         axis=tuple(range(1, kv.v.ndim)))
+        scales[f"s{j}"] = {
+            "k_scale": jax.vmap(lambda a: calibrate_scale(a, margin=1.05))(k_amax),
+            "v_scale": jax.vmap(lambda a: calibrate_scale(a, margin=1.05))(v_amax),
+        }
+    return scales
+
+
+def apply_kv_scales(cache: dict, scales: dict) -> dict:
+    """Install trainer-side scales into a freshly-initialized rollout cache."""
+    slots = dict(cache["slots"])
+    for name, sc in scales.items():
+        if name in slots and "kv" in slots[name]:
+            slots[name] = dict(
+                slots[name],
+                kv=slots[name]["kv"]._replace(k_scale=sc["k_scale"],
+                                              v_scale=sc["v_scale"]))
+    return dict(cache, slots=slots)
+
+
+def trainer_side_precision(precision: PrecisionConfig) -> PrecisionConfig:
+    """Rollout precision for the trainer-side paradigm: quantized KV but no
+    per-prefill recalibration (scales come from the trainer)."""
+    return precision.replace(calculate_kv_scales=False)

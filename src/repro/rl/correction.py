@@ -1,0 +1,81 @@
+"""Importance-sampling rollout correction + mismatch metrics (paper §2.1.3).
+
+The trainer optimizes pi_theta assuming on-policy samples, but rollouts come
+from the quantized policy pi^FP8.  Corrections reweight each token by
+
+    w(a|s) = pi_theta(a|s) / pi^FP8(a|s)
+
+TIS:  w_TIS = min(w, C)            (C = 2 in all paper experiments)
+MIS:  token masked unless w in [low, high]
+
+`mismatch_kl` is the paper's monitoring metric D_KL(pi^FP8 || pi_theta),
+estimated on sampled tokens.  We report both the k1 estimator (unbiased,
+sign-noisy) and the k3 estimator (non-negative, low-variance) and plot k3.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import PrecisionConfig, RolloutCorrection
+
+
+def importance_weights(logp_train: jax.Array, logp_rollout: jax.Array
+                       ) -> jax.Array:
+    """w = pi_theta / pi_fp8 per token; inputs are per-token logprobs."""
+    return jnp.exp(logp_train - logp_rollout)
+
+
+def tis_weights(logp_train, logp_rollout, clip: float = 2.0) -> jax.Array:
+    """Token-level truncated importance sampling (eq. 3)."""
+    w = importance_weights(logp_train, logp_rollout)
+    return jnp.minimum(w, clip)
+
+
+def mis_mask(logp_train, logp_rollout, low: float = 0.5, high: float = 2.0
+             ) -> jax.Array:
+    """Masked importance sampling: drop tokens with unreliable ratios."""
+    w = importance_weights(logp_train, logp_rollout)
+    return jnp.logical_and(w >= low, w <= high).astype(jnp.float32)
+
+
+def correction_weights(
+    logp_train: jax.Array,
+    logp_rollout: jax.Array,
+    precision: PrecisionConfig,
+) -> jax.Array:
+    """Dispatch on the configured correction.  Weights are stop-gradient:
+    they correct the sampling distribution, they are not differentiated."""
+    mode = precision.correction
+    if mode == RolloutCorrection.NONE:
+        return jnp.ones_like(logp_train)
+    if mode == RolloutCorrection.TIS:
+        w = tis_weights(logp_train, logp_rollout, precision.tis_clip)
+    elif mode == RolloutCorrection.MIS:
+        w = mis_mask(logp_train, logp_rollout, precision.mis_low,
+                     precision.mis_high)
+    else:  # pragma: no cover
+        raise ValueError(mode)
+    return jax.lax.stop_gradient(w)
+
+
+# ---------------------------------------------------------------------------
+# mismatch monitoring
+# ---------------------------------------------------------------------------
+
+def mismatch_kl(logp_rollout: jax.Array, logp_train: jax.Array,
+                mask: jax.Array) -> dict:
+    """D_KL(pi_fp8 || pi_theta) on tokens sampled from pi_fp8.
+
+    k1 = E[log pi_fp8 - log pi_theta]
+    k3 = E[(r - 1) - log r],  r = pi_theta / pi_fp8   (Schulman's estimator)
+    """
+    d = (logp_rollout - logp_train) * mask
+    n = jnp.maximum(mask.sum(), 1.0)
+    k1 = d.sum() / n
+    log_r = (logp_train - logp_rollout)
+    r = jnp.exp(jnp.clip(log_r, -20.0, 20.0))
+    k3 = (((r - 1.0) - log_r) * mask).sum() / n
+    return {"mismatch_kl_k1": k1, "mismatch_kl": k3,
+            "is_weight_mean": (r * mask).sum() / n,
+            "is_weight_max": jnp.max(r * mask)}

@@ -1,0 +1,64 @@
+"""DAPO token-level policy loss with rollout correction (paper §2.1.3).
+
+Per token t of response i:
+
+    r_t      = exp(logp_theta - logp_old)          # PPO ratio (old = scoring
+                                                   #  policy at rollout time)
+    w_t      = correction(logp_old, logp_rollout)  # TIS / MIS / 1
+    L_t      = -w_t * min(r_t * A_i, clip(r_t, 1-eps_lo, 1+eps_hi) * A_i)
+
+Token-level normalization (DAPO): sum over all tokens / total token count,
+not per-sequence means.  `eps_hi > eps_lo` is DAPO's clip-higher.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import PrecisionConfig
+from repro.rl.correction import correction_weights, mismatch_kl
+
+
+class LossConfig(NamedTuple):
+    eps_low: float = 0.2
+    eps_high: float = 0.28       # DAPO clip-higher
+    entropy_coef: float = 0.0
+    moe_aux_coef: float = 0.0
+
+
+def dapo_token_loss(
+    logp_theta: jax.Array,      # (B, G) current-policy logprobs (grad flows)
+    logp_old: jax.Array,        # (B, G) scoring-policy logprobs at rollout
+    logp_rollout: jax.Array,    # (B, G) FP8 rollout-engine logprobs
+    advantages: jax.Array,      # (B,)
+    mask: jax.Array,            # (B, G) loss mask (dynamic-sampling applied)
+    precision: PrecisionConfig,
+    cfg: LossConfig = LossConfig(),
+    metrics_mask: jax.Array | None = None,   # (B, G) raw response mask
+):
+    logp_old = jax.lax.stop_gradient(logp_old)
+    ratio = jnp.exp(logp_theta - logp_old)
+    adv = advantages[:, None]
+    unclipped = ratio * adv
+    clipped = jnp.clip(ratio, 1.0 - cfg.eps_low, 1.0 + cfg.eps_high) * adv
+    pg = -jnp.minimum(unclipped, clipped)
+
+    w = correction_weights(logp_old, logp_rollout, precision)  # (B, G)
+    n_tok = jnp.maximum(mask.sum(), 1.0)
+    loss = (pg * w * mask).sum() / n_tok
+
+    stats = {
+        "pg_loss": loss,
+        "ratio_mean": (ratio * mask).sum() / n_tok,
+        "clip_frac": ((jnp.abs(ratio - 1.0) > cfg.eps_low) * mask).sum() / n_tok,
+        "corr_weight_mean": (w * mask).sum() / n_tok,
+        "corr_masked_frac": ((w < 1e-6) * mask).sum() / n_tok,
+    }
+    # mismatch monitoring over *all* response tokens — the dynamic-sampling
+    # mask must not hide the distribution shift (it zeroes whole batches at
+    # init when every reward ties at 0)
+    stats.update(mismatch_kl(logp_rollout, logp_old,
+                             mask if metrics_mask is None else metrics_mask))
+    return loss, stats

@@ -1,0 +1,214 @@
+"""Rollout engine: batched autoregressive generation on the (FP8) policy.
+
+This is the inference-engine role of the paper's stack (vLLM/SGLang):
+  * consumes the synced rollout params (fp8 payloads + scales),
+  * prefill recalibrates KV scales when `calculate_kv_scales` is on
+    (inference-side calibration, Fig 7) or uses trainer-provided scales,
+  * decodes with a `while_loop` that stops as soon as every sequence hit
+    EOS — plus a hard token budget, the straggler-mitigation cutoff,
+  * returns per-token *rollout* logprobs (the pi^FP8 side of TIS),
+  * optionally records MoE expert choices per token for RRR.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import PrecisionConfig
+from repro.data import tasks
+from repro.models import decode_step, init_cache, prefill
+from repro.models import blocks as blocks_mod
+
+
+class Trajectory(NamedTuple):
+    """One rollout batch (B sequences)."""
+
+    prompt_tokens: jax.Array     # (B, P)
+    prompt_lengths: jax.Array    # (B,)
+    response_tokens: jax.Array   # (B, G) PAD after EOS
+    response_mask: jax.Array     # (B, G) 1.0 through EOS inclusive
+    rollout_logps: jax.Array     # (B, G) log pi^FP8 of sampled tokens
+    response_lengths: jax.Array  # (B,)
+    routing: Optional[dict]      # RRR: prefill/decode expert choices
+    kv_scales: Optional[dict]    # per-slot (R,) k/v scales after calibration
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerConfig:
+    max_new_tokens: int = 24
+    temperature: float = 1.0
+    top_k: int = 0              # 0 = full softmax
+    eos_id: int = tasks.EOS
+    pad_id: int = tasks.PAD
+
+
+def _sample(logits: jax.Array, key, temperature: float, top_k: int):
+    logits = logits.astype(jnp.float32)
+    if temperature <= 0.0:
+        tok = jnp.argmax(logits, axis=-1)
+        logp = jax.nn.log_softmax(logits, -1)
+        return tok, jnp.take_along_axis(logp, tok[:, None], -1)[:, 0]
+    logits = logits / temperature
+    if top_k > 0:
+        thresh = jax.lax.top_k(logits, top_k)[0][..., -1:]
+        logits = jnp.where(logits < thresh, -1e30, logits)
+    tok = jax.random.categorical(key, logits, axis=-1)
+    logp = jax.nn.log_softmax(logits, -1)
+    return tok, jnp.take_along_axis(logp, tok[:, None], -1)[:, 0]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "precision", "sampler", "want_routing"))
+def generate(
+    rollout_params,
+    prompts: jax.Array,          # (B, P) right-padded
+    prompt_lengths: jax.Array,   # (B,)
+    key: jax.Array,
+    cfg,
+    precision: PrecisionConfig,
+    sampler: SamplerConfig = SamplerConfig(),
+    want_routing: bool = False,
+    extra_inputs: Optional[dict] = None,
+    kv_scales: Optional[dict] = None,    # trainer-side calibration scales
+) -> Trajectory:
+    b, p = prompts.shape
+    g = sampler.max_new_tokens
+    max_len = p + g + 1
+    src_len = 0
+    inputs = {"tokens": prompts, "lengths": prompt_lengths}
+    if extra_inputs:
+        inputs.update(extra_inputs)
+        if "frames" in extra_inputs:
+            src_len = extra_inputs["frames"].shape[1]
+
+    cache = init_cache(cfg, b, max_len, precision, src_len=src_len)
+    if kv_scales is not None:
+        from repro.rl.calibration import apply_kv_scales
+        cache = apply_kv_scales(cache, kv_scales)
+    out = prefill(rollout_params, inputs, cache, cfg, precision,
+                  want_routing=want_routing)
+    if want_routing:
+        logits0, cache, prefill_routing = out
+    else:
+        logits0, cache = out
+        prefill_routing = None
+
+    key, k0 = jax.random.split(key)
+    tok0, logp0 = _sample(logits0, k0, sampler.temperature, sampler.top_k)
+
+    pattern = blocks_mod.layer_pattern(cfg)
+    moe_slots = [f"s{j}" for j, s in enumerate(pattern) if s.ffn == "moe"]
+    repeats = blocks_mod.n_repeats(cfg)
+
+    def routing_buf():
+        if not (want_routing and moe_slots):
+            return None
+        return {name: jnp.zeros((g, repeats, b, 1, cfg.top_k), jnp.int32)
+                for name in moe_slots}
+
+    state0 = dict(
+        i=jnp.int32(0),
+        tok=tok0,
+        logp=logp0,
+        done=jnp.zeros((b,), bool),
+        key=key,
+        cache=cache,
+        resp=jnp.full((b, g), sampler.pad_id, jnp.int32),
+        logps=jnp.zeros((b, g), jnp.float32),
+        mask=jnp.zeros((b, g), jnp.float32),
+        routing=routing_buf(),
+    )
+
+    def cond(s):
+        return jnp.logical_and(s["i"] < g, ~jnp.all(s["done"]))
+
+    def body(s):
+        i = s["i"]
+        # commit the token sampled in the previous iteration (EOS included)
+        resp = s["resp"].at[:, i].set(
+            jnp.where(s["done"], sampler.pad_id, s["tok"]))
+        logps = s["logps"].at[:, i].set(jnp.where(s["done"], 0.0, s["logp"]))
+        mask = s["mask"].at[:, i].set(jnp.where(s["done"], 0.0, 1.0))
+        done = s["done"] | (s["tok"] == sampler.eos_id)
+
+        logits, cache, aux = decode_step(
+            rollout_params, s["tok"], s["cache"], cfg, precision,
+            want_routing=want_routing)
+        key, kk = jax.random.split(s["key"])
+        tok, logp = _sample(logits, kk, sampler.temperature, sampler.top_k)
+        routing = s["routing"]
+        if routing is not None:
+            routing = {name: routing[name].at[i].set(aux["routing"][name])
+                       for name in routing}
+        return dict(i=i + 1, tok=tok, logp=logp, done=done, key=key,
+                    cache=cache, resp=resp, logps=logps, mask=mask,
+                    routing=routing)
+
+    state = jax.lax.while_loop(cond, body, state0)
+
+    resp_lengths = state["mask"].sum(axis=1).astype(jnp.int32)
+    routing = None
+    if want_routing and moe_slots:
+        routing = {"prefill": prefill_routing, "decode": state["routing"]}
+
+    kv_scales = _collect_kv_scales(state["cache"], pattern)
+    return Trajectory(
+        prompt_tokens=prompts,
+        prompt_lengths=prompt_lengths,
+        response_tokens=state["resp"],
+        response_mask=state["mask"],
+        rollout_logps=state["logps"],
+        response_lengths=resp_lengths,
+        routing=routing,
+        kv_scales=kv_scales,
+    )
+
+
+def _collect_kv_scales(cache, pattern) -> dict:
+    out = {}
+    for j, spec in enumerate(pattern):
+        slot = cache["slots"].get(f"s{j}", {})
+        if "kv" in slot:
+            out[f"s{j}"] = {"k_scale": slot["kv"].k_scale,
+                            "v_scale": slot["kv"].v_scale}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# scoring-side alignment helpers
+# ---------------------------------------------------------------------------
+
+def packed_sequences(traj: Trajectory) -> jax.Array:
+    """(B, P+G): prompt[:L_i] immediately followed by the response — the
+    teacher-forced scoring input (no PAD gap for short prompts)."""
+    b, p = traj.prompt_tokens.shape
+    g = traj.response_tokens.shape[1]
+    pos = jnp.arange(p + g)[None, :]
+    lens = traj.prompt_lengths[:, None]
+    prompt_part = jnp.take_along_axis(
+        traj.prompt_tokens,
+        jnp.broadcast_to(jnp.clip(pos, 0, p - 1), (b, p + g)), axis=1)
+    resp_idx = jnp.clip(pos - lens, 0, g - 1)
+    resp_part = jnp.take_along_axis(traj.response_tokens,
+                                    jnp.broadcast_to(resp_idx, (b, p + g)),
+                                    axis=1)
+    return jnp.where(pos < lens, prompt_part, resp_part)
+
+
+def gather_response_logps(score_logps: jax.Array, traj: Trajectory
+                          ) -> jax.Array:
+    """Align scoring-model logprobs (B, T-1) with rollout response tokens.
+
+    The response token k of row i sits at packed position L_i + k and is
+    predicted at logprob index L_i + k - 1.  Returns (B, G) masked like
+    `traj.response_mask`."""
+    b, g = traj.response_tokens.shape
+    idx = traj.prompt_lengths[:, None] + jnp.arange(g)[None, :] - 1
+    idx = jnp.clip(idx, 0, score_logps.shape[1] - 1)
+    out = jnp.take_along_axis(score_logps, idx, axis=1)
+    return out * traj.response_mask

@@ -1,0 +1,60 @@
+"""Dynamic weight synchronization (paper §2.1.2, Fig 1).
+
+Every RL step the freshly-updated BF16 training weights are quantized to
+blockwise FP8 and "loaded into" the inference engine.  In this JAX stack
+the load is a pure, jit-able pytree transform; under pjit the rollout
+params carry their own shardings, so the cross-backend transfer of the
+paper (NCCL into vLLM) becomes GSPMD resharding of the quantized tree.
+
+`sync_policy_weights` also reports quantization telemetry used by the
+EXPERIMENTS.md weight-sync table.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional, Tuple
+
+import jax
+
+from repro.core.fp8_params import count_quantized, quantize_params
+from repro.core.precision import PrecisionConfig
+from repro.core.quant import QuantizedTensor, dequantize, quantization_rel_error
+
+
+def sync_policy_weights(
+    train_params,
+    precision: PrecisionConfig,
+    *,
+    rollout_shardings=None,
+) -> Tuple[object, dict]:
+    """BF16 train params -> rollout params.  Returns (params, stats)."""
+    t0 = time.perf_counter()
+    if not precision.any_fp8_rollout and \
+            precision.router_dtype.value == "bf16":
+        return train_params, {"sync_ms": 0.0, "quantized_leaves": 0}
+
+    quant_fn = jax.jit(lambda p: quantize_params(p, precision))
+    rollout_params = quant_fn(train_params)
+    if rollout_shardings is not None:
+        rollout_params = jax.device_put(rollout_params, rollout_shardings)
+    jax.block_until_ready(jax.tree.leaves(rollout_params)[0])
+    stats = dict(count_quantized(rollout_params))
+    stats["sync_ms"] = (time.perf_counter() - t0) * 1e3
+    return rollout_params, stats
+
+
+def weight_quant_error(train_params, rollout_params, top_n: int = 5) -> dict:
+    """Per-leaf relative quantization error (monitoring)."""
+    errs = {}
+
+    def visit(path, train_leaf, roll_leaf):
+        if isinstance(roll_leaf, QuantizedTensor):
+            errs["/".join(str(getattr(p, "key", p)) for p in path)] = float(
+                quantization_rel_error(train_leaf, roll_leaf))
+
+    jax.tree_util.tree_map_with_path(
+        visit, train_params, rollout_params,
+        is_leaf=lambda x: isinstance(x, QuantizedTensor))
+    worst = sorted(errs.items(), key=lambda kv: -kv[1])[:top_n]
+    return {"worst": worst,
+            "mean_rel_err": sum(errs.values()) / max(len(errs), 1)}

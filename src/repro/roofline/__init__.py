@@ -1,0 +1,11 @@
+from repro.roofline.analysis import (
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS,
+    RooflineTerms,
+    analyze,
+    collective_bytes,
+    model_flops_for_cell,
+)
+__all__ = ["analyze", "collective_bytes", "model_flops_for_cell",
+           "RooflineTerms", "PEAK_FLOPS", "HBM_BW", "ICI_BW"]

@@ -1,0 +1,2 @@
+from repro.serving.engine import Request, ServeReport, ServingEngine, kv_bytes_per_token
+__all__ = ["ServingEngine", "ServeReport", "Request", "kv_bytes_per_token"]

@@ -1,0 +1,18 @@
+"""Shared test configuration.
+
+NOTE: no XLA_FLAGS here — smoke tests and benches must see 1 device
+(dryrun.py owns its own 512-device process).
+
+The full suite compiles many hundreds of XLA CPU executables in one
+process; without eviction the CPU JIT eventually fails to materialize new
+dylib symbols.  Clearing jax caches per test module keeps the executable
+count bounded.
+"""
+import jax
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_per_module():
+    yield
+    jax.clear_caches()

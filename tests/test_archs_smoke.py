@@ -1,0 +1,184 @@
+"""Per-architecture smoke tests (assignment requirement).
+
+Each assigned arch (+ the paper's two) instantiates a REDUCED same-family
+config and runs, on CPU:
+  * one training forward + backward step — asserts output shapes + no NaNs
+  * prefill + a few decode steps in BF16 and FP8 rollout modes
+  * (decoder families) consistency: decode logits == teacher-forced logits
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import REGISTRY, get_config
+from repro.core import BF16_ROLLOUT, FULL_FP8_ROLLOUT, PrecisionConfig
+from repro.core.fp8_params import quantize_params
+from repro.models import (
+    decode_step,
+    forward_train,
+    init_cache,
+    init_params,
+    prefill,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+ARCHS = sorted(REGISTRY)
+B, T = 2, 16
+
+
+def _inputs(cfg, b=B, t=T, key=0):
+    ks = jax.random.split(jax.random.key(key), 3)
+    inp = {"tokens": jax.random.randint(ks[0], (b, t), 0, cfg.vocab_size)}
+    if cfg.frontend == "vision_patches":
+        p = max(cfg.frontend_len, 4)
+        inp["patches"] = jax.random.normal(ks[1], (p and 4, 4, cfg.d_model),
+                                           jnp.bfloat16)
+        inp["patches"] = jax.random.normal(ks[1], (b, 4, cfg.d_model), jnp.bfloat16)
+    if cfg.is_encdec:
+        inp["frames"] = jax.random.normal(ks[2], (b, 8, cfg.d_model), jnp.bfloat16)
+        inp["src_lengths"] = jnp.array([8, 5][:b])
+    return inp
+
+
+@pytest.fixture(scope="module")
+def models():
+    cache = {}
+
+    def get(name):
+        if name not in cache:
+            cfg = get_config(name).reduced()
+            params = init_params(cfg, jax.random.key(42))
+            cache[name] = (cfg, params)
+        return cache[name]
+
+    return get
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_forward_shapes_no_nan(models, arch):
+    cfg, params = models(arch)
+    inp = _inputs(cfg)
+    logits, aux = forward_train(params, inp, cfg)
+    t_total = T + (4 if cfg.frontend == "vision_patches" else 0)
+    assert logits.shape == (B, t_total, cfg.vocab_size)
+    assert not np.any(np.isnan(np.asarray(logits)))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_grads_finite(models, arch):
+    cfg, params = models(arch)
+    inp = _inputs(cfg)
+
+    def loss_fn(p):
+        logits, aux = forward_train(p, inp, cfg)
+        tok = inp["tokens"]
+        pref = aux.get("prefix_len", 0)
+        lp = jax.nn.log_softmax(logits[:, pref:][:, :-1].astype(jnp.float32), -1)
+        return -jnp.mean(jnp.take_along_axis(lp, tok[:, 1:, None], -1))
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert np.isfinite(float(loss))
+    flat = jax.tree.leaves(grads)
+    assert all(np.all(np.isfinite(np.asarray(g, np.float32))) for g in flat)
+    # embedding must receive gradient
+    assert float(jnp.abs(grads["emb"]).max()) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("mode", ["bf16", "fp8"])
+def test_prefill_decode_no_nan(models, arch, mode):
+    cfg, params = models(arch)
+    precision = BF16_ROLLOUT if mode == "bf16" else FULL_FP8_ROLLOUT
+    p_roll = params if mode == "bf16" else quantize_params(params, precision)
+    inp = _inputs(cfg)
+    inp["lengths"] = jnp.array([T, T - 3][:B])
+    max_len = T + 8
+    src = inp["frames"].shape[1] if cfg.is_encdec else 0
+    cache = init_cache(cfg, B, max_len, precision, src_len=src)
+    logits, cache = prefill(p_roll, inp, cache, cfg, precision)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert not np.any(np.isnan(np.asarray(logits)))
+    tok = jnp.argmax(logits, -1)
+    for _ in range(3):
+        logits, cache, _ = decode_step(p_roll, tok, cache, cfg, precision)
+        assert not np.any(np.isnan(np.asarray(logits)))
+        tok = jnp.argmax(logits, -1)
+    assert int(cache["lengths"][0]) == (T if cfg.frontend != "vision_patches"
+                                        else T + 4) + 3
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-3b", "mamba2-780m",
+                                  "granite-moe-3b-a800m",
+                                  "jamba-1.5-large-398b"])
+def test_decode_matches_teacher_forcing(models, arch):
+    """Greedy decode logits must match the teacher-forced forward on the
+    same token sequence.
+
+    Run in float32 to verify *algorithmic* equivalence of the incremental
+    (cache/recurrence) path and the full-sequence (chunked) path.  In bf16
+    the two paths differ by accumulation order — that residual divergence is
+    precisely the paper's train-inference mismatch premise and is measured
+    (not asserted away) in the mismatch-KL tests."""
+    cfg, _ = models(arch)
+    params = init_params(cfg, jax.random.key(42), dtype=jnp.float32)
+    precision = BF16_ROLLOUT
+    t0 = 8
+    inp = {"tokens": jax.random.randint(jax.random.key(7), (1, t0), 0,
+                                        cfg.vocab_size),
+           "lengths": jnp.array([t0])}
+    cache = init_cache(cfg, 1, t0 + 4, precision, dtype=jnp.float32)
+    logits_p, cache = prefill(params, inp, cache, cfg, precision)
+    toks = [int(jnp.argmax(logits_p, -1)[0])]
+    dec_logits = [logits_p]
+    for _ in range(2):
+        lg, cache, _ = decode_step(params, jnp.array(toks[-1:]), cache, cfg,
+                                   precision)
+        dec_logits.append(lg)
+        toks.append(int(jnp.argmax(lg, -1)[0]))
+    # teacher-forced pass over prompt + generated tokens
+    full = jnp.concatenate([inp["tokens"], jnp.array([toks[:2]])], axis=1)
+    tf_logits, _ = forward_train(params, {"tokens": full}, cfg, precision,
+                                 remat=False)
+    for i, dl in enumerate(dec_logits):
+        ref = np.asarray(tf_logits[0, t0 - 1 + i], np.float32)
+        got = np.asarray(dl[0], np.float32)
+        np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-4)
+
+
+def test_configs_exact_dims():
+    """Spot-check the assigned table dims survive into the configs."""
+    c = get_config("mistral-large-123b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (88, 12288, 96, 8, 28672, 32768)
+    c = get_config("jamba-1.5-large-398b")
+    assert (c.n_experts, c.top_k, c.attn_period) == (16, 2, 8)
+    c = get_config("granite-moe-3b-a800m")
+    assert (c.n_experts, c.top_k) == (40, 8)
+    c = get_config("mamba2-780m")
+    assert c.attention_free and c.ssm_state == 128
+    c = get_config("seamless-m4t-medium")
+    assert c.is_encdec and c.vocab_size == 256206
+
+
+def test_param_counts_plausible():
+    """Analytic N within the advertised ballpark (loose: naming sizes are
+    nominal marketing numbers)."""
+    expect = {
+        "mistral-large-123b": (100e9, 140e9),
+        "grok-1-314b": (250e9, 360e9),
+        "jamba-1.5-large-398b": (300e9, 480e9),
+        "mamba2-780m": (0.4e9, 1.2e9),
+        "qwen3-8b": (6e9, 10e9),
+        "starcoder2-15b": (12e9, 18e9),
+    }
+    for name, (lo, hi) in expect.items():
+        n = get_config(name).param_count()
+        assert lo < n < hi, (name, n)
+
+
+def test_long_500k_assignment():
+    runs = {n for n, c in REGISTRY.items()
+            if any(s.name == "long_500k" for s in c.shapes())}
+    assert runs == {"mamba2-780m", "jamba-1.5-large-398b"}

@@ -1,0 +1,241 @@
+"""Per-kernel validation: Pallas (interpret=True on CPU) vs pure-jnp oracle.
+
+Covers the three FP8-RL kernels with hypothesis shape/dtype sweeps plus
+directed edge cases (padding, GQA group sizes, masked lengths).
+"""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import E4M3, E5M2, ScaleFormat
+from repro.core import quant as cq
+from repro.kernels import fp8_gemm as gemm_mod
+from repro.kernels import fp8_kv_attention as attn_mod
+from repro.kernels import fp8_quant as quant_mod
+from repro.kernels import ops, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# fp8_quant
+# ---------------------------------------------------------------------------
+
+def test_quant_act_kernel_matches_ref():
+    x = jax.random.normal(jax.random.key(0), (64, 384), jnp.bfloat16) * 3
+    qk, sk = quant_mod.quantize_activation_kernel(x, bm=32, interpret=True)
+    qr, sr = ref.quantize_activation_ref(x)
+    np.testing.assert_array_equal(np.asarray(qk, np.float32), np.asarray(qr, np.float32))
+    np.testing.assert_allclose(np.asarray(sk), np.asarray(sr), rtol=1e-6)
+
+
+def test_quant_weight_kernel_matches_ref():
+    w = jax.random.normal(jax.random.key(1), (256, 384), jnp.float32) * 0.1
+    qk, sk = quant_mod.quantize_weight_kernel(w, interpret=True)
+    qr, sr = ref.quantize_weight_ref(w)
+    np.testing.assert_array_equal(np.asarray(qk, np.float32), np.asarray(qr, np.float32))
+    np.testing.assert_allclose(np.asarray(sk), np.asarray(sr), rtol=1e-6)
+
+
+def test_quant_kernel_matches_core_quant():
+    """Kernel path and the core library path implement the same spec."""
+    x = jax.random.normal(jax.random.key(2), (32, 256), jnp.float32)
+    qt_kernel = ops.quantize_activation(x)
+    qt_core = cq.quantize_activation(x)
+    np.testing.assert_array_equal(
+        np.asarray(qt_kernel.data, np.float32), np.asarray(qt_core.data, np.float32)
+    )
+    np.testing.assert_allclose(
+        np.asarray(qt_kernel.scales), np.asarray(qt_core.scales), rtol=1e-6
+    )
+
+
+@hypothesis.settings(max_examples=10, deadline=None)
+@hypothesis.given(
+    m=st.sampled_from([8, 32, 96]),
+    kb=st.integers(1, 4),
+    fp8=st.sampled_from([E4M3, E5M2]),
+    fmt=st.sampled_from([ScaleFormat.FP32, ScaleFormat.UE8M0]),
+    mag=st.floats(0.01, 100.0),
+)
+def test_property_quant_act_sweep(m, kb, fp8, fmt, mag):
+    x = jax.random.normal(jax.random.key(m * kb), (m, kb * 128), jnp.float32) * mag
+    qk, sk = quant_mod.quantize_activation_kernel(
+        x, fp8_dtype=fp8, scale_format=fmt, bm=8, interpret=True)
+    qr, sr = ref.quantize_activation_ref(x, fp8_dtype=fp8, scale_format=fmt)
+    np.testing.assert_array_equal(np.asarray(qk, np.float32), np.asarray(qr, np.float32))
+    np.testing.assert_allclose(np.asarray(sk), np.asarray(sr), rtol=1e-6)
+
+
+def test_quant_ops_padding_nonmultiple():
+    """ops wrapper: K not a multiple of 128, odd leading dims."""
+    x = jax.random.normal(jax.random.key(3), (3, 5, 200), jnp.float32)
+    qt = ops.quantize_activation(x)
+    assert qt.data.shape == (3, 5, 200)
+    assert qt.scales.shape == (3, 5, 2)
+    deq = cq.dequantize(qt, jnp.float32)
+    rel = np.abs(np.asarray(deq) - np.asarray(x)) / np.maximum(np.abs(np.asarray(x)), 1e-6)
+    assert np.percentile(rel, 99) < 0.08
+
+
+# ---------------------------------------------------------------------------
+# fp8_gemm
+# ---------------------------------------------------------------------------
+
+def _mk_quantized(key, m, k, n, mag=1.0):
+    kx, kw = jax.random.split(jax.random.key(key))
+    x = jax.random.normal(kx, (m, k), jnp.float32) * mag
+    w = jax.random.normal(kw, (k, n), jnp.float32) * mag
+    xq, xs = ref.quantize_activation_ref(x)
+    wq, ws = ref.quantize_weight_ref(w)
+    return x, w, xq, xs, wq, ws
+
+
+def test_gemm_kernel_matches_ref_exact():
+    """Kernel vs oracle on identical fp8 inputs: same math, tight tolerance."""
+    _, _, xq, xs, wq, ws = _mk_quantized(10, 256, 256, 256)
+    y_k = gemm_mod.fp8_gemm(xq, wq, xs, ws, bm=128, bn=128, interpret=True)
+    y_r = ref.fp8_gemm_ref(xq, wq, xs, ws)
+    np.testing.assert_allclose(
+        np.asarray(y_k, np.float32), np.asarray(y_r, np.float32), rtol=2e-2, atol=1e-3
+    )
+
+
+def test_gemm_close_to_fp32_matmul():
+    """End-to-end quantized GEMM approximates the fp32 product (the paper's
+    accuracy premise for W8A8)."""
+    x, w, xq, xs, wq, ws = _mk_quantized(11, 128, 384, 128)
+    y_k = np.asarray(gemm_mod.fp8_gemm(xq, wq, xs, ws, bm=128, bn=128,
+                                       interpret=True), np.float32)
+    y_f = np.asarray(x @ w)
+    denom = np.abs(y_f).mean() + 1e-6
+    assert np.abs(y_k - y_f).mean() / denom < 0.05
+
+
+@hypothesis.settings(max_examples=8, deadline=None)
+@hypothesis.given(
+    mb=st.integers(1, 2), kb=st.integers(1, 3), nb=st.integers(1, 2),
+    bm=st.sampled_from([128, 256]), bn=st.sampled_from([128, 256]),
+    mag=st.floats(0.05, 20.0),
+)
+def test_property_gemm_sweep(mb, kb, nb, bm, bn, mag):
+    m, k, n = mb * 256, kb * 128, nb * 256
+    _, _, xq, xs, wq, ws = _mk_quantized(mb * 100 + kb * 10 + nb, m, k, n, mag)
+    y_k = gemm_mod.fp8_gemm(xq, wq, xs, ws, bm=bm, bn=bn, interpret=True)
+    y_r = ref.fp8_gemm_ref(xq, wq, xs, ws)
+    np.testing.assert_allclose(
+        np.asarray(y_k, np.float32), np.asarray(y_r, np.float32),
+        rtol=2e-2, atol=1e-3 * mag * mag,
+    )
+
+
+def test_gemm_ops_wrapper_arbitrary_shapes():
+    """fp8_matmul pads (M=9, K=200, N=130) correctly."""
+    x = jax.random.normal(jax.random.key(12), (9, 200), jnp.float32)
+    w = jax.random.normal(jax.random.key(13), (200, 130), jnp.float32)
+    y = ops.fp8_matmul(ops.quantize_activation(x), ops.quantize_weight(w))
+    assert y.shape == (9, 130)
+    y_f = np.asarray(x @ w)
+    err = np.abs(np.asarray(y, np.float32) - y_f).mean() / (np.abs(y_f).mean() + 1e-6)
+    assert err < 0.06
+
+
+def test_gemm_ops_batched_input():
+    x = jax.random.normal(jax.random.key(14), (2, 3, 128), jnp.float32)
+    w = jax.random.normal(jax.random.key(15), (128, 256), jnp.float32)
+    y = ops.fp8_matmul(ops.quantize_activation(x), ops.quantize_weight(w))
+    assert y.shape == (2, 3, 256)
+
+
+# ---------------------------------------------------------------------------
+# fp8_kv_attention
+# ---------------------------------------------------------------------------
+
+def _mk_attn(key, b, kvh, g, d, s, dtype=jnp.float8_e4m3fn):
+    ks = jax.random.split(jax.random.key(key), 4)
+    q = jax.random.normal(ks[0], (b, kvh, g, d), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (b, s, kvh, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, kvh, d), jnp.float32)
+    k_scale = jnp.float32(jnp.abs(k).max() / 448.0)
+    v_scale = jnp.float32(jnp.abs(v).max() / 448.0)
+    kq = cq.quantize_per_tensor(k, k_scale, dtype)
+    vq = cq.quantize_per_tensor(v, v_scale, dtype)
+    lengths = jax.random.randint(ks[3], (b,), 1, s + 1)
+    return q, kq, vq, k_scale, v_scale, lengths
+
+
+def test_decode_attention_matches_ref():
+    q, kq, vq, ks, vs, lengths = _mk_attn(20, b=2, kvh=2, g=4, d=64, s=256)
+    out_k = attn_mod.fp8_decode_attention(q, kq, vq, ks, vs, lengths, bs=128,
+                                          interpret=True)
+    out_r = ref.fp8_decode_attention_ref(q, kq, vq, ks, vs, lengths)
+    np.testing.assert_allclose(
+        np.asarray(out_k, np.float32), np.asarray(out_r, np.float32),
+        rtol=2e-2, atol=2e-2,
+    )
+
+
+def test_decode_attention_bf16_kv_path():
+    """bf16 KV (no quantization) must also work — dequant is a scale-by-1."""
+    b, kvh, g, d, s = 1, 2, 2, 32, 128
+    keys = jax.random.split(jax.random.key(21), 3)
+    q = jax.random.normal(keys[0], (b, kvh, g, d), jnp.bfloat16)
+    k = jax.random.normal(keys[1], (b, s, kvh, d), jnp.bfloat16)
+    v = jax.random.normal(keys[2], (b, s, kvh, d), jnp.bfloat16)
+    one = jnp.float32(1.0)
+    lengths = jnp.array([s])
+    out_k = attn_mod.fp8_decode_attention(q, k, v, one, one, lengths, bs=128,
+                                          interpret=True)
+    out_r = ref.fp8_decode_attention_ref(q, k, v, one, one, lengths)
+    np.testing.assert_allclose(
+        np.asarray(out_k, np.float32), np.asarray(out_r, np.float32),
+        rtol=2e-2, atol=2e-2,
+    )
+
+
+def test_decode_attention_length_masking():
+    """Tokens past `lengths` must not contribute: poison them with huge values."""
+    q, kq, vq, ks, vs, _ = _mk_attn(22, b=1, kvh=1, g=2, d=32, s=256)
+    lengths = jnp.array([100])
+    vq_poison = vq.at[:, 100:].set(jnp.float32(448).astype(vq.dtype))
+    kq_poison = kq.at[:, 100:].set(jnp.float32(448).astype(kq.dtype))
+    out_p = attn_mod.fp8_decode_attention(q, kq_poison, vq_poison, ks, vs,
+                                          lengths, bs=128, interpret=True)
+    out_c = attn_mod.fp8_decode_attention(q, kq, vq, ks, vs, lengths, bs=128,
+                                          interpret=True)
+    np.testing.assert_array_equal(np.asarray(out_p, np.float32),
+                                  np.asarray(out_c, np.float32))
+
+
+@hypothesis.settings(max_examples=8, deadline=None)
+@hypothesis.given(
+    b=st.integers(1, 3),
+    kvh=st.sampled_from([1, 2, 4]),
+    g=st.sampled_from([1, 2, 8]),   # GQA group sizes
+    d=st.sampled_from([32, 64, 128]),
+    sb=st.integers(1, 3),
+)
+def test_property_decode_attention_sweep(b, kvh, g, d, sb):
+    s = sb * 128
+    q, kq, vq, ks, vs, lengths = _mk_attn(b * 1000 + kvh * 100 + g * 10 + sb,
+                                          b=b, kvh=kvh, g=g, d=d, s=s)
+    out_k = attn_mod.fp8_decode_attention(q, kq, vq, ks, vs, lengths, bs=128,
+                                          interpret=True)
+    out_r = ref.fp8_decode_attention_ref(q, kq, vq, ks, vs, lengths)
+    np.testing.assert_allclose(
+        np.asarray(out_k, np.float32), np.asarray(out_r, np.float32),
+        rtol=2e-2, atol=2e-2,
+    )
+
+
+def test_decode_attention_ops_padding():
+    """ops wrapper pads odd S."""
+    q, kq, vq, ks, vs, lengths = _mk_attn(23, b=1, kvh=1, g=2, d=32, s=200)
+    out = ops.fp8_decode_attention(q, kq, vq, ks, vs, lengths)
+    out_r = ref.fp8_decode_attention_ref(q, kq, vq, ks, vs, lengths)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(out_r, np.float32),
+        rtol=2e-2, atol=2e-2,
+    )

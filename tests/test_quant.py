@@ -1,0 +1,199 @@
+"""Unit + property tests for blockwise FP8 quantization (paper §2.1.1, §2.4.3)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    E4M3,
+    E4M3_MAX,
+    E5M2,
+    E5M2_MAX,
+    QuantizedTensor,
+    ScaleFormat,
+    dequantize,
+    qdq,
+    quantization_rel_error,
+    quantize_activation,
+    quantize_blockwise,
+    quantize_weight,
+    saturating_cast,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_saturating_cast_no_nan():
+    x = jnp.array([1e9, -1e9, 500.0, -500.0, 0.0, 1.5])
+    q = saturating_cast(x, E4M3)
+    assert not np.any(np.isnan(np.asarray(q, dtype=np.float32)))
+    np.testing.assert_array_equal(
+        np.asarray(q, np.float32), [448.0, -448.0, 448.0, -448.0, 0.0, 1.5]
+    )
+
+
+def test_saturating_cast_e5m2_range():
+    x = jnp.array([1e9, E5M2_MAX, -E5M2_MAX])
+    q = np.asarray(saturating_cast(x, E5M2), np.float32)
+    assert q[0] == E5M2_MAX and q[1] == E5M2_MAX and q[2] == -E5M2_MAX
+
+
+def test_weight_block_shape():
+    w = jnp.ones((256, 384))
+    qt = quantize_weight(w)
+    assert qt.data.shape == (256, 384)
+    assert qt.scales.shape == (2, 3)
+    assert qt.data.dtype == E4M3
+
+
+def test_weight_block_shape_nondivisible():
+    w = jax.random.normal(jax.random.key(0), (200, 130))
+    qt = quantize_weight(w)
+    assert qt.scales.shape == (2, 2)  # ceil(200/128), ceil(130/128)
+    err = quantization_rel_error(w, qt)
+    assert err < 0.04  # blockwise e4m3 keeps relative error small
+
+
+def test_stacked_weight_blocks():
+    w = jax.random.normal(jax.random.key(1), (3, 256, 256))  # layer-stacked
+    qt = quantize_weight(w)
+    assert qt.scales.shape == (3, 2, 2)
+    assert quantization_rel_error(w, qt) < 0.04
+
+
+def test_activation_rowwise_tiles():
+    x = jax.random.normal(jax.random.key(2), (4, 7, 384))
+    qt = quantize_activation(x)
+    assert qt.scales.shape == (4, 7, 3)
+    assert quantization_rel_error(x, qt) < 0.04
+
+
+def test_blockwise_beats_per_tensor_with_outlier():
+    """The paper's motivation for 128x128 blocks: an outlier inflates the
+    per-tensor scale until ordinary values flush to fp8 subnormals/zero, but
+    only poisons its own block under 128x128 quantization."""
+    key = jax.random.key(3)
+    w = jax.random.normal(key, (256, 256))
+    w = w.at[0, 0].set(3.0e5)  # outlier: per-tensor scale -> 670, 1.0 underflows
+    per_tensor = quantize_blockwise(w, (256, 256))
+    blockwise = quantize_weight(w)
+    mask = np.ones((256, 256), bool)
+    mask[0, 0] = False  # judge the error on the ordinary values
+    wf = np.asarray(w, np.float32)
+
+    def med_rel(qt):
+        deq = np.asarray(dequantize(qt, jnp.float32))
+        return np.median(np.abs(deq - wf)[mask] / np.maximum(np.abs(wf[mask]), 1e-6))
+
+    assert med_rel(blockwise) < med_rel(per_tensor) / 4
+
+
+def test_ue8m0_scales_are_powers_of_two():
+    w = jax.random.normal(jax.random.key(4), (256, 256)) * 3.7
+    qt = quantize_weight(w, scale_format=ScaleFormat.UE8M0)
+    scales = np.asarray(qt.scales)
+    log2 = np.log2(scales)
+    np.testing.assert_allclose(log2, np.round(log2), atol=1e-6)
+
+
+def test_ue8m0_never_overflows():
+    """UE8M0 rounds the scale *up*, so |x/scale| <= fp8 max always."""
+    w = jax.random.normal(jax.random.key(5), (256, 256)) * 100
+    qt = quantize_weight(w, scale_format=ScaleFormat.UE8M0)
+    assert not np.any(np.isnan(np.asarray(qt.data, np.float32)))
+
+
+def test_ue8m0_coarser_than_fp32():
+    """Paper §2.4.3 / Fig 12: fp32 scales give tighter alignment.
+
+    Measured finding (recorded in EXPERIMENTS.md): because E4M3 is itself a
+    float format, *mean* QDQ error is scale-invariant and indistinguishable
+    between formats; the UE8M0 penalty is in the *worst case* — rounding the
+    scale up pushes small values into fp8 subnormal range where mantissa bits
+    are lost.  So we assert the worst-case ordering, averaged over blocks."""
+    worst32, worst8 = [], []
+    for i in range(60):
+        mag = float(np.exp(np.sin(i * 1.7) * 2.0))  # deterministic log-spread
+        w = jax.random.normal(jax.random.key(100 + i), (128, 128)) * mag
+        wf = np.asarray(w, np.float32)
+        for fmt, acc in ((ScaleFormat.FP32, worst32), (ScaleFormat.UE8M0, worst8)):
+            deq = np.asarray(dequantize(quantize_weight(w, scale_format=fmt), jnp.float32))
+            rel = np.abs(deq - wf) / np.maximum(np.abs(wf), 1e-9)
+            acc.append(rel.max())
+    assert np.mean(worst8) > np.mean(worst32) * 1.05
+
+
+def test_qdq_idempotent():
+    """QDQ of an already-quantized tensor is exact (fp8 values are fixed points)."""
+    x = jax.random.normal(jax.random.key(7), (8, 256), dtype=jnp.float32)
+    once = qdq(x)
+    twice = qdq(once)
+    np.testing.assert_array_equal(np.asarray(once), np.asarray(twice))
+
+
+def test_qdq_under_jit_and_grad():
+    x = jax.random.normal(jax.random.key(8), (4, 256))
+    y = jax.jit(qdq)(x)
+    assert y.shape == x.shape and not np.any(np.isnan(np.asarray(y)))
+
+
+def test_zero_tensor():
+    qt = quantize_weight(jnp.zeros((128, 128)))
+    assert not np.any(np.isnan(np.asarray(qt.data, np.float32)))
+    np.testing.assert_array_equal(np.asarray(dequantize(qt, jnp.float32)), 0.0)
+
+
+def test_quantized_tensor_is_pytree():
+    qt = quantize_weight(jnp.ones((128, 128)))
+    mapped = jax.tree.map(lambda a: a, qt)
+    assert isinstance(mapped, QuantizedTensor)
+    leaves = jax.tree.leaves(qt)
+    assert len(leaves) == 2
+
+
+@hypothesis.settings(max_examples=25, deadline=None)
+@hypothesis.given(
+    rows=st.integers(1, 300),
+    cols=st.integers(1, 300),
+    scale=st.floats(1e-3, 1e3),
+    fmt=st.sampled_from([ScaleFormat.FP32, ScaleFormat.UE8M0]),
+)
+def test_property_quant_roundtrip_bounded_error(rows, cols, scale, fmt):
+    """Invariant: blockwise E4M3 relative roundtrip error is bounded (~2^-3)
+    for any shape/scale/format, and never produces NaN/Inf."""
+    x = np.asarray(
+        jax.random.normal(jax.random.key(rows * 301 + cols), (rows, cols))
+    ) * scale
+    qt = quantize_blockwise(jnp.asarray(x), (min(rows, 128), min(cols, 128)),
+                            scale_format=fmt)
+    deq = np.asarray(dequantize(qt, jnp.float32))
+    assert np.all(np.isfinite(deq))
+    denom = np.maximum(np.abs(x), 1e-6)
+    rel = np.abs(deq - x) / denom
+    # E4M3 has 3 mantissa bits -> elementwise rel err <= 2^-3 within a block
+    # whose amax sets the scale; ue8m0 can double the scale -> <= 2^-2.
+    bound = 0.0725 if fmt == ScaleFormat.FP32 else 0.145
+    assert np.percentile(rel, 99.9) <= bound * 1.05
+
+
+@hypothesis.settings(max_examples=15, deadline=None)
+@hypothesis.given(
+    n=st.integers(1, 4096),
+)
+def test_property_activation_tiles_any_length(n):
+    x = jax.random.normal(jax.random.key(n), (2, n))
+    qt = quantize_activation(x)
+    assert qt.scales.shape == (2, -(-n // 128))
+    assert np.all(np.isfinite(np.asarray(dequantize(qt, jnp.float32))))
+
+
+def test_e5m2_wider_range_than_e4m3():
+    """Paper §2.4.3: gradients need E5M2's range.  A value representable in
+    E5M2 but beyond E4M3's max must survive E5M2 QDQ unsaturated."""
+    g = jnp.array([[30000.0] * 128])
+    q5 = qdq(g, fp8_dtype=E5M2, block=(1, 128))
+    q4 = qdq(g, fp8_dtype=E4M3, block=(1, 128))
+    assert np.asarray(q5)[0, 0] == pytest.approx(30000.0, rel=0.25)
+    assert np.all(np.isfinite(np.asarray(q4)))

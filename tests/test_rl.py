@@ -1,0 +1,297 @@
+"""RL-stack tests: correction math, rollout engine, trainer loop, fault
+recovery, both calibration paradigms."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (
+    BF16_ROLLOUT,
+    FP8_LINEAR_ROLLOUT,
+    FULL_FP8_ROLLOUT,
+    PrecisionConfig,
+    RolloutCorrection,
+)
+from repro.data import tasks
+from repro.models import init_params
+from repro.rl import (
+    RLConfig,
+    RLTrainer,
+    SamplerConfig,
+    correction_weights,
+    dapo_token_loss,
+    gather_response_logps,
+    generate,
+    group_advantages,
+    mismatch_kl,
+    packed_sequences,
+    sync_policy_weights,
+    tis_weights,
+)
+from repro.rl.calibration import calibrate_kv_scales
+from repro.rl.loss import LossConfig
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _small_cfg(name="qwen3-8b", **kw):
+    base = dict(n_layers=2, d_model=64, d_ff=128, vocab_size=tasks.VOCAB_SIZE,
+                n_heads=4, n_kv_heads=2, d_head=16)
+    base.update(kw)
+    return get_config(name).reduced(**base)
+
+
+# ---------------------------------------------------------------------------
+# correction math
+# ---------------------------------------------------------------------------
+
+def test_tis_clipping():
+    lt = jnp.log(jnp.array([1.0, 4.0, 0.25]))
+    lr = jnp.log(jnp.array([1.0, 1.0, 1.0]))
+    w = tis_weights(lt, lr, clip=2.0)
+    np.testing.assert_allclose(np.asarray(w), [1.0, 2.0, 0.25], rtol=1e-6)
+
+
+def test_correction_dispatch():
+    lt = jnp.zeros((2, 3))
+    lr = jnp.zeros((2, 3)) - 1.0  # ratio e
+    w_none = correction_weights(lt, lr, PrecisionConfig(
+        correction=RolloutCorrection.NONE))
+    np.testing.assert_array_equal(np.asarray(w_none), 1.0)
+    w_tis = correction_weights(lt, lr, PrecisionConfig(
+        correction=RolloutCorrection.TIS, tis_clip=2.0))
+    np.testing.assert_allclose(np.asarray(w_tis), 2.0)
+    w_mis = correction_weights(lt, lr, PrecisionConfig(
+        correction=RolloutCorrection.MIS, mis_high=2.0))
+    np.testing.assert_array_equal(np.asarray(w_mis), 0.0)
+
+
+def test_mismatch_kl_nonnegative_and_zero_when_equal():
+    lp = jnp.log(jax.random.uniform(jax.random.key(0), (4, 8)))
+    mask = jnp.ones((4, 8))
+    m = mismatch_kl(lp, lp, mask)
+    assert float(m["mismatch_kl"]) == pytest.approx(0.0, abs=1e-7)
+    lp2 = lp + jax.random.normal(jax.random.key(1), lp.shape) * 0.1
+    m2 = mismatch_kl(lp, lp2, mask)
+    assert float(m2["mismatch_kl"]) > 0.0
+
+
+def test_group_advantages_zero_mean():
+    r = jnp.array([1.0, 0.0, 0.0, 0.0, 1.0, 1.0, 1.0, 0.0])
+    adv = group_advantages(r, 4)
+    g = np.asarray(adv).reshape(2, 4)
+    np.testing.assert_allclose(g.mean(axis=1), 0.0, atol=1e-6)
+    assert g[0, 0] > 0 and g[0, 1] < 0
+
+
+def test_dapo_loss_gradient_direction():
+    """Positive advantage must push logp of the sampled token up."""
+    logp = jnp.log(jnp.full((1, 4), 0.25))
+    adv = jnp.array([1.0])
+    mask = jnp.ones((1, 4))
+
+    def f(lp):
+        loss, _ = dapo_token_loss(lp, jax.lax.stop_gradient(lp),
+                                  jax.lax.stop_gradient(lp), adv, mask,
+                                  PrecisionConfig(), LossConfig())
+        return loss
+
+    g = jax.grad(f)(logp)
+    assert np.all(np.asarray(g) < 0)   # decreasing loss raises logp
+
+
+# ---------------------------------------------------------------------------
+# rollout engine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("precision", [BF16_ROLLOUT, FULL_FP8_ROLLOUT],
+                         ids=["bf16", "fp8"])
+def test_generate_shapes_and_determinism(precision):
+    cfg = _small_cfg()
+    params = init_params(cfg, jax.random.key(0))
+    roll, _ = sync_policy_weights(params, precision)
+    prompts = jnp.array([[tasks.BOS, 5, 6, 7, 0, 0],
+                         [tasks.BOS, 8, 9, 10, 11, 0]], jnp.int32)
+    plens = jnp.array([4, 5])
+    sampler = SamplerConfig(max_new_tokens=6)
+    t1 = generate(roll, prompts, plens, jax.random.key(3), cfg, precision,
+                  sampler)
+    t2 = generate(roll, prompts, plens, jax.random.key(3), cfg, precision,
+                  sampler)
+    assert t1.response_tokens.shape == (2, 6)
+    np.testing.assert_array_equal(np.asarray(t1.response_tokens),
+                                  np.asarray(t2.response_tokens))
+    assert np.all(np.asarray(t1.response_lengths) <= 6)
+    # logprobs are negative where mask is on
+    lp = np.asarray(t1.rollout_logps)
+    m = np.asarray(t1.response_mask)
+    assert np.all(lp[m > 0] <= 0)
+
+
+def test_generate_stops_at_eos():
+    """Force the emb/lm_head so EOS is argmax everywhere -> greedy decode
+    must stop after one token."""
+    cfg = _small_cfg()
+    params = init_params(cfg, jax.random.key(0))
+    params["lm_head"] = params["lm_head"].at[:, tasks.EOS].set(50.0)
+    prompts = jnp.array([[tasks.BOS, 5, 6, 7]], jnp.int32)
+    t = generate(params, prompts, jnp.array([4]), jax.random.key(0), cfg,
+                 BF16_ROLLOUT, SamplerConfig(max_new_tokens=8, temperature=0.0))
+    assert int(t.response_lengths[0]) == 1
+    assert int(t.response_tokens[0, 0]) == tasks.EOS
+    assert np.all(np.asarray(t.response_tokens)[0, 1:] == tasks.PAD)
+
+
+def test_packed_sequences_and_gather():
+    traj_tokens = jnp.array([[1, 5, 6, 0], [1, 7, 8, 9]], jnp.int32)
+    lens = jnp.array([3, 4])
+    resp = jnp.array([[11, 12, 2], [13, 2, 0]], jnp.int32)
+    mask = jnp.array([[1.0, 1, 1], [1, 1, 0]])
+    from repro.rl.rollout import Trajectory
+    traj = Trajectory(traj_tokens, lens, resp, mask,
+                      jnp.zeros((2, 3)), jnp.array([3, 2]), None, None)
+    packed = np.asarray(packed_sequences(traj))
+    np.testing.assert_array_equal(packed[0][:6], [1, 5, 6, 11, 12, 2])
+    np.testing.assert_array_equal(packed[1][:6], [1, 7, 8, 9, 13, 2])
+    # gather: fabricate logps = position index, check alignment
+    score_logps = jnp.tile(jnp.arange(6, dtype=jnp.float32)[None], (2, 1))
+    got = np.asarray(gather_response_logps(score_logps, traj))
+    np.testing.assert_array_equal(got[0], [2, 3, 4])     # L=3 -> idx 2,3,4
+    np.testing.assert_array_equal(got[1], [3, 4, 0])     # masked 3rd
+
+
+def test_fp8_rollout_differs_but_tracks_bf16():
+    """The quantized engine must be *close* to bf16 (small mismatch KL) but
+    not identical (nonzero KL) — the paper's premise."""
+    cfg = _small_cfg(d_model=128, d_ff=256, n_layers=2)
+    params = init_params(cfg, jax.random.key(1))
+    prompts = jnp.array([[tasks.BOS, 5, 6, 7, 14, 0]], jnp.int32)
+    plens = jnp.array([5])
+    outs = {}
+    for name, prec in (("bf16", BF16_ROLLOUT), ("fp8", FP8_LINEAR_ROLLOUT)):
+        roll, _ = sync_policy_weights(params, prec)
+        t = generate(roll, prompts, plens, jax.random.key(5), cfg, prec,
+                     SamplerConfig(max_new_tokens=4, temperature=0.0))
+        outs[name] = t
+    lp_b = np.asarray(outs["bf16"].rollout_logps)
+    lp_f = np.asarray(outs["fp8"].rollout_logps)
+    assert not np.array_equal(lp_b, lp_f)            # quantization moved it
+    assert np.abs(lp_b - lp_f).mean() < 0.5          # ...but not far
+
+
+def test_rrr_routing_capture():
+    cfg = _small_cfg("granite-moe-3b-a800m", n_layers=2)
+    params = init_params(cfg, jax.random.key(0))
+    prompts = jnp.array([[tasks.BOS, 5, 6, 7]], jnp.int32)
+    t = generate(params, prompts, jnp.array([4]), jax.random.key(0), cfg,
+                 BF16_ROLLOUT, SamplerConfig(max_new_tokens=4),
+                 want_routing=True)
+    assert t.routing is not None
+    pre = t.routing["prefill"]["s0"]
+    dec = t.routing["decode"]["s0"]
+    assert pre.shape == (2, 1, 4, cfg.top_k)   # (R, B, P, K)
+    assert dec.shape == (4, 2, 1, 1, cfg.top_k)
+
+
+# ---------------------------------------------------------------------------
+# calibration paradigms
+# ---------------------------------------------------------------------------
+
+def test_trainer_side_calibration_scales():
+    cfg = _small_cfg()
+    params = init_params(cfg, jax.random.key(0))
+    calib = {"tokens": jnp.array([[1, 5, 6, 7, 8, 9]], jnp.int32),
+             "lengths": jnp.array([6])}
+    scales = calibrate_kv_scales(params, calib, cfg)
+    assert "s0" in scales
+    assert scales["s0"]["k_scale"].shape == (2,)       # (R,)
+    assert np.all(np.asarray(scales["s0"]["k_scale"]) > 0)
+    # rollout with trainer-provided scales, no recalibration
+    prec = FULL_FP8_ROLLOUT.replace(calculate_kv_scales=False)
+    roll, _ = sync_policy_weights(params, prec)
+    t = generate(roll, calib["tokens"], calib["lengths"], jax.random.key(1),
+                 cfg, prec, SamplerConfig(max_new_tokens=4),
+                 kv_scales=scales)
+    got = np.asarray(t.kv_scales["s0"]["k_scale"])
+    np.testing.assert_allclose(got, np.asarray(scales["s0"]["k_scale"]),
+                               rtol=1e-6)  # scales survived untouched
+
+
+def test_inference_side_calibration_updates_scales():
+    cfg = _small_cfg()
+    params = init_params(cfg, jax.random.key(0))
+    prec = FULL_FP8_ROLLOUT  # calculate_kv_scales=True
+    roll, _ = sync_policy_weights(params, prec)
+    t = generate(roll, jnp.array([[1, 5, 6, 7]], jnp.int32), jnp.array([4]),
+                 jax.random.key(1), cfg, prec, SamplerConfig(max_new_tokens=2))
+    s = np.asarray(t.kv_scales["s0"]["k_scale"])
+    assert np.all(s > 0) and np.all(s != 1.0)   # recalibrated from amax
+
+
+# ---------------------------------------------------------------------------
+# trainer loop + fault recovery
+# ---------------------------------------------------------------------------
+
+def _mk_trainer(tmp=None, precision=FP8_LINEAR_ROLLOUT, **kw):
+    cfg = _small_cfg()
+    defaults = dict(precision=precision, prompt_batch=4, n_per_prompt=4,
+                    max_new_tokens=8, seed=0,
+                    ckpt_dir=str(tmp) if tmp else None, ckpt_every=2)
+    defaults.update(kw)
+    return RLTrainer(cfg, RLConfig(**defaults))
+
+
+def test_trainer_step_metrics():
+    tr = _mk_trainer()
+    m = tr.train_step()
+    for k in ("loss", "reward_mean", "accuracy", "mismatch_kl",
+              "response_len_mean", "grad_norm", "rollout_tokens_per_s"):
+        assert k in m, k
+    assert np.isfinite(m["loss"])
+    assert m["mismatch_kl"] >= 0
+
+
+def test_trainer_bf16_baseline_zero_kl():
+    """BF16 rollout scored by the same BF16 model: tiny KL (only numerics
+    path differences: incremental cache vs teacher-forced)."""
+    tr = _mk_trainer(precision=BF16_ROLLOUT)
+    m = tr.train_step()
+    assert m["mismatch_kl"] < 5e-2
+
+
+def test_trainer_fp8_kl_exceeds_bf16():
+    m_bf16 = _mk_trainer(precision=BF16_ROLLOUT).train_step()
+    m_fp8 = _mk_trainer(precision=FULL_FP8_ROLLOUT).train_step()
+    assert m_fp8["mismatch_kl"] > m_bf16["mismatch_kl"]
+
+
+def test_trainer_checkpoint_restart_bitwise(tmp_path):
+    """Kill-and-restart: a restored trainer continues bit-identically."""
+    tr1 = _mk_trainer(tmp_path)
+    for _ in range(2):
+        tr1.train_step()          # ckpt_every=2 -> checkpoint at step 2
+    m_next = tr1.train_step()     # step 3 on the original
+
+    tr2 = _mk_trainer(tmp_path)   # fresh process analogue
+    assert tr2.restore_checkpoint()
+    assert tr2.step_idx == 2
+    m_resume = tr2.train_step()   # step 3 replayed
+    assert m_resume["reward_mean"] == pytest.approx(m_next["reward_mean"])
+    assert m_resume["loss"] == pytest.approx(m_next["loss"], rel=1e-5)
+
+
+def test_trainer_side_calibration_mode_runs():
+    tr = _mk_trainer(precision=FULL_FP8_ROLLOUT, calibration="trainer")
+    m1 = tr.train_step()
+    assert tr.kv_scales is not None
+    m2 = tr.train_step()          # second step uses trainer scales
+    assert np.isfinite(m2["loss"])
+
+
+def test_trainer_evaluate():
+    tr = _mk_trainer()
+    acc = tr.evaluate(n_problems=8)
+    assert 0.0 <= acc <= 1.0

@@ -1,0 +1,122 @@
+"""Serving-engine tests: capacity accounting, preemption, fp8-KV benefits."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import BF16_ROLLOUT, FULL_FP8_ROLLOUT, FP8_KV_ONLY_ROLLOUT
+from repro.data import tasks
+from repro.models import init_params
+from repro.rl import sync_policy_weights
+from repro.serving import ServingEngine, kv_bytes_per_token
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _cfg():
+    return get_config("qwen3-8b").reduced(
+        n_layers=2, d_model=64, d_ff=128, vocab_size=tasks.VOCAB_SIZE,
+        n_heads=4, n_kv_heads=2, d_head=16)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = _cfg()
+    params = init_params(cfg, jax.random.key(0))
+    return cfg, params
+
+
+def _prompts(n, rng_seed=0):
+    rng = np.random.default_rng(rng_seed)
+    out = []
+    for _ in range(n):
+        p = rng.integers(4, 19, size=int(rng.integers(4, 9)))
+        out.append(np.concatenate([[tasks.BOS], p]).astype(np.int32))
+    return out
+
+
+def test_kv_bytes_halve_under_fp8():
+    cfg = _cfg()
+    b16 = kv_bytes_per_token(cfg, BF16_ROLLOUT)
+    f8 = kv_bytes_per_token(cfg, FULL_FP8_ROLLOUT)
+    assert b16 == 2 * f8 > 0
+
+
+def test_engine_completes_all_requests(setup):
+    cfg, params = setup
+    eng = ServingEngine(params, cfg, BF16_ROLLOUT, max_slots=4,
+                        max_seq_len=32)
+    for i, p in enumerate(_prompts(6)):
+        eng.submit(p, max_new=6, rid=i)
+    report = eng.run(max_steps=200)
+    assert len(report.completed) == 6
+    assert report.emitted_tokens > 0
+    assert 0 < report.mean_occupancy <= 1.0
+
+
+def test_engine_respects_budget_admission(setup):
+    """A budget for ~1 request must serialize execution (occupancy ~1 slot)."""
+    cfg, params = setup
+    per_tok = kv_bytes_per_token(cfg, BF16_ROLLOUT)
+    eng = ServingEngine(params, cfg, BF16_ROLLOUT, max_slots=4,
+                        max_seq_len=32, kv_budget_bytes=per_tok * 20)
+    for i, p in enumerate(_prompts(3)):
+        eng.submit(p, max_new=6, rid=i)
+    report = eng.run(max_steps=300)
+    assert len(report.completed) == 3
+    assert report.mean_occupancy <= 0.3 + 1e-6  # ~1 of 4 slots at a time
+
+
+def test_fp8_kv_doubles_admitted_concurrency(setup):
+    """Same byte budget: fp8 KV admits ~2x the tokens (paper §2.3.2)."""
+    cfg, params = setup
+    budget = kv_bytes_per_token(cfg, BF16_ROLLOUT) * 40   # ~2 bf16 requests
+    reports = {}
+    for name, prec in (("bf16", BF16_ROLLOUT), ("fp8", FP8_KV_ONLY_ROLLOUT)):
+        roll, _ = sync_policy_weights(params, prec)
+        eng = ServingEngine(roll, cfg, prec, max_slots=8, max_seq_len=32,
+                            kv_budget_bytes=budget)
+        for i, p in enumerate(_prompts(8)):
+            eng.submit(p, max_new=8, rid=i)
+        reports[name] = eng.run(max_steps=400)
+    assert reports["fp8"].budget_tokens == 2 * reports["bf16"].budget_tokens
+    assert len(reports["fp8"].completed) == 8
+    assert len(reports["bf16"].completed) == 8
+    # fp8 runs more requests concurrently -> fewer decode steps end-to-end
+    assert reports["fp8"].mean_occupancy > reports["bf16"].mean_occupancy
+    assert reports["fp8"].useful_token_rate > reports["bf16"].useful_token_rate
+
+
+def test_preemption_requeues_and_counts(setup):
+    """Oversubscribed: max_new larger than admission estimate triggers
+    preemption; preempted work is counted and requests still finish."""
+    cfg, params = setup
+    per_tok = kv_bytes_per_token(cfg, BF16_ROLLOUT)
+
+    eng = ServingEngine(params, cfg, BF16_ROLLOUT, max_slots=4,
+                        max_seq_len=48, kv_budget_bytes=per_tok * 30)
+    # lie about max_new at admission time by submitting in a tight budget:
+    # admission reserves prompt+max_new, so force over-budget via shrink
+    for i, p in enumerate(_prompts(4)):
+        eng.submit(p, max_new=6, rid=i)
+    # manually shrink the budget after admission begins
+    report_budget = eng.budget_tokens
+    eng._try_admit()
+    eng.budget_tokens = report_budget // 2
+    report = eng.run(max_steps=400)
+    assert report.preemptions >= 1
+    assert report.wasted_tokens >= 0
+    assert len(report.completed) == 4      # everyone eventually finishes
+
+
+def test_engine_fp8_scales_calibrated_once(setup):
+    cfg, params = setup
+    prec = FULL_FP8_ROLLOUT
+    roll, _ = sync_policy_weights(params, prec)
+    eng = ServingEngine(roll, cfg, prec, max_slots=2, max_seq_len=32)
+    for i, p in enumerate(_prompts(2)):
+        eng.submit(p, max_new=4, rid=i)
+    eng.run(max_steps=100)
+    s = np.asarray(eng.cache["slots"]["s0"]["kv"].k_scale)
+    assert np.all(s > 0) and np.all(s != 1.0)

@@ -1,0 +1,186 @@
+"""Optimizer / checkpoint / data-pipeline tests (fault-tolerance story)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer
+from repro.core.quant import QuantizedTensor
+from repro.data import PromptPipeline, tasks
+from repro.optim import AdamWConfig, global_norm, init, state_bytes, update
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def _quad_problem():
+    key = jax.random.key(0)
+    target = jax.random.normal(key, (64, 32))
+    params = {"w": jnp.zeros((64, 32)), "b": jnp.zeros((32,))}
+
+    def loss(p):
+        return jnp.mean((p["w"] + p["b"] - target) ** 2)
+
+    return params, loss
+
+
+@pytest.mark.parametrize("fp8", [False, True])
+def test_adamw_converges(fp8):
+    params, loss = _quad_problem()
+    cfg = AdamWConfig(lr=3e-2, fp8_moments=fp8, grad_clip=0.0)
+    state = init(params, cfg)
+    l0 = float(loss(params))
+
+    @jax.jit
+    def step(p, s):
+        l, g = jax.value_and_grad(loss)(p)
+        p, s, stats = update(p, g, s, cfg)
+        return p, s, l
+
+    for _ in range(200):
+        params, state, l = step(params, state)
+    assert float(l) < l0 * 0.02, (l0, float(l))
+
+
+def test_fp8_moments_storage_and_bytes():
+    params = {"w": jnp.zeros((256, 256))}
+    cfg8 = AdamWConfig(fp8_moments=True)
+    cfg32 = AdamWConfig(fp8_moments=False)
+    s8, s32 = init(params, cfg8), init(params, cfg32)
+    assert isinstance(s8.m["w"], QuantizedTensor)
+    # ~4x smaller moment storage (1B + scales vs 4B)
+    assert state_bytes(s8) < 0.3 * state_bytes(s32)
+
+
+def test_grad_clipping():
+    params = {"w": jnp.ones((8,))}
+    cfg = AdamWConfig(lr=1.0, grad_clip=1.0)
+    state = init(params, cfg)
+    huge = {"w": jnp.full((8,), 1e6)}
+    _, _, stats = update(params, huge, state, cfg)
+    assert float(stats["clip_scale"]) < 1e-5
+    assert float(global_norm(huge)) > 1e6
+
+
+def test_warmup_schedule():
+    params = {"w": jnp.ones((4,))}
+    cfg = AdamWConfig(lr=1e-2, warmup_steps=10)
+    state = init(params, cfg)
+    _, state, stats0 = update(params, params, state, cfg)
+    assert float(stats0["lr"]) == pytest.approx(1e-3)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing: atomicity, retention, resume, elastic reshape, fp8 payloads
+# ---------------------------------------------------------------------------
+
+def _tree():
+    return {
+        "params": {"w": jax.random.normal(jax.random.key(0), (32, 16)),
+                   "e4m3": jnp.ones((8, 8), jnp.float8_e4m3fn)},
+        "opt": {"m": jnp.zeros((32, 16)), "step": jnp.int32(7)},
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    tree = _tree()
+    ck.save(10, tree, extra={"cursor": {"step": 3}})
+    restored, extra, step = ck.restore(tree)
+    assert step == 10 and extra["cursor"]["step"] == 3
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_retention_and_latest(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    tree = _tree()
+    for s in (1, 2, 3, 4):
+        ck.save(s, tree)
+    assert ck.steps() == [3, 4]
+    assert ck.latest_step() == 4
+
+
+def test_checkpoint_crash_safety(tmp_path):
+    """A stale .tmp dir (simulated crash mid-write) must not be visible and
+    must be cleaned by the next save."""
+    ck = Checkpointer(str(tmp_path), keep=3)
+    tree = _tree()
+    ck.save(1, tree)
+    os.makedirs(str(tmp_path / "step_2.tmp"))
+    with open(str(tmp_path / "step_2.tmp" / "junk"), "w") as f:
+        f.write("partial")
+    assert ck.latest_step() == 1          # tmp not visible
+    ck.save(3, tree)
+    assert not os.path.exists(str(tmp_path / "step_2.tmp"))
+    assert ck.steps() == [1, 3]
+
+
+def test_checkpoint_uncommitted_ignored(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=3)
+    tree = _tree()
+    ck.save(5, tree)
+    # simulate a rename that happened but COMMITTED missing (torn write)
+    os.makedirs(str(tmp_path / "step_9"))
+    assert ck.latest_step() == 5
+
+
+def test_elastic_resume_resharding(tmp_path):
+    """Checkpoints store unsharded arrays; a restart may device_put them
+    with a different mesh (elastic scaling).  Simulated here by restoring
+    and re-sharding to a 'different DP' layout = plain reshape of batch."""
+    ck = Checkpointer(str(tmp_path))
+    tree = {"w": jax.random.normal(jax.random.key(1), (16, 8))}
+    ck.save(1, tree)
+    restored, _, _ = ck.restore(tree)
+    # new "mesh": just verify restored arrays are plain numpy, shardable
+    assert isinstance(restored["w"], np.ndarray)
+    y = jax.device_put(restored["w"])  # current topology decides placement
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(tree["w"]))
+
+
+# ---------------------------------------------------------------------------
+# data pipeline + rewards
+# ---------------------------------------------------------------------------
+
+def test_prompt_pipeline_deterministic_resume():
+    p1 = PromptPipeline(batch_size=4, seed=123)
+    batches = [p1.next_batch() for _ in range(5)]
+    cursor = p1.state_dict()
+    after = [p1.next_batch() for _ in range(3)]
+
+    p2 = PromptPipeline(batch_size=4)
+    p2.load_state_dict(cursor)
+    resumed = [p2.next_batch() for _ in range(3)]
+    for a, b in zip(after, resumed):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+        assert [x.answer for x in a.problems] == [x.answer for x in b.problems]
+    del batches
+
+
+def test_reward_exact_match():
+    rng = np.random.default_rng(0)
+    prob = tasks.sample_problem(rng)
+    good = tasks.solution_ids(prob)
+    assert tasks.reward_fn(prob, good) == 1.0
+    # wrong digits -> partial credit
+    wrong = [tasks.ANS] + tasks.encode("7" * len(prob.answer)) + [tasks.EOS]
+    r = tasks.reward_fn(prob, wrong)
+    assert r in (0.1, 1.0)
+    # garbage -> 0
+    assert tasks.reward_fn(prob, [5, 6, 7]) == 0.0
+    # missing EOS -> 0
+    assert tasks.reward_fn(prob, [tasks.ANS] + tasks.encode(prob.answer)) == 0.0
+
+
+def test_prompts_fit_vocab():
+    p = PromptPipeline(batch_size=8, seed=1)
+    b = p.next_batch()
+    assert b.tokens.max() < tasks.VOCAB_SIZE
+    assert (b.lengths > 2).all()

@@ -1,0 +1,33 @@
+"""Version-compat shims for JAX APIs that moved between releases.
+
+`shard_map` graduated from `jax.experimental.shard_map` to a top-level
+`jax.shard_map` (and its `check_rep` kwarg was renamed `check_vma`).  This
+repo supports both spellings so the same code runs on the pinned container
+JAX and on current releases.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+
+try:                                    # current JAX: top-level export
+    from jax import shard_map as _shard_map
+except ImportError:                     # older JAX: experimental namespace
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_ACCEPTS_CHECK_VMA = "check_vma" in inspect.signature(_shard_map).parameters
+
+
+@functools.wraps(_shard_map)
+def shard_map(*args, **kwargs):
+    """`jax.shard_map` accepting either `check_vma` or `check_rep`."""
+    if _ACCEPTS_CHECK_VMA:
+        if "check_rep" in kwargs:
+            kwargs["check_vma"] = kwargs.pop("check_rep")
+    else:
+        if "check_vma" in kwargs:
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+    return _shard_map(*args, **kwargs)
+
+
+__all__ = ["shard_map"]

@@ -20,8 +20,9 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, NamedSharding
+
+from repro.distributed.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 

@@ -93,7 +93,16 @@ class ShardingRules:
         # (pattern, spec builder (ndim-agnostic from the right))
         (r"\bemb\b",               ("tp", "dpz")),        # vocab-parallel
         (r"lm_head",               ("dpz", "tp")),        # column-parallel
-        (r"\bwq\b|\bwk\b|\bwv\b",  ("dpz", "tp")),        # column-parallel
+        (r"\bwq\b",                ("dpz", "tp")),        # column-parallel
+        # KV projections: ZeRO only, no TP.  When kvh < tp the activation
+        # rule ("act_kv") replicates K/V over the model axis anyway, so a
+        # column-parallel wk/wv would be gathered right back — and the
+        # scan-over-layers + tp-sharded-fused-KV-dim combination is observed
+        # to MISCOMPILE under GSPMD on CPU (sharded logits diverge by ~0.5
+        # from the single-device forward; exact when the layer scan is
+        # unrolled).  wk/wv are the smallest projections, so dropping their
+        # TP axis costs little compute parallelism.
+        (r"\bwk\b|\bwv\b",         ("dpz", None)),
         (r"\bwo\b",                ("tp", "dpz")),        # row-parallel
         (r"\bwg\b|\bwu\b",         ("dpz", "tp")),
         (r"\bwd\b",                ("tp", "dpz")),

@@ -139,3 +139,127 @@ def fp8_decode_attention(
         ],
         interpret=interpret,
     )(q, k_cache, v_cache, ks, vs, lengths2)
+
+
+# ---------------------------------------------------------------------------
+# Paged variant: KV lives in a block pool, indexed through per-sequence
+# block tables (vLLM PagedAttention).  The tables ride in as a
+# scalar-prefetch operand so the K/V BlockSpec index_maps can translate
+# (sequence, logical block) -> physical pool row before each DMA — the
+# gather never materializes a contiguous per-sequence copy in HBM.
+# ---------------------------------------------------------------------------
+
+
+def _paged_decode_attn_kernel(
+    tbl_ref,      # scalar-prefetch (B, W) int32 physical block ids
+    q_ref,        # (1, 1, G, D)
+    k_ref,        # (1, BS, 1, D) fp8 — pool row tbl[b, w]
+    v_ref,        # (1, BS, 1, D) fp8
+    ks_ref,       # (1, 1) f32
+    vs_ref,       # (1, 1) f32
+    len_ref,      # (1, 1) int32
+    o_ref,        # (1, 1, G, D)
+    m_ref,        # scratch (G, 1) f32
+    l_ref,        # scratch (G, 1) f32
+    acc_ref,      # scratch (G, D) f32
+    *,
+    bs: int,
+    n_w: int,
+    sm_scale: float,
+):
+    w = pl.program_id(2)
+
+    @pl.when(w == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                       # (G, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32) * ks_ref[0, 0]  # (BS, D)
+    v = v_ref[0, :, 0, :].astype(jnp.float32) * vs_ref[0, 0]  # (BS, D)
+
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * sm_scale                                              # (G, BS)
+
+    # logical position of this block's tokens = w * bs + offset; trash-block
+    # reads (unmapped table entries) sit past `lengths` and mask to -inf
+    pos = w * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    valid = pos < len_ref[0, 0]
+    scores = jnp.where(valid, scores, _NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.max(scores, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new)
+    p = jnp.where(valid, p, 0.0)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(w == n_w - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(
+            o_ref.dtype
+        )
+
+
+@functools.partial(jax.jit, static_argnames=("sm_scale", "interpret"))
+def fp8_paged_decode_attention(
+    q: jax.Array,             # (B, KVH, G, D) bf16
+    k_pool: jax.Array,        # (N, BS, KVH, D) fp8 (or bf16)
+    v_pool: jax.Array,        # (N, BS, KVH, D)
+    k_scale: jax.Array,       # () or (1,) f32
+    v_scale: jax.Array,       # () or (1,) f32
+    block_tables: jax.Array,  # (B, W) int32 PHYSICAL pool rows (pre-mapped:
+                              # unmapped entries must point at a zero block)
+    lengths: jax.Array,       # (B,) int32
+    *,
+    sm_scale: float | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    b, kvh, g, d = q.shape
+    n, bs, kvh2, d2 = k_pool.shape
+    b2, n_w = block_tables.shape
+    assert (kvh, d, b) == (kvh2, d2, b2), (q.shape, k_pool.shape,
+                                           block_tables.shape)
+    if sm_scale is None:
+        sm_scale = 1.0 / (d ** 0.5)
+
+    kernel = functools.partial(_paged_decode_attn_kernel, bs=bs, n_w=n_w,
+                               sm_scale=sm_scale)
+    ks = jnp.asarray(k_scale, jnp.float32).reshape(1, 1)
+    vs = jnp.asarray(v_scale, jnp.float32).reshape(1, 1)
+    lengths2 = lengths.astype(jnp.int32).reshape(b, 1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, kvh, n_w),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda i, h, w, tbl: (i, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, d),
+                         lambda i, h, w, tbl: (tbl[i, w], 0, h, 0)),
+            pl.BlockSpec((1, bs, 1, d),
+                         lambda i, h, w, tbl: (tbl[i, w], 0, h, 0)),
+            pl.BlockSpec((1, 1), lambda i, h, w, tbl: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, h, w, tbl: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, h, w, tbl: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda i, h, w, tbl: (i, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+    )
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, d), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), q, k_pool, v_pool, ks, vs, lengths2)

@@ -100,6 +100,20 @@ def fp8_matmul(x_q: QuantizedTensor, w_q: QuantizedTensor,
     return y[:m, :n].reshape(xshape[:-1] + (n,))
 
 
+def fp8_paged_decode_attention(q, k_pool, v_pool, k_scale, v_scale,
+                               block_tables, lengths):
+    """PagedAttention decode over an fp8 block pool.
+
+    `block_tables` must already hold *physical* pool rows (the models layer
+    maps unmapped -1 entries to the trash block before calling in).  The
+    pool's block size is the kernel's S tile, so no padding is needed —
+    blocks are tile-sized by construction.
+    """
+    return _attn.fp8_paged_decode_attention(
+        q, k_pool, v_pool, k_scale, v_scale, block_tables, lengths,
+        interpret=_interpret())
+
+
 def fp8_decode_attention(q, k_cache, v_cache, k_scale, v_scale, lengths,
                          bs: int = _attn.DEFAULT_BS):
     """FlashDecoding over fp8 KV.  Pads S to a block multiple; padded

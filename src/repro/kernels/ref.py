@@ -82,3 +82,19 @@ def fp8_decode_attention_ref(q, k_cache, v_cache, k_scale, v_scale, lengths,
     p = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhgs,bshd->bhgd", p, vf)
     return out.astype(q.dtype)
+
+
+def fp8_paged_decode_attention_ref(q, k_pool, v_pool, k_scale, v_scale,
+                                   block_tables, lengths, sm_scale=None):
+    """Paged decode attention oracle: gather pool rows through the block
+    table into logical order, then run the contiguous oracle.
+
+    q (B,KVH,G,D); pools (N,BS,KVH,D); block_tables (B,W) physical rows.
+    """
+    b = q.shape[0]
+    w, bs = block_tables.shape[1], k_pool.shape[1]
+    kvh, d = k_pool.shape[2], k_pool.shape[3]
+    k_cache = k_pool[block_tables].reshape(b, w * bs, kvh, d)
+    v_cache = v_pool[block_tables].reshape(b, w * bs, kvh, d)
+    return fp8_decode_attention_ref(q, k_cache, v_cache, k_scale, v_scale,
+                                    lengths, sm_scale=sm_scale)

@@ -28,6 +28,12 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--slots", type=int, default=8)
     ap.add_argument("--budget-tokens", type=int, default=None)
+    ap.add_argument("--block-size", type=int, default=4,
+                    help="paged KV block size in tokens")
+    ap.add_argument("--admission", choices=("reserve", "ondemand"),
+                    default="reserve",
+                    help="reserve: worst-case block reservation; "
+                         "ondemand: vLLM-style growth + swap preemption")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -44,7 +50,9 @@ def main(argv=None):
             kv_bytes_per_token(cfg, precision), 1)
     eng = ServingEngine(rollout_params, cfg, precision,
                         max_slots=args.slots, max_seq_len=64,
-                        kv_budget_bytes=budget, seed=args.seed)
+                        kv_budget_bytes=budget, seed=args.seed,
+                        block_size=args.block_size,
+                        admission=args.admission)
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):
         prob = tasks.sample_problem(rng)
@@ -54,6 +62,8 @@ def main(argv=None):
         "completed": len(report.completed),
         "steps": report.steps,
         "preemptions": report.preemptions,
+        "swap_outs": report.swap_outs,
+        "swap_ins": report.swap_ins,
         "wasted_tokens": report.wasted_tokens,
         "emitted_tokens": report.emitted_tokens,
         "mean_occupancy": round(report.mean_occupancy, 4),

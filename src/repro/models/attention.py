@@ -57,6 +57,76 @@ def init_kv_cache(batch: int, max_len: int, n_kv_heads: int, d_head: int,
     )
 
 
+class PagedKVCache(NamedTuple):
+    """Single-layer *paged* KV cache: a pool of fixed-size token blocks
+    shared by all sequences, addressed through per-sequence block tables
+    (vLLM's PagedAttention layout).
+
+    The pool carries one extra block at index `num_blocks` — the *trash
+    block*: writes for invalid table entries (-1) and padded prompt
+    positions are routed there so a fused scatter needs no branching, and
+    reads from it are masked out by `lengths`.
+    """
+
+    k: jax.Array          # (N+1, BS, KVH, D) fp8 or bf16; row N = trash
+    v: jax.Array          # (N+1, BS, KVH, D)
+    k_scale: jax.Array    # () f32 (per-layer, shared by every block)
+    v_scale: jax.Array    # () f32
+
+    @property
+    def quantized(self) -> bool:
+        return self.k.dtype in (jnp.float8_e4m3fn, jnp.float8_e5m2)
+
+    @property
+    def block_size(self) -> int:
+        return self.k.shape[1]
+
+    @property
+    def num_blocks(self) -> int:
+        return self.k.shape[0] - 1          # minus the trash block
+
+
+def init_paged_kv_cache(num_blocks: int, block_size: int, n_kv_heads: int,
+                        d_head: int, precision: PrecisionConfig,
+                        dtype=jnp.bfloat16) -> PagedKVCache:
+    kv_dtype = E4M3 if precision.kv_quantized else dtype
+    shape = (num_blocks + 1, block_size, n_kv_heads, d_head)
+    return PagedKVCache(
+        k=jnp.zeros(shape, kv_dtype),
+        v=jnp.zeros(shape, kv_dtype),
+        k_scale=jnp.ones((), jnp.float32),
+        v_scale=jnp.ones((), jnp.float32),
+    )
+
+
+def _paged_physical(cache: PagedKVCache, block_tables: jax.Array) -> jax.Array:
+    """Map logical table entries to physical pool rows (-1 -> trash)."""
+    trash = cache.k.shape[0] - 1
+    return jnp.where(block_tables < 0, trash, block_tables)
+
+
+def paged_write(cache: PagedKVCache, block_tables: jax.Array,
+                positions: jax.Array, valid: jax.Array,
+                kq: jax.Array, vq: jax.Array) -> PagedKVCache:
+    """Scatter quantized K/V rows into the pool through the block table.
+
+    block_tables (B, W); positions (B, S) token positions; valid (B, S)
+    write mask (invalid rows land in the trash block); kq/vq (B, S, KVH, D)
+    already in the cache dtype.
+    """
+    bs = cache.block_size
+    w = block_tables.shape[1]
+    blk = jnp.clip(positions // bs, 0, w - 1)
+    off = positions % bs
+    entry = jnp.take_along_axis(block_tables, blk, axis=1)      # (B, S)
+    trash = cache.k.shape[0] - 1
+    phys = jnp.where(jnp.logical_and(valid, entry >= 0), entry, trash)
+    return cache._replace(
+        k=cache.k.at[phys, off].set(kq),
+        v=cache.v.at[phys, off].set(vq),
+    )
+
+
 def init_attn_params(keygen, cfg, dtype=jnp.bfloat16, cross: bool = False) -> dict:
     d, h, kvh, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
     p = {
@@ -292,8 +362,14 @@ def attention_prefill(
     lengths: Optional[jax.Array] = None,   # (B,) valid prompt lengths
     positions: Optional[jax.Array] = None,
     use_rope: bool = True,
+    block_tables: Optional[jax.Array] = None,   # (B, W) paged cache only
 ):
-    """Causal attention over the prompt; writes the cache at [0:S)."""
+    """Causal attention over the prompt; writes the cache at [0:S).
+
+    With a `PagedKVCache` the write scatters through `block_tables`;
+    positions past `lengths` (prompt padding) land in the trash block so a
+    shared pool is never polluted by another sequence's padding.
+    """
     b, s, _ = x.shape
     q, k, v = _project_qkv(x, params, cfg, precision)
     if positions is None:
@@ -303,10 +379,17 @@ def attention_prefill(
         k = apply_rope(k, positions, cfg.rope_theta)
 
     kq, vq, cache = _quantize_kv(k, v, cache, precision, recalibrate=True)
-    cache = cache._replace(
-        k=jax.lax.dynamic_update_slice(cache.k, kq, (0, 0, 0, 0)),
-        v=jax.lax.dynamic_update_slice(cache.v, vq, (0, 0, 0, 0)),
-    )
+    if isinstance(cache, PagedKVCache):
+        assert block_tables is not None, "paged prefill needs block_tables"
+        pos = jnp.broadcast_to(positions, (b, s))
+        valid = jnp.ones((b, s), bool) if lengths is None \
+            else pos < lengths[:, None]
+        cache = paged_write(cache, block_tables, pos, valid, kq, vq)
+    else:
+        cache = cache._replace(
+            k=jax.lax.dynamic_update_slice(cache.k, kq, (0, 0, 0, 0)),
+            v=jax.lax.dynamic_update_slice(cache.v, vq, (0, 0, 0, 0)),
+        )
 
     # The model consumes what the cache holds: dequantize the quantized K/V
     # so prefill logits match decode-time numerics (train-inference mismatch
@@ -337,6 +420,7 @@ def attention_decode(
     *,
     use_rope: bool = True,
     use_kernel: bool = False,
+    block_tables: Optional[jax.Array] = None,   # (B, W) paged cache only
 ):
     """One decode step: append K/V, attend over [0:lengths]+self."""
     b = x.shape[0]
@@ -348,6 +432,13 @@ def attention_decode(
         k = apply_rope(k, pos, cfg.rope_theta)
 
     kq, vq, cache = _quantize_kv(k, v, cache, precision, recalibrate=False)
+    if isinstance(cache, PagedKVCache):
+        assert block_tables is not None, "paged decode needs block_tables"
+        cache = paged_write(cache, block_tables, lengths[:, None],
+                            jnp.ones((b, 1), bool), kq, vq)
+        return _paged_attention_over_table(
+            x, q, cache, block_tables, lengths + 1, params, precision, cfg,
+            use_kernel=use_kernel)
     batch_idx = jnp.arange(b)
     cache = cache._replace(
         k=cache.k.at[batch_idx, lengths].set(kq[:, 0]),
@@ -375,6 +466,49 @@ def attention_decode(
             if cache.quantized else v_raw
         s_max = cache.k.shape[1]
         mask = (jnp.arange(s_max)[None] < new_lengths[:, None])[:, None, :]
+        out = _sdpa(q, k_all, v_all, mask, precision, cfg)
+    return linear(out, params["wo"], precision=precision), cache
+
+
+def _paged_attention_over_table(
+    x: jax.Array,                # (B, 1, D) current-token hidden
+    q: jax.Array,                # (B, 1, H, Dh) roped query
+    cache: PagedKVCache,
+    block_tables: jax.Array,     # (B, W)
+    new_lengths: jax.Array,      # (B,) lengths AFTER the append
+    params: dict,
+    precision: PrecisionConfig,
+    cfg,
+    *,
+    use_kernel: bool = False,
+):
+    """Attend one query token over the K/V reachable through `block_tables`.
+
+    The gathered view is (B, W*BS, KVH, D) in *logical* order — block j of
+    a sequence covers positions [j*BS, (j+1)*BS) — so the standard length
+    mask applies unchanged.  Invalid table entries read the trash block and
+    are masked by `new_lengths`.
+    """
+    b, _, h, dh = q.shape
+    kvh = cache.k.shape[2]
+    phys = _paged_physical(cache, block_tables)                  # (B, W)
+    if use_kernel:
+        from repro.kernels import ops
+        g = h // kvh
+        out = ops.fp8_paged_decode_attention(
+            q.reshape(b, kvh, g, dh).astype(jnp.bfloat16),
+            cache.k, cache.v, cache.k_scale, cache.v_scale, phys,
+            new_lengths,
+        ).reshape(b, 1, h * dh).astype(x.dtype)
+    else:
+        w, bs = block_tables.shape[1], cache.block_size
+        k_raw = cache.k[phys].reshape(b, w * bs, kvh, dh)
+        v_raw = cache.v[phys].reshape(b, w * bs, kvh, dh)
+        k_all = dequantize_per_tensor(k_raw, cache.k_scale, x.dtype) \
+            if cache.quantized else k_raw
+        v_all = dequantize_per_tensor(v_raw, cache.v_scale, x.dtype) \
+            if cache.quantized else v_raw
+        mask = (jnp.arange(w * bs)[None] < new_lengths[:, None])[:, None, :]
         out = _sdpa(q, k_all, v_all, mask, precision, cfg)
     return linear(out, params["wo"], precision=precision), cache
 

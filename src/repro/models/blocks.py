@@ -90,6 +90,7 @@ def apply_slot_full(
     prefix_len=0,
     forced_topk=None,
     use_rope=True,
+    block_tables=None,             # (B, W) when kv_cache is paged
 ):
     """Returns (x, aux_dict, new_kv_cache, new_ssm_state)."""
     aux = {}
@@ -102,7 +103,8 @@ def apply_slot_full(
         if kv_cache is not None:
             h, new_kv = attn_mod.attention_prefill(
                 xn, p, cfg, kv_cache, precision, lengths=lengths,
-                positions=positions, use_rope=use_rope)
+                positions=positions, use_rope=use_rope,
+                block_tables=block_tables)
         else:
             h = attn_mod.attention_forward(
                 xn, p, cfg, precision, positions=positions, mask=mask,
@@ -160,6 +162,7 @@ def apply_slot_decode(
     cross_cache=None, src_lengths=None,
     lengths=None,
     forced_topk=None,
+    block_tables=None,             # (B, W) when kv_cache is paged
 ):
     aux = {}
     new_kv, new_ssm = kv_cache, ssm_state
@@ -168,7 +171,8 @@ def apply_slot_decode(
         p = slot_params["attn"]
         xn = rms_norm(x, p["norm_scale"], cfg.norm_eps)
         h, new_kv = attn_mod.attention_decode(
-            xn, p, cfg, kv_cache, lengths, precision)
+            xn, p, cfg, kv_cache, lengths, precision,
+            block_tables=block_tables)
         x = x + h
     else:
         p = slot_params["ssm"]

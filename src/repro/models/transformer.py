@@ -252,7 +252,23 @@ def token_logprobs(params, inputs, cfg, precision=None, **kw):
 # ---------------------------------------------------------------------------
 
 def init_cache(cfg, batch: int, max_len: int, precision: PrecisionConfig,
-               dtype=BF16, src_len: int = 0) -> dict:
+               dtype=BF16, src_len: int = 0,
+               page_size: Optional[int] = None,
+               num_pages: Optional[int] = None) -> dict:
+    """Rollout cache.  Default layout: one contiguous (B, max_len) region
+    per sequence.  With `page_size` the self-attention KV entries become a
+    *paged* pool (vLLM layout): per-layer pools of `num_pages` blocks of
+    `page_size` tokens plus a per-sequence block table under
+    cache["block_tables"] (W = ceil(max_len / page_size) entries each).
+
+    When `num_pages` is omitted each sequence owns a contiguous run of
+    blocks (identity tables) — the jit-friendly rollout configuration.
+    When given, tables start at -1 (unmapped) and an external allocator
+    (serving.BlockManager) assigns physical blocks.
+
+    SSM states and cross-attention caches are per-sequence constant-size
+    state and stay batch-indexed in either layout.
+    """
     pattern = blocks_mod.layer_pattern(cfg)
     repeats = blocks_mod.n_repeats(cfg)
 
@@ -261,12 +277,27 @@ def init_cache(cfg, batch: int, max_len: int, precision: PrecisionConfig,
         return jax.tree.map(lambda a: jnp.broadcast_to(a, (repeats,) + a.shape),
                             one)
 
+    paged = page_size is not None
+    if paged:
+        pages_per_seq = -(-max_len // page_size)
+        self_owned = num_pages is None
+        if self_owned:
+            num_pages = batch * pages_per_seq
+
     slots = {}
+    has_kv = False
     for j, spec in enumerate(pattern):
         slot = {}
         if spec.mixer == "attn":
-            slot["kv"] = stack(lambda: attn_mod.init_kv_cache(
-                batch, max_len, cfg.n_kv_heads, cfg.d_head, precision, dtype))
+            has_kv = True
+            if paged:
+                slot["kv"] = stack(lambda: attn_mod.init_paged_kv_cache(
+                    num_pages, page_size, cfg.n_kv_heads, cfg.d_head,
+                    precision, dtype))
+            else:
+                slot["kv"] = stack(lambda: attn_mod.init_kv_cache(
+                    batch, max_len, cfg.n_kv_heads, cfg.d_head, precision,
+                    dtype))
         else:
             slot["ssm"] = stack(lambda: ssm_mod.init_ssm_state(batch, cfg, dtype))
         if spec.cross:
@@ -278,6 +309,14 @@ def init_cache(cfg, batch: int, max_len: int, precision: PrecisionConfig,
         "slots": slots,
         "lengths": jnp.zeros((batch,), jnp.int32),
     }
+    if paged and has_kv:
+        if self_owned:
+            cache["block_tables"] = jnp.arange(
+                batch * pages_per_seq, dtype=jnp.int32).reshape(
+                batch, pages_per_seq)
+        else:
+            cache["block_tables"] = jnp.full(
+                (batch, pages_per_seq), -1, jnp.int32)
     if cfg.is_encdec:
         cache["src_lengths"] = jnp.full((batch,), max(src_len, 1), jnp.int32)
     return cache
@@ -323,6 +362,7 @@ def prefill(
     b, t, _ = x.shape
     positions = jnp.arange(t)[None, :]
     eff_lengths = lengths + prefix_len
+    block_tables = cache.get("block_tables")
 
     def body(carry, xs):
         h = carry
@@ -338,6 +378,7 @@ def prefill(
                 kv_cache=sc.get("kv"),
                 ssm_state=sc.get("ssm"), want_ssm_state=True,
                 cross_cache=sc.get("cross"), src_lengths=src_lengths,
+                block_tables=block_tables,
             )
             nc = {}
             if new_kv is not None:
@@ -384,6 +425,7 @@ def decode_step(
     pattern = blocks_mod.layer_pattern(cfg)
     lengths = cache["lengths"]
     src_lengths = cache.get("src_lengths")
+    block_tables = cache.get("block_tables")
     x = _embed(params, tokens)[:, None, :]                    # (B,1,D)
 
     def body(carry, xs):
@@ -398,7 +440,7 @@ def decode_step(
                 h, slot_params[name], spec, cfg, precision,
                 kv_cache=sc.get("kv"), ssm_state=sc.get("ssm"),
                 cross_cache=sc.get("cross"), src_lengths=src_lengths,
-                lengths=lengths,
+                lengths=lengths, block_tables=block_tables,
             )
             nc = {}
             if new_kv is not None:

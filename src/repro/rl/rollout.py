@@ -63,7 +63,8 @@ def _sample(logits: jax.Array, key, temperature: float, top_k: int):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("cfg", "precision", "sampler", "want_routing"))
+    static_argnames=("cfg", "precision", "sampler", "want_routing",
+                     "page_size"))
 def generate(
     rollout_params,
     prompts: jax.Array,          # (B, P) right-padded
@@ -75,6 +76,7 @@ def generate(
     want_routing: bool = False,
     extra_inputs: Optional[dict] = None,
     kv_scales: Optional[dict] = None,    # trainer-side calibration scales
+    page_size: int = 8,                  # paged-KV block size (tokens)
 ) -> Trajectory:
     b, p = prompts.shape
     g = sampler.max_new_tokens
@@ -86,7 +88,11 @@ def generate(
         if "frames" in extra_inputs:
             src_len = extra_inputs["frames"].shape[1]
 
-    cache = init_cache(cfg, b, max_len, precision, src_len=src_len)
+    # Paged KV layout (identity block tables: sequence i owns a contiguous
+    # run of blocks) — the same attention/gather path the serving engine
+    # drives with a real allocator, so rollout exercises the paged code.
+    cache = init_cache(cfg, b, max_len, precision, src_len=src_len,
+                       page_size=page_size)
     if kv_scales is not None:
         from repro.rl.calibration import apply_kv_scales
         cache = apply_kv_scales(cache, kv_scales)
@@ -129,7 +135,12 @@ def generate(
 
     def body(s):
         i = s["i"]
-        # commit the token sampled in the previous iteration (EOS included)
+        # Ordering invariant: the token sampled in the previous iteration is
+        # committed FIRST (EOS included — mask=1 through EOS, making EOS the
+        # last masked token), and only THEN does `done` absorb it; a done
+        # sequence commits PAD/0 from here on.  The decode step below runs
+        # unconditionally (fixed shapes) — its writes for done rows are
+        # masked out by `response_mask` downstream.
         resp = s["resp"].at[:, i].set(
             jnp.where(s["done"], sampler.pad_id, s["tok"]))
         logps = s["logps"].at[:, i].set(jnp.where(s["done"], 0.0, s["logp"]))

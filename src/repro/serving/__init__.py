@@ -1,2 +1,4 @@
+from repro.serving.block_manager import BlockManager, NoFreeBlocksError
 from repro.serving.engine import Request, ServeReport, ServingEngine, kv_bytes_per_token
-__all__ = ["ServingEngine", "ServeReport", "Request", "kv_bytes_per_token"]
+__all__ = ["ServingEngine", "ServeReport", "Request", "kv_bytes_per_token",
+           "BlockManager", "NoFreeBlocksError"]

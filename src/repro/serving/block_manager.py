@@ -1,0 +1,122 @@
+"""Paged KV-cache block manager (vLLM-style, paper §2.3.2).
+
+The serving engine's KV memory is a pool of fixed-size *blocks*; a request
+owns an ordered list of physical block ids and the device-side attention
+gathers K/V through the resulting block table.  All accounting is done in
+**target-device bytes**: a block is `block_bytes` on the accelerator, and a
+token costs `bytes_per_token` there, so the number of tokens a block holds
+is `block_bytes // bytes_per_token` — which is what makes the paper's
+effect mechanical: FP8 KV halves `bytes_per_token`, so at equal block byte
+size every block holds exactly 2x the tokens and the same byte budget
+serves twice the context.
+
+This module is pure host-side bookkeeping (no jax): the engine owns the
+device pools and swap tensors.  Compare vLLM's
+`core/block/naive_block.py` free-list allocator; refcounts/copy-on-write
+(prefix sharing) are future work — see ROADMAP open items.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+
+class NoFreeBlocksError(RuntimeError):
+    """Raised when an allocation cannot be satisfied from the free list."""
+
+
+@dataclasses.dataclass
+class BlockManager:
+    """Free-list allocator over a fixed pool of KV blocks.
+
+    num_blocks      : physical blocks in the device pool
+    block_size      : tokens per block *for this cache dtype*
+    bytes_per_token : per-token KV footprint on the target device
+    """
+
+    num_blocks: int
+    block_size: int
+    bytes_per_token: int = 0
+
+    def __post_init__(self):
+        assert self.num_blocks >= 0 and self.block_size > 0
+        # LIFO free list: recently-freed blocks are re-used first (warm)
+        self._free: List[int] = list(range(self.num_blocks))[::-1]
+        self._owned: Dict[int, List[int]] = {}
+
+    # -- construction --------------------------------------------------------
+    @classmethod
+    def from_byte_budget(cls, budget_bytes: int, block_bytes: int,
+                         bytes_per_token: int) -> "BlockManager":
+        """Size the pool from a device byte budget and a block byte size.
+
+        `block_bytes` is precision-independent (a physical allocation unit);
+        `bytes_per_token` halves under FP8 KV, so `block_size` — tokens per
+        block — doubles at equal `block_bytes`.
+        """
+        assert block_bytes >= bytes_per_token > 0
+        return cls(num_blocks=budget_bytes // block_bytes,
+                   block_size=block_bytes // bytes_per_token,
+                   bytes_per_token=bytes_per_token)
+
+    # -- sizing --------------------------------------------------------------
+    @property
+    def block_bytes(self) -> int:
+        return self.block_size * self.bytes_per_token
+
+    @property
+    def capacity_tokens(self) -> int:
+        return self.num_blocks * self.block_size
+
+    @property
+    def num_free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def blocks_in_use(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    @property
+    def bytes_in_use(self) -> int:
+        return self.blocks_in_use * self.block_bytes
+
+    def blocks_for_tokens(self, n_tokens: int) -> int:
+        """Blocks needed to hold `n_tokens` (ceil division)."""
+        return -(-max(n_tokens, 0) // self.block_size)
+
+    # -- allocation ----------------------------------------------------------
+    def can_allocate(self, n_blocks: int, *, limit_blocks: Optional[int] = None
+                     ) -> bool:
+        """True if `n_blocks` more blocks fit — under the physical free list
+        and (optionally) a soft block limit below the pool size."""
+        if n_blocks > len(self._free):
+            return False
+        if limit_blocks is not None and \
+                self.blocks_in_use + n_blocks > limit_blocks:
+            return False
+        return True
+
+    def allocate(self, rid: int, n_blocks: int) -> List[int]:
+        """Append `n_blocks` fresh blocks to request `rid`'s table."""
+        if n_blocks > len(self._free):
+            raise NoFreeBlocksError(
+                f"need {n_blocks} blocks, {len(self._free)} free")
+        ids = [self._free.pop() for _ in range(n_blocks)]
+        self._owned.setdefault(rid, []).extend(ids)
+        return ids
+
+    def ensure_capacity(self, rid: int, n_tokens: int) -> List[int]:
+        """Grow `rid`'s table until it holds `n_tokens`; returns new ids."""
+        need = self.blocks_for_tokens(n_tokens) - len(self._owned.get(rid, []))
+        if need <= 0:
+            return []
+        return self.allocate(rid, need)
+
+    def blocks_of(self, rid: int) -> List[int]:
+        return list(self._owned.get(rid, []))
+
+    def free(self, rid: int) -> List[int]:
+        """Release all of `rid`'s blocks back to the free list."""
+        ids = self._owned.pop(rid, [])
+        self._free.extend(reversed(ids))
+        return ids

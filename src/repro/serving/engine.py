@@ -1,26 +1,52 @@
-"""Continuous-batching serving engine with KV-capacity accounting.
+"""Continuous-batching serving engine on a paged FP8/BF16 KV cache.
 
 The paper's §2.3.2 performance analysis: under long-context load, BF16 KV
 exhausts cache capacity, vLLM preempts requests (wasting their compute),
 and throughput collapses; FP8 KV doubles capacity, raises concurrency and
-removes the preemptions.  This engine reproduces that mechanism:
+removes the preemptions.  This engine reproduces that mechanism with
+vLLM's actual memory architecture:
 
-  * fixed decode slots (jit-stable shapes), real prefill/decode on the
-    model, one token per active slot per step;
-  * KV budget accounting in *bytes on the target device*: admission and
-    preemption decisions use the true per-token KV footprint, which halves
-    under fp8 — so the capacity/concurrency/preemption effects are exact
-    even though this container is CPU;
-  * vLLM-style preemption: when the active set's KV growth exceeds the
-    budget, the youngest request is evicted and requeued from scratch (its
-    generated tokens are wasted compute — counted);
-  * KV scales: calibrated on the engine's first prefill after weight load
-    (vLLM's `calculate_kv_scales` semantics), shared across requests.
+Paged KV cache
+    Device KV memory is one shared pool of fixed-size blocks per attention
+    layer (`models.attention.PagedKVCache`, pool shape (N+1, BS, KVH, D));
+    each request owns an ordered list of physical block ids and attention
+    gathers K/V through the per-slot block table.  Pool row N is the trash
+    block: prompt padding and inactive decode slots scatter there, so one
+    fused jit step serves every slot without branching.
+
+Byte accounting (per token / per block)
+    `kv_bytes_per_token` = n_attn_layers * 2 * KVH * D * elem_bytes is the
+    true target-device footprint of one token (elem_bytes: 1 fp8, 2 bf16);
+    a block is `block_size` bf16-KV tokens' worth of bytes regardless of
+    the active KV dtype.  The `BlockManager` sizes the pool from a device
+    byte budget, so at equal byte budget FP8 KV keeps the same number of
+    physical blocks but each holds 2x the tokens — `capacity_tokens`
+    literally doubles, and admission, concurrency and preemption follow
+    mechanically.
+
+Admission
+    "reserve" (default): a request is admitted only when worst-case blocks
+    (ceil((prompt + max_new) / block_size)) are free — no mid-flight OOM.
+    "ondemand" (vLLM semantics): admission takes prompt blocks only;
+    decode grows tables block-by-block and OOM preempts the youngest
+    request.  `budget_tokens` stays a mutable attribute: shrinking it
+    mid-run lowers the effective block limit (tests use this).
+
+Preemption = swap-to-host
+    A preempted request's blocks are copied to host memory and freed; on
+    re-admission the blocks are copied back into freshly allocated rows
+    and decoding resumes from the exact pending token — retained tokens
+    are NOT recomputed (old engine recomputed the whole prefill).
+
+KV scales
+    Calibrated on the engine's first prefill after weight load (vLLM's
+    `calculate_kv_scales` semantics), stored once in the shared pool, and
+    reused by every later prefill/decode (scales survive swap untouched).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -28,8 +54,8 @@ import numpy as np
 
 from repro.core.precision import PrecisionConfig
 from repro.data import tasks
-from repro.models import blocks as blocks_mod
 from repro.models import decode_step, init_cache, prefill
+from repro.serving.block_manager import BlockManager, NoFreeBlocksError
 
 
 def kv_bytes_per_token(cfg, precision: PrecisionConfig) -> int:
@@ -50,6 +76,10 @@ class Request:
     generated: List[int] = dataclasses.field(default_factory=list)
     preemptions: int = 0
     wasted_tokens: int = 0
+    # swap-to-host state (set while preempted, cleared on resume)
+    swap_kv: Optional[Dict[str, Tuple[np.ndarray, np.ndarray]]] = None
+    swap_tokens: int = 0         # kv rows held in swap
+    swap_pending: int = 0        # pending (sampled, not yet fed) token
 
 
 @dataclasses.dataclass
@@ -61,6 +91,8 @@ class ServeReport:
     emitted_tokens: int
     mean_occupancy: float
     budget_tokens: int
+    swap_outs: int = 0
+    swap_ins: int = 0
 
     @property
     def useful_token_rate(self) -> float:
@@ -74,7 +106,9 @@ class ServingEngine:
                  max_slots: int = 8, max_seq_len: int = 64,
                  kv_budget_bytes: Optional[int] = None,
                  temperature: float = 0.0, seed: int = 0,
-                 prompt_pad: int = 16):
+                 prompt_pad: int = 16, block_size: int = 4,
+                 admission: str = "reserve"):
+        assert admission in ("reserve", "ondemand"), admission
         self.prompt_pad = prompt_pad   # fixed prefill width (one jit trace)
         self.params = params
         self.cfg = cfg
@@ -82,39 +116,130 @@ class ServingEngine:
         self.max_slots = max_slots
         self.max_seq_len = max_seq_len
         self.temperature = temperature
+        self.admission = admission
         self.key = jax.random.key(seed)
 
         per_tok = max(kv_bytes_per_token(cfg, precision), 1)
         if kv_budget_bytes is None:
             kv_budget_bytes = per_tok * max_slots * max_seq_len
-        self.budget_tokens = kv_budget_bytes // per_tok
+        # Physical block byte size is precision-INDEPENDENT (`block_size`
+        # tokens at bf16 KV width), so quantizing the KV cache doubles the
+        # tokens each block holds rather than the number of blocks — the
+        # block-capacity mechanism of §2.3.2.
+        per_tok_bf16 = max(kv_bytes_per_token(
+            cfg, precision.replace(kv_cache_dtype="bf16")), 1)
+        self.block_mgr = BlockManager.from_byte_budget(
+            kv_budget_bytes, block_size * per_tok_bf16, per_tok)
+        # Mutable token-denominated view of the budget; shrinking it lowers
+        # the effective block limit below the physical pool size.
+        self.budget_tokens = self.block_mgr.capacity_tokens
 
-        self.cache = init_cache(cfg, max_slots, max_seq_len, precision)
+        self.cache = init_cache(cfg, max_slots, max_seq_len, precision,
+                                page_size=self.block_mgr.block_size,
+                                num_pages=self.block_mgr.num_blocks)
         self.slot_req: List[Optional[Request]] = [None] * max_slots
-        self.slot_budget: List[int] = [0] * max_slots   # committed tokens
         self.queue: List[Request] = []
         self.done: List[Request] = []
+        self._next_rid = 0
         self.pending_tok = np.zeros((max_slots,), np.int32)
         self._scales_calibrated = False
         self.stats = dict(preemptions=0, wasted_tokens=0, emitted=0,
-                          steps=0, occupancy=0.0)
+                          steps=0, occupancy=0.0, swap_outs=0, swap_ins=0)
 
     # ------------------------------------------------------------------
     def submit(self, prompt_ids, max_new: int, rid: Optional[int] = None):
-        self.queue.append(Request(
-            rid=rid if rid is not None else len(self.queue),
-            prompt=np.asarray(prompt_ids, np.int32), max_new=max_new))
+        prompt = np.asarray(prompt_ids, np.int32)
+        if len(prompt) > self.prompt_pad:
+            raise ValueError(
+                f"prompt of {len(prompt)} tokens exceeds prompt_pad="
+                f"{self.prompt_pad} (the engine prefills one fixed width)")
+        if rid is None:
+            rid = self._next_rid
+        # rid keys BlockManager ownership — collisions would merge two live
+        # requests' block lists, so keep auto-assignment monotonic
+        self._next_rid = max(self._next_rid, rid + 1)
+        self.queue.append(Request(rid=rid, prompt=prompt, max_new=max_new))
 
     # -- accounting ---------------------------------------------------------
-    def _tokens_in_use(self) -> int:
-        return sum(self.slot_budget[i] for i in range(self.max_slots)
-                   if self.slot_req[i] is not None)
+    @property
+    def block_size(self) -> int:
+        return self.block_mgr.block_size
+
+    @property
+    def _effective_blocks(self) -> int:
+        """Block limit implied by the (possibly shrunk) token budget."""
+        return min(self.block_mgr.num_blocks,
+                   self.block_mgr.blocks_for_tokens(self.budget_tokens))
 
     def _free_slot(self) -> Optional[int]:
         for i, r in enumerate(self.slot_req):
             if r is None:
                 return i
         return None
+
+    def _reserve_blocks(self, req: Request) -> int:
+        """Blocks a request needs at admission time."""
+        retained = req.swap_tokens if req.swap_kv is not None else 0
+        if self.admission == "reserve":
+            # worst case: full prompt + every token it may still generate
+            tokens = max(len(req.prompt) + req.max_new, retained + 1)
+        else:
+            # vLLM semantics: what it holds right now, +1 so the first
+            # decode step's KV write is always mapped (a request admitted
+            # after _grow_for_decode ran would otherwise scatter its pending
+            # token to the trash block when the prompt fills its last block)
+            tokens = max(len(req.prompt) + 1, retained + 1)
+        return self.block_mgr.blocks_for_tokens(tokens)
+
+    # -- cache surgery ------------------------------------------------------
+    def _set_table_row(self, slot: int, ids: List[int]):
+        w = self.cache["block_tables"].shape[1]
+        row = np.full((w,), -1, np.int32)
+        row[:len(ids)] = ids[:w]
+        self.cache["block_tables"] = \
+            self.cache["block_tables"].at[slot].set(jnp.asarray(row))
+
+    def _clear_slot(self, slot: int):
+        w = self.cache["block_tables"].shape[1]
+        self.cache["block_tables"] = self.cache["block_tables"].at[slot].set(
+            jnp.full((w,), -1, jnp.int32))
+        self.cache["lengths"] = self.cache["lengths"].at[slot].set(0)
+
+    def _slot_view(self, slot: int) -> dict:
+        """Batch-1 cache view for prefill into `slot`: KV pools are shared
+        (paged — no batch dim), batched per-sequence state is sliced."""
+        slots = {}
+        for name, sd in self.cache["slots"].items():
+            view = {}
+            for key, state in sd.items():
+                if key == "kv":
+                    view[key] = state
+                else:   # ssm / cross state: (R, B, ...) -> (R, 1, ...)
+                    view[key] = jax.tree.map(
+                        lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, 1)
+                        if a.ndim >= 2 else a,
+                        state)
+            slots[name] = view
+        return {
+            "slots": slots,
+            "lengths": self.cache["lengths"][slot:slot + 1],
+            "block_tables": self.cache["block_tables"][slot:slot + 1],
+        }
+
+    def _merge_view(self, new_cache: dict, slot: int):
+        slots = {}
+        for name, sd in self.cache["slots"].items():
+            merged = {}
+            for key, state in sd.items():
+                if key == "kv":
+                    merged[key] = new_cache["slots"][name][key]
+                else:
+                    merged[key] = jax.tree.map(
+                        lambda big, small: jax.lax.dynamic_update_slice_in_dim(
+                            big, small, slot, 1) if big.ndim >= 2 else big,
+                        state, new_cache["slots"][name][key])
+            slots[name] = merged
+        self.cache = dict(self.cache, slots=slots)
 
     # -- admission -----------------------------------------------------------
     def _try_admit(self):
@@ -123,56 +248,135 @@ class ServingEngine:
             if slot is None:
                 return
             req = self.queue[0]
-            need = len(req.prompt) + req.max_new
-            if self._tokens_in_use() + need > self.budget_tokens:
+            need = self._reserve_blocks(req)
+            if not self.block_mgr.can_allocate(
+                    need, limit_blocks=self._effective_blocks):
                 return                      # capacity-bound: stay queued
             self.queue.pop(0)
-            self._prefill_into(slot, req)
+            ids = self.block_mgr.allocate(req.rid, need)
+            if req.swap_kv is not None:
+                self._swap_in(slot, req, ids)
+            else:
+                self._prefill_into(slot, req, ids)
 
-    def _prefill_into(self, slot: int, req: Request):
-        p = len(req.prompt)
+    def _prefill_into(self, slot: int, req: Request, ids: List[int]):
+        p = len(req.prompt)                  # <= prompt_pad (submit checks)
         padded = np.full((self.prompt_pad,), tasks.PAD, np.int32)
-        padded[:p] = req.prompt[: self.prompt_pad]
+        padded[:p] = req.prompt
         prompt = jnp.asarray(padded)[None, :]
         prec = self.precision
         if self._scales_calibrated and prec.kv_quantized:
+            # vLLM semantics: only the first forward after (re)load
+            # calibrates; later prefills reuse the shared pool scales
             prec = prec.replace(calculate_kv_scales=False)
-        mini = init_cache(self.cfg, 1, self.max_seq_len, self.precision)
-        if self._scales_calibrated:
-            mini = _copy_scales(mini, self.cache)
-        logits, mini = prefill(self.params, {"tokens": prompt,
-                                             "lengths": jnp.array([p])},
-                               mini, self.cfg, prec)
-        if not self._scales_calibrated:
-            # vLLM semantics: first forward pass after (re)load calibrates
-            self.cache = _copy_scales(self.cache, mini)
-            self._scales_calibrated = True
-        self.cache = _write_slot(self.cache, mini, slot)
+        self._set_table_row(slot, ids)
+        view = self._slot_view(slot)
+        view["lengths"] = jnp.zeros((1,), jnp.int32)
+        logits, new_cache = prefill(
+            self.params, {"tokens": prompt, "lengths": jnp.array([p])},
+            view, self.cfg, prec)
+        self._merge_view(new_cache, slot)
+        self.cache["lengths"] = self.cache["lengths"].at[slot].set(p)
+        self._scales_calibrated = True
         self.key, k = jax.random.split(self.key)
         tok = _sample_token(logits[0], k, self.temperature)
         self.pending_tok[slot] = tok
         self.slot_req[slot] = req
-        self.slot_budget[slot] = p + req.max_new
         req.generated = [int(tok)]
 
-    # -- preemption -----------------------------------------------------------
+    # -- preemption / swap ---------------------------------------------------
+    def _swap_out(self, slot: int, req: Request):
+        """Copy the request's blocks to host, free them, requeue at front."""
+        ids = self.block_mgr.blocks_of(req.rid)
+        idx = jnp.asarray(ids, jnp.int32)
+        host = {}
+        for name, sd in self.cache["slots"].items():
+            if "kv" in sd:
+                kv = sd["kv"]
+                host[name] = (np.asarray(kv.k[:, idx]),
+                              np.asarray(kv.v[:, idx]))
+        req.swap_kv = host
+        req.swap_tokens = int(np.asarray(self.cache["lengths"])[slot])
+        req.swap_pending = int(self.pending_tok[slot])
+        req.preemptions += 1
+        self.stats["preemptions"] += 1
+        self.stats["swap_outs"] += 1
+        self.block_mgr.free(req.rid)
+        self.slot_req[slot] = None
+        self._clear_slot(slot)
+        self.queue.insert(0, req)
+
+    def _swap_in(self, slot: int, req: Request, ids: List[int]):
+        """Copy swapped blocks back into fresh pool rows; no recompute."""
+        n = next(iter(req.swap_kv.values()))[0].shape[1] if req.swap_kv \
+            else 0
+        idx = jnp.asarray(ids[:n], jnp.int32)
+        slots = {}
+        for name, sd in self.cache["slots"].items():
+            merged = dict(sd)
+            if "kv" in sd and name in req.swap_kv:
+                kv = sd["kv"]
+                host_k, host_v = req.swap_kv[name]
+                merged["kv"] = kv._replace(
+                    k=kv.k.at[:, idx].set(jnp.asarray(host_k)),
+                    v=kv.v.at[:, idx].set(jnp.asarray(host_v)))
+            slots[name] = merged
+        self.cache = dict(self.cache, slots=slots)
+        self._set_table_row(slot, ids)
+        self.cache["lengths"] = self.cache["lengths"].at[slot].set(
+            req.swap_tokens)
+        self.pending_tok[slot] = req.swap_pending
+        self.slot_req[slot] = req
+        req.swap_kv = None
+        req.swap_tokens = 0
+        self.stats["swap_ins"] += 1
+
+    def _youngest_active(self, exclude: Optional[int] = None) -> Optional[int]:
+        victims = [i for i, r in enumerate(self.slot_req)
+                   if r is not None and i != exclude]
+        if not victims:
+            return None
+        return max(victims, key=lambda i: self.slot_req[i].rid)
+
     def _maybe_preempt(self):
-        """Evict youngest requests while over budget (vLLM recompute mode)."""
-        while self._tokens_in_use() > self.budget_tokens:
-            victims = [i for i, r in enumerate(self.slot_req) if r is not None]
-            if not victims:
+        """Evict youngest requests while over the (possibly shrunk) budget."""
+        while self.block_mgr.blocks_in_use > self._effective_blocks:
+            slot = self._youngest_active()
+            if slot is None:
                 return
-            slot = max(victims, key=lambda i: self.slot_req[i].rid)
+            self._swap_out(slot, self.slot_req[slot])
+
+    def _grow_for_decode(self):
+        """ondemand mode: every active slot needs room for the KV row the
+        next decode step writes; allocate on block boundaries, preempting
+        the youngest request when the pool is exhausted."""
+        lengths = np.asarray(self.cache["lengths"])
+        for slot in sorted(
+                (i for i, r in enumerate(self.slot_req) if r is not None),
+                key=lambda i: self.slot_req[i].rid):
             req = self.slot_req[slot]
-            req.preemptions += 1
-            req.wasted_tokens += len(req.generated)
-            self.stats["preemptions"] += 1
-            self.stats["wasted_tokens"] += len(req.generated)
-            req.generated = []
-            self.slot_req[slot] = None
-            self.slot_budget[slot] = 0
-            self.cache = _clear_slot(self.cache, slot)
-            self.queue.insert(0, req)
+            if req is None:
+                continue
+            while self.slot_req[slot] is req:
+                need = self.block_mgr.blocks_for_tokens(
+                    int(lengths[slot]) + 1) - \
+                    len(self.block_mgr.blocks_of(req.rid))
+                if need <= 0:
+                    break
+                if self.block_mgr.can_allocate(
+                        need, limit_blocks=self._effective_blocks):
+                    self.block_mgr.allocate(req.rid, need)
+                    self._set_table_row(slot,
+                                        self.block_mgr.blocks_of(req.rid))
+                    break
+                victim = self._youngest_active(exclude=slot)
+                if victim is None:
+                    # alone, every in-use block is its own, so a failed
+                    # allocation means the request exceeds the whole pool
+                    raise RuntimeError(
+                        "KV pool smaller than a single request; raise "
+                        "kv_budget_bytes or block_size")
+                self._swap_out(victim, self.slot_req[victim])
 
     # -- main loop ---------------------------------------------------------
     def run(self, max_steps: int = 1000) -> ServeReport:
@@ -180,6 +384,9 @@ class ServingEngine:
                 and self.stats["steps"] < max_steps:
             self._maybe_preempt()
             self._try_admit()
+            if self.admission == "ondemand":
+                self._grow_for_decode()
+                self._try_admit()      # eviction may have freed a slot
             active = [i for i, r in enumerate(self.slot_req) if r is not None]
             if not active:
                 break
@@ -199,8 +406,8 @@ class ServingEngine:
                 if tok == tasks.EOS or len(req.generated) >= req.max_new:
                     self.done.append(req)
                     self.slot_req[i] = None
-                    self.slot_budget[i] = 0
-                    self.cache = _clear_slot(self.cache, i)
+                    self.block_mgr.free(req.rid)
+                    self._clear_slot(i)
         steps = max(self.stats["steps"], 1)
         return ServeReport(
             completed=self.done,
@@ -210,47 +417,9 @@ class ServingEngine:
             emitted_tokens=self.stats["emitted"],
             mean_occupancy=self.stats["occupancy"] / steps,
             budget_tokens=self.budget_tokens,
+            swap_outs=self.stats["swap_outs"],
+            swap_ins=self.stats["swap_ins"],
         )
-
-
-# ---------------------------------------------------------------------------
-# cache slot surgery (host-side, between jitted steps)
-# ---------------------------------------------------------------------------
-
-def _is_leafcache(x):
-    return hasattr(x, "ndim")
-
-
-def _write_slot(cache, mini, slot: int):
-    """Copy mini-cache (batch 1) into batch position `slot`."""
-    def wr(big, small):
-        if big.ndim >= 2 and small.shape[0] == big.shape[0] and \
-                small.ndim == big.ndim and small.shape[1] == 1:
-            return jax.lax.dynamic_update_slice_in_dim(big, small, slot, 1)
-        return big
-
-    slots = jax.tree.map(wr, cache["slots"], mini["slots"])
-    lengths = cache["lengths"].at[slot].set(mini["lengths"][0])
-    out = dict(cache, slots=slots, lengths=lengths)
-    return out
-
-
-def _clear_slot(cache, slot: int):
-    lengths = cache["lengths"].at[slot].set(0)
-    return dict(cache, lengths=lengths)
-
-
-def _copy_scales(dst, src):
-    """Copy per-layer k/v scales from src cache into dst."""
-    slots = {}
-    for name, s in dst["slots"].items():
-        s = dict(s)
-        if "kv" in s and "kv" in src["slots"][name]:
-            s["kv"] = s["kv"]._replace(
-                k_scale=src["slots"][name]["kv"].k_scale,
-                v_scale=src["slots"][name]["kv"].v_scale)
-        slots[name] = s
-    return dict(dst, slots=slots)
 
 
 def _sample_token(logits, key, temperature):

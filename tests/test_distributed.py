@@ -184,9 +184,9 @@ def test_pipeline_matches_sequential():
 def test_compressed_psum_close_to_exact():
     out = run_prog("""
         import jax, jax.numpy as jnp, numpy as np
-        from jax import shard_map
         from jax.sharding import PartitionSpec as P
         from repro.distributed import compressed_psum
+        from repro.distributed.compat import shard_map
         from repro.distributed.compression import comm_bytes
 
         mesh = jax.make_mesh((8,), ("data",))

@@ -1,6 +1,9 @@
 """Tests for the FP8 linear paths, E2E recipes and gradient profiling."""
-import hypothesis
-import hypothesis.strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="install requirements-dev.txt for property tests")
+import hypothesis.strategies as st  # noqa: E402
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -3,8 +3,11 @@
 Covers the three FP8-RL kernels with hypothesis shape/dtype sweeps plus
 directed edge cases (padding, GQA group sizes, masked lengths).
 """
-import hypothesis
-import hypothesis.strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="install requirements-dev.txt for property tests")
+import hypothesis.strategies as st  # noqa: E402
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -1,10 +1,12 @@
 """Unit + property tests for blockwise FP8 quantization (paper §2.1.1, §2.4.3)."""
-import hypothesis
-import hypothesis.strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="install requirements-dev.txt for property tests")
+import hypothesis.strategies as st  # noqa: E402
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import (
     E4M3,

@@ -132,12 +132,24 @@ def test_generate_shapes_and_determinism(precision):
 
 
 def test_generate_stops_at_eos():
-    """Force the emb/lm_head so EOS is argmax everywhere -> greedy decode
-    must stop after one token."""
+    """Force the lm_head so EOS is argmax at the first sampled position ->
+    greedy decode must stop after one token.
+
+    The forcing must be sign-robust: with the lm_head zeroed except the EOS
+    column set to a constant c, the EOS logit is c * sum(h_last) — and the
+    *sign* of sum(h_last) depends on the hidden state, so a blind +c can
+    make EOS the arg*min* (the old flaky forcing produced logit_EOS = -140
+    and 4 free-running tokens).  Probe the sign with one forward pass and
+    orient c so the EOS logit is large and positive."""
+    from repro.models import forward_train
+
     cfg = _small_cfg()
     params = init_params(cfg, jax.random.key(0))
-    params["lm_head"] = params["lm_head"].at[:, tasks.EOS].set(50.0)
     prompts = jnp.array([[tasks.BOS, 5, 6, 7]], jnp.int32)
+    params["lm_head"] = jnp.zeros_like(params["lm_head"]).at[:, tasks.EOS].set(1.0)
+    probe, _ = forward_train(params, {"tokens": prompts}, cfg)
+    sign = 1.0 if float(probe[0, -1, tasks.EOS]) >= 0 else -1.0
+    params["lm_head"] = params["lm_head"] * (50.0 * sign)
     t = generate(params, prompts, jnp.array([4]), jax.random.key(0), cfg,
                  BF16_ROLLOUT, SamplerConfig(max_new_tokens=8, temperature=0.0))
     assert int(t.response_lengths[0]) == 1

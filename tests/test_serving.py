@@ -94,8 +94,11 @@ def test_preemption_requeues_and_counts(setup):
     cfg, params = setup
     per_tok = kv_bytes_per_token(cfg, BF16_ROLLOUT)
 
+    # token-granular blocks (block_size=1): admission packs exactly like the
+    # pre-paging token accounting, so the halved budget lands mid-request
     eng = ServingEngine(params, cfg, BF16_ROLLOUT, max_slots=4,
-                        max_seq_len=48, kv_budget_bytes=per_tok * 30)
+                        max_seq_len=48, kv_budget_bytes=per_tok * 30,
+                        block_size=1)
     # lie about max_new at admission time by submitting in a tight budget:
     # admission reserves prompt+max_new, so force over-budget via shrink
     for i, p in enumerate(_prompts(4)):

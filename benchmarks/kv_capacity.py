@@ -11,6 +11,8 @@ at a higher useful token rate.
 """
 from __future__ import annotations
 
+import json
+
 import jax
 import numpy as np
 
@@ -67,10 +69,52 @@ def summarize(reports):
     return rows
 
 
-def main(quick: bool = False):
-    for name, us, derived in summarize(run(6 if quick else 12)):
+def check(reports) -> None:
+    """The §2.3.2 invariants the CI bench-smoke job gates on: at equal
+    byte budget FP8 KV must at least match the BF16 useful token rate
+    while preempting no one."""
+    b, f = reports["bf16_kv"], reports["fp8_kv"]
+    assert f.budget_tokens == 2 * b.budget_tokens, (f, b)
+    assert b.preemptions >= 1, \
+        f"workload no longer contends under BF16 (vacuous gate): {b}"
+    assert f.preemptions == 0, f"FP8 KV must remove preemptions: {f}"
+    assert f.useful_token_rate >= b.useful_token_rate, \
+        f"FP8 useful token rate regressed: {f} vs {b}"
+
+
+def _json_dict(reports) -> dict:
+    keep = ("budget_tokens", "preemptions", "swap_outs", "swap_ins",
+            "steps", "emitted_tokens", "mean_occupancy",
+            "peak_blocks_in_use", "prefix_hit_blocks")
+    return {name: dict({k: getattr(r, k) for k in keep},
+                       useful_token_rate=r.useful_token_rate)
+            for name, r in reports.items()}
+
+
+def main(quick: bool = False, json_path=None, run_check: bool = False):
+    """One entry point for the harness (benchmarks.run), the CLI and the
+    CI gate — all measure the same workload."""
+    reports = run(6 if quick else 12)
+    for name, us, derived in summarize(reports):
         print(f"{name},{us:.1f},{derived}")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(_json_dict(reports), f, indent=2, default=float)
+        print(f"# wrote {json_path}")
+    if run_check:
+        check(reports)
+        print("# fp8-kv capacity invariants hold "
+              "(2x tokens, no preemptions, rate >= bf16)")
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller workload (what benchmarks.run uses)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write the engine reports as JSON")
+    ap.add_argument("--check", action="store_true",
+                    help="assert the FP8-vs-BF16 capacity invariants (CI)")
+    args = ap.parse_args()
+    main(quick=args.quick, json_path=args.json, run_check=args.check)

@@ -1,0 +1,145 @@
+"""Prefix-block sharing under GRPO group sampling (ROADMAP tentpole; cf.
+the KV-memory wall framing of Sparse-RL, arXiv 2601.10079).
+
+GRPO samples N responses from the *same* prompt, so without sharing the
+paged pool stores N identical copies of every prompt block.  This
+benchmark runs the real serving engine twice on a same-prompt group
+workload — prefix sharing disabled vs enabled — at the SAME device byte
+budget and measures what sharing buys:
+
+  * peak blocks-in-use drops (prompt blocks stored once per group),
+  * useful token rate rises (the freed blocks admit more concurrent
+    requests, so the same budget finishes the workload in fewer steps),
+  * decoded tokens are bit-exact between the two modes (sharing is pure
+    memory dedup: causal prefix KV is content-determined).
+
+Run directly for CSV rows, or with --json/--check from the CI bench-smoke
+job to emit machine-readable results and assert the headline invariants.
+"""
+from __future__ import annotations
+
+import json
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.precision import FP8_KV_ONLY_ROLLOUT, BF16_ROLLOUT
+from repro.data import tasks
+from repro.models import init_params
+from repro.rl import sync_policy_weights
+from repro.serving import ServingEngine, kv_bytes_per_token
+
+
+def _cfg():
+    return get_config("qwen3-8b").reduced(
+        n_layers=2, d_model=64, d_ff=128, vocab_size=tasks.VOCAB_SIZE,
+        n_heads=4, n_kv_heads=2, d_head=16)
+
+
+def _report_dict(rep) -> dict:
+    return dict(
+        peak_blocks_in_use=rep.peak_blocks_in_use,
+        prefix_hit_blocks=rep.prefix_hit_blocks,
+        cow_copies=rep.cow_copies,
+        useful_token_rate=rep.useful_token_rate,
+        steps=rep.steps,
+        preemptions=rep.preemptions,
+        mean_occupancy=rep.mean_occupancy,
+        completed=len(rep.completed),
+        tokens={r.rid: list(map(int, r.generated)) for r in rep.completed},
+    )
+
+
+def run(group_sizes=(1, 2, 4, 8), max_new: int = 8, seed: int = 0) -> dict:
+    """Group-size sweep: one 16-token prompt sampled `g` times, served
+    with and without prefix sharing at a fixed byte budget (16 physical
+    blocks — enough for the shared workload, contended without)."""
+    cfg = _cfg()
+    params = init_params(cfg, jax.random.key(seed))
+    prec = FP8_KV_ONLY_ROLLOUT
+    roll, _ = sync_policy_weights(params, prec)
+    # budget = 16 precision-independent blocks of 4 bf16-KV tokens each
+    budget = kv_bytes_per_token(cfg, BF16_ROLLOUT) * 4 * 16
+    rng = np.random.default_rng(seed)
+    prompt = np.concatenate(
+        [[tasks.BOS], rng.integers(4, 19, size=15)]).astype(np.int32)
+
+    results: dict = {}
+    for g in group_sizes:
+        entry = {}
+        for mode, sharing in (("no_sharing", False), ("sharing", True)):
+            eng = ServingEngine(roll, cfg, prec, max_slots=8, max_seq_len=32,
+                                kv_budget_bytes=budget, seed=seed,
+                                admission="ondemand", prefix_sharing=sharing)
+            for i in range(g):
+                eng.submit(prompt, max_new=max_new, rid=i)
+            entry[mode] = _report_dict(eng.run(max_steps=600))
+        results[f"group_{g}"] = entry
+    return results
+
+
+def check(results: dict, group: int = 8) -> None:
+    """The acceptance invariants for a same-prompt group-of-`group`
+    workload at equal byte budget."""
+    e = results[f"group_{group}"]
+    ns, sh = e["no_sharing"], e["sharing"]
+    assert sh["completed"] == ns["completed"] == group, (sh, ns)
+    assert sh["peak_blocks_in_use"] < ns["peak_blocks_in_use"], \
+        f"sharing must use strictly fewer blocks: {sh} vs {ns}"
+    assert sh["useful_token_rate"] > ns["useful_token_rate"], \
+        f"sharing must raise the useful token rate: {sh} vs {ns}"
+    assert sh["tokens"] == ns["tokens"], \
+        "sharing changed decoded tokens (must be bit-exact)"
+    assert sh["prefix_hit_blocks"] > 0
+
+
+def summarize(results: dict):
+    rows = []
+    for name, entry in results.items():
+        ns, sh = entry["no_sharing"], entry["sharing"]
+        rows.append((f"prefix_sharing/{name}", 0.0,
+                     f"peak_blocks={ns['peak_blocks_in_use']}"
+                     f"->{sh['peak_blocks_in_use']};"
+                     f"useful_token_rate={ns['useful_token_rate']:.3f}"
+                     f"->{sh['useful_token_rate']:.3f};"
+                     f"steps={ns['steps']}->{sh['steps']};"
+                     f"prefix_hits={sh['prefix_hit_blocks']};"
+                     f"bit_exact={sh['tokens'] == ns['tokens']}"))
+    last = list(results)[-1]     # dicts keep sweep order; largest group last
+    ns, sh = results[last]["no_sharing"], results[last]["sharing"]
+    rows.append(("prefix_sharing/headline", 0.0,
+                 f"blocks_saved_x={ns['peak_blocks_in_use'] / max(sh['peak_blocks_in_use'], 1):.2f};"
+                 f"throughput_x={sh['useful_token_rate'] / max(ns['useful_token_rate'], 1e-9):.2f}"))
+    return rows
+
+
+def main(quick: bool = False, json_path=None, run_check: bool = False):
+    """One entry point for the harness (benchmarks.run), the CLI and the
+    CI gate.  --check needs the full sweep (the invariants are asserted
+    on group 8), so quick mode and run_check are mutually exclusive."""
+    assert not (quick and run_check), "--check asserts on the group-8 sweep"
+    results = run(group_sizes=(1, 4) if quick else (1, 2, 4, 8))
+    for name, us, derived in summarize(results):
+        print(f"{name},{us:.1f},{derived}")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(results, f, indent=2, default=float)
+        print(f"# wrote {json_path}")
+    if run_check:
+        check(results)
+        print("# prefix-sharing invariants hold "
+              "(fewer blocks, higher rate, bit-exact)")
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller sweep (what benchmarks.run uses)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write the sweep results as JSON")
+    ap.add_argument("--check", action="store_true",
+                    help="assert the group-8 sharing invariants (CI)")
+    args = ap.parse_args()
+    main(quick=args.quick, json_path=args.json, run_check=args.check)

@@ -11,13 +11,12 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config
 from repro.core.grad_profile import tile_exceedance_stats
 from repro.core.precision import E4M3, E5M2
 from repro.data import tasks
-from repro.models import forward_train, init_params
+from repro.models import init_params
 from repro.models.moe import router_logits
 
 

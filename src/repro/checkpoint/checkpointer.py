@@ -17,14 +17,12 @@ No orbax in this container: implemented on numpy + msgpack.
 """
 from __future__ import annotations
 
-import json
 import os
 import re
 import shutil
 from typing import Any, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 import msgpack
 import numpy as np
 

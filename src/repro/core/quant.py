@@ -21,7 +21,6 @@ import jax.numpy as jnp
 from repro.core.precision import (
     ACT_BLOCK,
     E4M3,
-    E5M2,
     FP8_MAX,
     WEIGHT_BLOCK,
     ScaleFormat,

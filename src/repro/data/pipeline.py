@@ -8,7 +8,7 @@ the prompt stream it would have seen (tests assert bitwise resume).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Tuple
+from typing import List
 
 import numpy as np
 

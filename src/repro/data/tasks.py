@@ -12,7 +12,7 @@ Token space (small, fixed): digits 0-9, operators, structural tokens.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Tuple
+from typing import List
 
 import numpy as np
 

@@ -16,13 +16,12 @@ quantization error is bounded by the E4M3 roundoff of each *contribution*
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.precision import E4M3
-from repro.core.quant import dequantize, quantize_activation
+from repro.core.quant import quantize_activation
 
 
 def compressed_psum(x: jax.Array, axis: str) -> jax.Array:

@@ -15,12 +15,11 @@ launcher can pick M.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding
+from jax.sharding import Mesh
 
 from repro.distributed.compat import shard_map
 from jax.sharding import PartitionSpec as P

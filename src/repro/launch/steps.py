@@ -21,7 +21,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.core.fp8_params import quantize_params
-from repro.core.precision import BF16_ROLLOUT, PrecisionConfig
+from repro.core.precision import PrecisionConfig
 from repro.models import forward_train, init_cache, init_params, prefill, decode_step
 from repro.optim import AdamWConfig
 from repro.optim import init as opt_init

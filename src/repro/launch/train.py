@@ -11,7 +11,6 @@ from __future__ import annotations
 
 import argparse
 import json
-import sys
 
 from repro.configs import get_config
 from repro.core.precision import (

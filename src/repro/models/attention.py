@@ -127,6 +127,23 @@ def paged_write(cache: PagedKVCache, block_tables: jax.Array,
     )
 
 
+def paged_copy_rows(cache: PagedKVCache, src, dst) -> PagedKVCache:
+    """Copy physical pool rows `src` -> `dst` — the device half of
+    copy-on-write: duplicate a shared block's K/V into a writer's private
+    block *before* its first divergent append lands.
+
+    Indexes the pool-row axis from the right so it works on both a single
+    layer's cache (N+1, BS, KVH, D) and the scan-stacked engine form
+    (R, N+1, BS, KVH, D).  Scales are per-layer globals and stay put.
+    """
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+    return cache._replace(
+        k=cache.k.at[..., dst, :, :, :].set(cache.k[..., src, :, :, :]),
+        v=cache.v.at[..., dst, :, :, :].set(cache.v[..., src, :, :, :]),
+    )
+
+
 def init_attn_params(keygen, cfg, dtype=jnp.bfloat16, cross: bool = False) -> dict:
     d, h, kvh, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
     p = {

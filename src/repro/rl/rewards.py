@@ -1,7 +1,7 @@
 """Batch reward evaluation (rule-based verifier, host-side)."""
 from __future__ import annotations
 
-from typing import List, Sequence
+from typing import Sequence
 
 import numpy as np
 

@@ -15,7 +15,6 @@ Both KV-scale calibration paradigms are supported via
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
 from typing import Optional
 
@@ -133,8 +132,6 @@ class RLTrainer:
 
         # 1. prompts (over-provisioned groups double as straggler headroom)
         batch = self.pipeline.next_batch()
-        prompts = np.repeat(batch.tokens, rl.n_per_prompt, axis=0)
-        plens = np.repeat(batch.lengths, rl.n_per_prompt, axis=0)
         problems = [p for p in batch.problems for _ in range(rl.n_per_prompt)]
 
         # 2. weight sync (paper Fig 1 phase 2)
@@ -142,14 +139,23 @@ class RLTrainer:
         rollout_params, sync_stats = sync_policy_weights(
             self.params, rollout_precision)
 
-        # 3. rollout on the FP8 engine
+        # 3. rollout on the FP8 engine — GRPO group sampling prefills each
+        # prompt once and forks per-sample block tables, so the group's
+        # prompt KV is stored once instead of n_per_prompt times; the
+        # shared-prefix width follows the shortest prompt in the batch
+        # (static arg: recompiles at most once per distinct value)
         self.key, k_gen = jax.random.split(self.key)
         t_roll = time.perf_counter()
+        page_size = 8
         traj = generate(
-            rollout_params, jnp.asarray(prompts), jnp.asarray(plens), k_gen,
+            rollout_params, jnp.asarray(batch.tokens),
+            jnp.asarray(batch.lengths), k_gen,
             cfg, rollout_precision, self.sampler,
             want_routing=rl.precision.rollout_router_replay,
             kv_scales=self.kv_scales,
+            page_size=page_size,
+            num_samples_per_prompt=rl.n_per_prompt,
+            shared_prefix_blocks=int(np.min(batch.lengths)) // page_size,
         )
         traj = jax.tree.map(lambda x: x, traj)  # materialize
         rollout_s = time.perf_counter() - t_roll

@@ -12,13 +12,13 @@ EXPERIMENTS.md weight-sync table.
 from __future__ import annotations
 
 import time
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 
 from repro.core.fp8_params import count_quantized, quantize_params
 from repro.core.precision import PrecisionConfig
-from repro.core.quant import QuantizedTensor, dequantize, quantization_rel_error
+from repro.core.quant import QuantizedTensor, quantization_rel_error
 
 
 def sync_policy_weights(

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, Optional
+from typing import Dict
 
 # TPU v5e-class hardware constants (assignment-specified)
 PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip

@@ -1,4 +1,4 @@
-"""Paged KV-cache block manager (vLLM-style, paper §2.3.2).
+"""Paged KV-cache block manager with prefix sharing (vLLM-style, §2.3.2).
 
 The serving engine's KV memory is a pool of fixed-size *blocks*; a request
 owns an ordered list of physical block ids and the device-side attention
@@ -10,44 +10,86 @@ effect mechanical: FP8 KV halves `bytes_per_token`, so at equal block byte
 size every block holds exactly 2x the tokens and the same byte budget
 serves twice the context.
 
+Prefix sharing (refcount + content hash + copy-on-write)
+    RL rollout is dominated by GRPO-style group sampling: N responses from
+    the *same* prompt, which without sharing stores N identical copies of
+    every prompt block.  Three mechanisms remove that redundancy:
+
+    * **Refcounts.**  Every live block carries a reference count.
+      `allocate` creates blocks at refcount 1; `acquire`/`fork` add holders
+      (+1 each); `free` drops one holder per owned entry and only blocks
+      that reach refcount 0 return to the free list.  A preempted request
+      therefore never evicts a block another request still reads —
+      refcount-aware `free` is what makes swap-out safe under sharing.
+
+    * **Prefix index.**  A content-keyed map from *full-block* token
+      prefixes to the physical block holding their KV.  The key for block i
+      of a prompt is the byte string of tokens [0, (i+1)*block_size) — the
+      whole prefix, not just the block's own tokens, so two prompts share
+      block i only when they agree on *everything* before it (causal
+      attention makes prefix KV a pure function of the prefix tokens; the
+      per-layer KV scales are global and calibrated once, so the quantized
+      bytes are identical too).  Exact token bytes are used as keys —
+      no hash collisions by construction.  Entries die with their block
+      (refcount 0); partially-filled blocks are never indexed.
+
+    * **Copy-on-write.**  `fork(src, dst)` lets a new request share *all*
+      of a donor's blocks (including a partially-filled tail).  The first
+      divergent append into a shared block must not corrupt the other
+      holders: `cow(rid, index)` gives the writer a private replacement
+      block (the caller copies the physical row on device — see
+      `models.attention.paged_copy_rows`) and drops one reference on the
+      donor block.
+
 This module is pure host-side bookkeeping (no jax): the engine owns the
-device pools and swap tensors.  Compare vLLM's
-`core/block/naive_block.py` free-list allocator; refcounts/copy-on-write
-(prefix sharing) are future work — see ROADMAP open items.
+device pools and swap tensors.  Compare vLLM's prefix-caching block
+allocator (`core/block/prefix_caching_block.py`).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
 
 
 class NoFreeBlocksError(RuntimeError):
-    """Raised when an allocation cannot be satisfied from the free list."""
+    """Raised when an allocation cannot be satisfied from the free list
+    (or would exceed the caller's soft block limit)."""
 
 
 @dataclasses.dataclass
 class BlockManager:
     """Free-list allocator over a fixed pool of KV blocks.
 
-    num_blocks      : physical blocks in the device pool
-    block_size      : tokens per block *for this cache dtype*
-    bytes_per_token : per-token KV footprint on the target device
+    num_blocks            : physical blocks in the device pool
+    block_size            : tokens per block *for this cache dtype*
+    bytes_per_token       : per-token KV footprint on the target device
+    enable_prefix_sharing : maintain the content-hash prefix index
+                            (refcounts/CoW stay active either way)
     """
 
     num_blocks: int
     block_size: int
     bytes_per_token: int = 0
+    enable_prefix_sharing: bool = True
 
     def __post_init__(self):
         assert self.num_blocks >= 0 and self.block_size > 0
         # LIFO free list: recently-freed blocks are re-used first (warm)
         self._free: List[int] = list(range(self.num_blocks))[::-1]
         self._owned: Dict[int, List[int]] = {}
+        self._refcount: Dict[int, int] = {}
+        # full-block prefix tokens (bytes) -> physical block id, plus the
+        # reverse map so freeing a block retires its index entry
+        self._prefix_index: Dict[bytes, int] = {}
+        self._block_key: Dict[int, bytes] = {}
 
     # -- construction --------------------------------------------------------
     @classmethod
     def from_byte_budget(cls, budget_bytes: int, block_bytes: int,
-                         bytes_per_token: int) -> "BlockManager":
+                         bytes_per_token: int, *,
+                         enable_prefix_sharing: bool = True) -> "BlockManager":
         """Size the pool from a device byte budget and a block byte size.
 
         `block_bytes` is precision-independent (a physical allocation unit);
@@ -57,7 +99,8 @@ class BlockManager:
         assert block_bytes >= bytes_per_token > 0
         return cls(num_blocks=budget_bytes // block_bytes,
                    block_size=block_bytes // bytes_per_token,
-                   bytes_per_token=bytes_per_token)
+                   bytes_per_token=bytes_per_token,
+                   enable_prefix_sharing=enable_prefix_sharing)
 
     # -- sizing --------------------------------------------------------------
     @property
@@ -80,9 +123,20 @@ class BlockManager:
     def bytes_in_use(self) -> int:
         return self.blocks_in_use * self.block_bytes
 
+    @property
+    def num_shared_blocks(self) -> int:
+        """Physical blocks currently held by more than one request."""
+        return sum(1 for c in self._refcount.values() if c > 1)
+
     def blocks_for_tokens(self, n_tokens: int) -> int:
         """Blocks needed to hold `n_tokens` (ceil division)."""
         return -(-max(n_tokens, 0) // self.block_size)
+
+    def refcount(self, block_id: int) -> int:
+        return self._refcount.get(block_id, 0)
+
+    def is_shared(self, block_id: int) -> bool:
+        return self.refcount(block_id) > 1
 
     # -- allocation ----------------------------------------------------------
     def can_allocate(self, n_blocks: int, *, limit_blocks: Optional[int] = None
@@ -96,27 +150,140 @@ class BlockManager:
             return False
         return True
 
-    def allocate(self, rid: int, n_blocks: int) -> List[int]:
-        """Append `n_blocks` fresh blocks to request `rid`'s table."""
+    def allocate(self, rid: int, n_blocks: int, *,
+                 limit_blocks: Optional[int] = None) -> List[int]:
+        """Append `n_blocks` fresh blocks (refcount 1) to request `rid`'s
+        table.  Enforces the same soft cap as `can_allocate`, so the two
+        can never disagree under on-demand admission."""
         if n_blocks > len(self._free):
             raise NoFreeBlocksError(
                 f"need {n_blocks} blocks, {len(self._free)} free")
+        if limit_blocks is not None and \
+                self.blocks_in_use + n_blocks > limit_blocks:
+            raise NoFreeBlocksError(
+                f"need {n_blocks} blocks, but {self.blocks_in_use} in use "
+                f"against a limit of {limit_blocks}")
         ids = [self._free.pop() for _ in range(n_blocks)]
+        for b in ids:
+            self._refcount[b] = 1
         self._owned.setdefault(rid, []).extend(ids)
         return ids
 
-    def ensure_capacity(self, rid: int, n_tokens: int) -> List[int]:
+    def ensure_capacity(self, rid: int, n_tokens: int, *,
+                        limit_blocks: Optional[int] = None) -> List[int]:
         """Grow `rid`'s table until it holds `n_tokens`; returns new ids."""
         need = self.blocks_for_tokens(n_tokens) - len(self._owned.get(rid, []))
         if need <= 0:
             return []
-        return self.allocate(rid, need)
+        return self.allocate(rid, need, limit_blocks=limit_blocks)
 
     def blocks_of(self, rid: int) -> List[int]:
         return list(self._owned.get(rid, []))
 
     def free(self, rid: int) -> List[int]:
-        """Release all of `rid`'s blocks back to the free list."""
-        ids = self._owned.pop(rid, [])
-        self._free.extend(reversed(ids))
-        return ids
+        """Drop one reference per block in `rid`'s table.  Only blocks that
+        reach refcount 0 return to the free list (and leave the prefix
+        index); blocks another request still holds stay resident.  Returns
+        the physically freed ids.  Freeing an unknown/already-freed rid is
+        a no-op, so a double `free` can never double-release a shared
+        block."""
+        freed: List[int] = []
+        for b in self._owned.pop(rid, []):
+            self._refcount[b] -= 1
+            if self._refcount[b] == 0:
+                del self._refcount[b]
+                key = self._block_key.pop(b, None)
+                if key is not None and self._prefix_index.get(key) == b:
+                    del self._prefix_index[key]
+                freed.append(b)
+        self._free.extend(reversed(freed))
+        return freed
+
+    # -- sharing -------------------------------------------------------------
+    def acquire(self, rid: int, block_ids: List[int]) -> List[int]:
+        """Append existing *live* blocks to `rid`'s table, adding one
+        reference each (the sharing primitive behind prefix hits and
+        fork)."""
+        for b in block_ids:
+            if self._refcount.get(b, 0) <= 0:
+                raise ValueError(f"block {b} is not live; cannot share it")
+        for b in block_ids:
+            self._refcount[b] += 1
+        self._owned.setdefault(rid, []).extend(block_ids)
+        return list(block_ids)
+
+    def fork(self, src_rid: int, dst_rid: int) -> List[int]:
+        """Give `dst_rid` a table sharing *all* of `src_rid`'s blocks
+        (including a partially-filled tail — the first divergent append
+        must go through `cow`)."""
+        return self.acquire(dst_rid, self.blocks_of(src_rid))
+
+    def cow(self, rid: int, index: int, *,
+            limit_blocks: Optional[int] = None) -> Optional[Tuple[int, int]]:
+        """Copy-on-write entry `index` of `rid`'s table.
+
+        If the block there is shared, replace it with a fresh private block
+        (refcount 1) and drop one reference on the donor; returns
+        (old_id, new_id) so the caller can copy the physical row on device
+        *before* the divergent write lands.  Returns None when the block is
+        already exclusive (no copy needed).  The copy takes one block and
+        honors the same `limit_blocks` soft cap as `allocate`."""
+        ids = self._owned[rid]
+        old = ids[index]
+        if self._refcount.get(old, 0) <= 1:
+            return None
+        if not self._free:
+            raise NoFreeBlocksError("copy-on-write needs a free block")
+        if limit_blocks is not None and self.blocks_in_use + 1 > limit_blocks:
+            raise NoFreeBlocksError(
+                f"copy-on-write needs a block, but {self.blocks_in_use} in "
+                f"use against a limit of {limit_blocks}")
+        new = self._free.pop()
+        self._refcount[new] = 1
+        self._refcount[old] -= 1
+        ids[index] = new
+        return old, new
+
+    # -- prefix index --------------------------------------------------------
+    def _prefix_keys(self, tokens) -> List[bytes]:
+        """One exact content key per *full* block of `tokens`: the byte
+        string of the whole prefix through that block."""
+        toks = np.ascontiguousarray(np.asarray(tokens, np.int64))
+        n_full = len(toks) // self.block_size
+        return [toks[: (i + 1) * self.block_size].tobytes()
+                for i in range(n_full)]
+
+    def lookup_prefix(self, tokens) -> List[int]:
+        """Longest run of indexed live blocks covering a full-block prefix
+        of `tokens` (the dedup step of admission).  The caller must
+        `acquire` the returned ids before relying on them."""
+        if not self.enable_prefix_sharing:
+            return []
+        hits: List[int] = []
+        for key in self._prefix_keys(tokens):
+            b = self._prefix_index.get(key)
+            if b is None or self._refcount.get(b, 0) <= 0:
+                break
+            hits.append(b)
+        return hits
+
+    def register_prefix(self, rid: int, tokens) -> int:
+        """Index `rid`'s leading blocks under the full-block prefixes of
+        `tokens` (call after the prompt's KV is actually in the pool).
+        Existing entries win — admission is sequential, so the first
+        registrant of a prefix stays authoritative.  Returns the number of
+        new index entries."""
+        if not self.enable_prefix_sharing:
+            return 0
+        ids = self._owned.get(rid, [])
+        added = 0
+        for i, key in enumerate(self._prefix_keys(tokens)):
+            if i >= len(ids):
+                break
+            b = ids[i]
+            if key in self._prefix_index or b in self._block_key:
+                continue
+            self._prefix_index[key] = b
+            self._block_key[b] = key
+            added += 1
+        return added

@@ -32,11 +32,30 @@ Admission
     request.  `budget_tokens` stays a mutable attribute: shrinking it
     mid-run lowers the effective block limit (tests use this).
 
+Prefix sharing (refcount + content hash + copy-on-write)
+    Admission first asks the BlockManager's prefix index for live blocks
+    whose content matches a full-block prefix of the prompt; hits are
+    `acquire`d (refcount +1) and only the *remaining* blocks count against
+    the free list and the budget — N same-prompt GRPO requests admit with
+    prompt_blocks + N*decode_blocks instead of N*(prompt + decode).
+    Prefill still runs the full prompt (the logits need it) and its
+    scatter re-writes shared blocks with bit-identical bytes: causal
+    attention makes prefix KV a pure function of the prefix tokens, and
+    the per-layer scales are calibrated once and global.  A decode step,
+    however, *diverges*: `_cow_for_decode` checks the block the next token
+    lands in and, if it is shared, copies the physical row into a fresh
+    private block first (`models.attention.paged_copy_rows`) — the
+    copy-on-write that keeps the other holders' KV intact.
+
 Preemption = swap-to-host
-    A preempted request's blocks are copied to host memory and freed; on
-    re-admission the blocks are copied back into freshly allocated rows
-    and decoding resumes from the exact pending token — retained tokens
-    are NOT recomputed (old engine recomputed the whole prefill).
+    A preempted request's blocks are copied to host memory and released
+    (refcount -1 each); only blocks no other request holds actually leave
+    the pool, so preemption can never evict a block an active request
+    still reads.  On re-admission the prompt's shared prefix is re-deduped
+    against the index and only the non-shared tail is copied back into
+    freshly allocated rows; decoding resumes from the exact pending token
+    — retained tokens are NOT recomputed (old engine recomputed the whole
+    prefill).
 
 KV scales
     Calibrated on the engine's first prefill after weight load (vLLM's
@@ -55,6 +74,7 @@ import numpy as np
 from repro.core.precision import PrecisionConfig
 from repro.data import tasks
 from repro.models import decode_step, init_cache, prefill
+from repro.models.attention import paged_copy_rows
 from repro.serving.block_manager import BlockManager, NoFreeBlocksError
 
 
@@ -93,6 +113,9 @@ class ServeReport:
     budget_tokens: int
     swap_outs: int = 0
     swap_ins: int = 0
+    peak_blocks_in_use: int = 0
+    prefix_hit_blocks: int = 0     # block allocations avoided by sharing
+    cow_copies: int = 0            # shared blocks privatized before a write
 
     @property
     def useful_token_rate(self) -> float:
@@ -107,7 +130,7 @@ class ServingEngine:
                  kv_budget_bytes: Optional[int] = None,
                  temperature: float = 0.0, seed: int = 0,
                  prompt_pad: int = 16, block_size: int = 4,
-                 admission: str = "reserve"):
+                 admission: str = "reserve", prefix_sharing: bool = True):
         assert admission in ("reserve", "ondemand"), admission
         self.prompt_pad = prompt_pad   # fixed prefill width (one jit trace)
         self.params = params
@@ -129,7 +152,8 @@ class ServingEngine:
         per_tok_bf16 = max(kv_bytes_per_token(
             cfg, precision.replace(kv_cache_dtype="bf16")), 1)
         self.block_mgr = BlockManager.from_byte_budget(
-            kv_budget_bytes, block_size * per_tok_bf16, per_tok)
+            kv_budget_bytes, block_size * per_tok_bf16, per_tok,
+            enable_prefix_sharing=prefix_sharing)
         # Mutable token-denominated view of the budget; shrinking it lowers
         # the effective block limit below the physical pool size.
         self.budget_tokens = self.block_mgr.capacity_tokens
@@ -144,7 +168,8 @@ class ServingEngine:
         self.pending_tok = np.zeros((max_slots,), np.int32)
         self._scales_calibrated = False
         self.stats = dict(preemptions=0, wasted_tokens=0, emitted=0,
-                          steps=0, occupancy=0.0, swap_outs=0, swap_ins=0)
+                          steps=0, occupancy=0.0, swap_outs=0, swap_ins=0,
+                          peak_blocks=0, prefix_hits=0, cow_copies=0)
 
     # ------------------------------------------------------------------
     def submit(self, prompt_ids, max_new: int, rid: Optional[int] = None):
@@ -248,14 +273,22 @@ class ServingEngine:
             if slot is None:
                 return
             req = self.queue[0]
-            need = self._reserve_blocks(req)
+            # dedup full prompt blocks against the prefix index: hits are
+            # shared (refcount +1), only the remainder costs fresh blocks
+            shared = self.block_mgr.lookup_prefix(req.prompt)
+            need = max(self._reserve_blocks(req) - len(shared), 0)
             if not self.block_mgr.can_allocate(
                     need, limit_blocks=self._effective_blocks):
                 return                      # capacity-bound: stay queued
             self.queue.pop(0)
-            ids = self.block_mgr.allocate(req.rid, need)
+            if shared:
+                self.block_mgr.acquire(req.rid, shared)
+                self.stats["prefix_hits"] += len(shared)
+            self.block_mgr.allocate(req.rid, need,
+                                    limit_blocks=self._effective_blocks)
+            ids = self.block_mgr.blocks_of(req.rid)
             if req.swap_kv is not None:
-                self._swap_in(slot, req, ids)
+                self._swap_in(slot, req, ids, n_shared=len(shared))
             else:
                 self._prefill_into(slot, req, ids)
 
@@ -272,12 +305,18 @@ class ServingEngine:
         self._set_table_row(slot, ids)
         view = self._slot_view(slot)
         view["lengths"] = jnp.zeros((1,), jnp.int32)
+        # Shared prefix blocks in `ids` are re-written here with the exact
+        # bytes they already hold: causal attention makes prefix KV a pure
+        # function of the prefix tokens, and scales are global post-
+        # calibration — so the logits get their full prompt while the
+        # other holders' KV stays bit-identical.
         logits, new_cache = prefill(
             self.params, {"tokens": prompt, "lengths": jnp.array([p])},
             view, self.cfg, prec)
         self._merge_view(new_cache, slot)
         self.cache["lengths"] = self.cache["lengths"].at[slot].set(p)
         self._scales_calibrated = True
+        self.block_mgr.register_prefix(req.rid, req.prompt)
         self.key, k = jax.random.split(self.key)
         tok = _sample_token(logits[0], k, self.temperature)
         self.pending_tok[slot] = tok
@@ -286,7 +325,11 @@ class ServingEngine:
 
     # -- preemption / swap ---------------------------------------------------
     def _swap_out(self, slot: int, req: Request):
-        """Copy the request's blocks to host, free them, requeue at front."""
+        """Copy the request's blocks to host, release them, requeue at
+        front.  `free` is refcount-aware: blocks shared with an active
+        request stay resident in the pool (never evicted from under a
+        reader) — the host copy spans the full table anyway so swap-in
+        can restore whatever is no longer shared by then."""
         ids = self.block_mgr.blocks_of(req.rid)
         idx = jnp.asarray(ids, jnp.int32)
         host = {}
@@ -306,22 +349,30 @@ class ServingEngine:
         self._clear_slot(slot)
         self.queue.insert(0, req)
 
-    def _swap_in(self, slot: int, req: Request, ids: List[int]):
-        """Copy swapped blocks back into fresh pool rows; no recompute."""
+    def _swap_in(self, slot: int, req: Request, ids: List[int],
+                 n_shared: int = 0):
+        """Copy swapped blocks back into fresh pool rows; no recompute.
+
+        The leading `n_shared` table entries came from a prefix-index hit
+        at re-admission: those pool rows already hold the prompt's KV
+        (content-keyed, bit-identical), so only the tail of the host copy
+        is restored."""
         n = next(iter(req.swap_kv.values()))[0].shape[1] if req.swap_kv \
             else 0
-        idx = jnp.asarray(ids[:n], jnp.int32)
-        slots = {}
-        for name, sd in self.cache["slots"].items():
-            merged = dict(sd)
-            if "kv" in sd and name in req.swap_kv:
-                kv = sd["kv"]
-                host_k, host_v = req.swap_kv[name]
-                merged["kv"] = kv._replace(
-                    k=kv.k.at[:, idx].set(jnp.asarray(host_k)),
-                    v=kv.v.at[:, idx].set(jnp.asarray(host_v)))
-            slots[name] = merged
-        self.cache = dict(self.cache, slots=slots)
+        s = min(n_shared, n)
+        if n > s:
+            idx = jnp.asarray(ids[s:n], jnp.int32)
+            slots = {}
+            for name, sd in self.cache["slots"].items():
+                merged = dict(sd)
+                if "kv" in sd and name in req.swap_kv:
+                    kv = sd["kv"]
+                    host_k, host_v = req.swap_kv[name]
+                    merged["kv"] = kv._replace(
+                        k=kv.k.at[:, idx].set(jnp.asarray(host_k[:, s:n])),
+                        v=kv.v.at[:, idx].set(jnp.asarray(host_v[:, s:n])))
+                slots[name] = merged
+            self.cache = dict(self.cache, slots=slots)
         self._set_table_row(slot, ids)
         self.cache["lengths"] = self.cache["lengths"].at[slot].set(
             req.swap_tokens)
@@ -330,6 +381,9 @@ class ServingEngine:
         req.swap_kv = None
         req.swap_tokens = 0
         self.stats["swap_ins"] += 1
+        # the restored prompt blocks can serve later same-prompt requests
+        # (no-op for prefixes still indexed by another holder)
+        self.block_mgr.register_prefix(req.rid, req.prompt)
 
     def _youngest_active(self, exclude: Optional[int] = None) -> Optional[int]:
         victims = [i for i, r in enumerate(self.slot_req)
@@ -365,7 +419,8 @@ class ServingEngine:
                     break
                 if self.block_mgr.can_allocate(
                         need, limit_blocks=self._effective_blocks):
-                    self.block_mgr.allocate(req.rid, need)
+                    self.block_mgr.allocate(
+                        req.rid, need, limit_blocks=self._effective_blocks)
                     self._set_table_row(slot,
                                         self.block_mgr.blocks_of(req.rid))
                     break
@@ -378,6 +433,50 @@ class ServingEngine:
                         "kv_budget_bytes or block_size")
                 self._swap_out(victim, self.slot_req[victim])
 
+    # -- copy-on-write -------------------------------------------------------
+    def _copy_block(self, src: int, dst: int):
+        """Duplicate pool row `src` into `dst` across every attention
+        layer (the device half of CoW)."""
+        slots = {}
+        for name, sd in self.cache["slots"].items():
+            merged = dict(sd)
+            if "kv" in sd:
+                merged["kv"] = paged_copy_rows(sd["kv"], [src], [dst])
+            slots[name] = merged
+        self.cache = dict(self.cache, slots=slots)
+
+    def _cow_for_decode(self):
+        """The next decode step appends at position `lengths[slot]`; if the
+        block holding that position is shared (refcount > 1), the scatter
+        would corrupt every other holder — privatize it first: allocate a
+        fresh block, copy the physical row, remap the table entry.
+        Preempts the youngest other request if CoW itself needs a block."""
+        lengths = np.asarray(self.cache["lengths"])
+        for slot in range(self.max_slots):
+            req = self.slot_req[slot]
+            if req is None:
+                continue
+            ids = self.block_mgr.blocks_of(req.rid)
+            j = int(lengths[slot]) // self.block_size
+            if j >= len(ids) or not self.block_mgr.is_shared(ids[j]):
+                continue
+            while True:
+                try:
+                    res = self.block_mgr.cow(
+                        req.rid, j, limit_blocks=self._effective_blocks)
+                    break
+                except NoFreeBlocksError:
+                    victim = self._youngest_active(exclude=slot)
+                    if victim is None:
+                        raise
+                    self._swap_out(victim, self.slot_req[victim])
+            if res is None:       # a preemption above dropped the refcount
+                continue
+            old, new = res
+            self._copy_block(old, new)
+            self._set_table_row(slot, self.block_mgr.blocks_of(req.rid))
+            self.stats["cow_copies"] += 1
+
     # -- main loop ---------------------------------------------------------
     def run(self, max_steps: int = 1000) -> ServeReport:
         while (self.queue or any(r is not None for r in self.slot_req)) \
@@ -387,6 +486,9 @@ class ServingEngine:
             if self.admission == "ondemand":
                 self._grow_for_decode()
                 self._try_admit()      # eviction may have freed a slot
+            self._cow_for_decode()
+            self.stats["peak_blocks"] = max(self.stats["peak_blocks"],
+                                            self.block_mgr.blocks_in_use)
             active = [i for i, r in enumerate(self.slot_req) if r is not None]
             if not active:
                 break
@@ -419,6 +521,9 @@ class ServingEngine:
             budget_tokens=self.budget_tokens,
             swap_outs=self.stats["swap_outs"],
             swap_ins=self.stats["swap_ins"],
+            peak_blocks_in_use=self.stats["peak_blocks"],
+            prefix_hit_blocks=self.stats["prefix_hits"],
+            cow_copies=self.stats["cow_copies"],
         )
 
 

@@ -12,7 +12,7 @@ import numpy as np
 import pytest
 
 from repro.configs import REGISTRY, get_config
-from repro.core import BF16_ROLLOUT, FULL_FP8_ROLLOUT, PrecisionConfig
+from repro.core import BF16_ROLLOUT, FULL_FP8_ROLLOUT
 from repro.core.fp8_params import quantize_params
 from repro.models import (
     decode_step,

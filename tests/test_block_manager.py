@@ -1,6 +1,10 @@
-"""Paged KV-cache tests: block allocator, FP8/BF16 capacity ratio, paged
-attention numerics + kernel, and engine-level preemption/swap invariants
-(ports the spirit of vLLM's test_device_aware_block_allocator.py)."""
+"""Paged KV-cache tests: block allocator, refcount/copy-on-write sharing,
+FP8/BF16 capacity ratio, paged attention numerics + kernel, and
+engine-level preemption/swap/prefix-sharing invariants (ports the spirit
+of vLLM's test_device_aware_block_allocator.py and
+test_prefix_caching_block.py)."""
+from collections import Counter
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -15,6 +19,7 @@ from repro.rl import sync_policy_weights
 from repro.serving import (
     BlockManager,
     NoFreeBlocksError,
+    Request,
     ServingEngine,
     kv_bytes_per_token,
 )
@@ -76,6 +81,138 @@ def test_ensure_capacity_grows_by_ceil():
     assert len(mgr.ensure_capacity(rid=7, n_tokens=9)) == 1
     assert mgr.blocks_for_tokens(0) == 0
     assert mgr.blocks_for_tokens(1) == 1
+
+
+def test_allocate_enforces_limit_blocks_like_can_allocate():
+    """`allocate` must reject exactly what `can_allocate` rejects — the two
+    disagreeing under on-demand admission was a real bug (allocate used to
+    ignore the soft cap entirely)."""
+    mgr = BlockManager(num_blocks=8, block_size=4)
+    mgr.allocate(rid=0, n_blocks=2)
+    assert not mgr.can_allocate(2, limit_blocks=3)
+    with pytest.raises(NoFreeBlocksError):
+        mgr.allocate(rid=1, n_blocks=2, limit_blocks=3)
+    assert mgr.blocks_of(1) == [] and mgr.num_free_blocks == 6  # intact
+    assert mgr.can_allocate(1, limit_blocks=3)
+    mgr.allocate(rid=1, n_blocks=1, limit_blocks=3)
+    assert mgr.blocks_in_use == 3
+
+
+# ---------------------------------------------------------------------------
+# refcounts / prefix index / copy-on-write
+# ---------------------------------------------------------------------------
+
+def test_shared_block_double_free_impossible():
+    mgr = BlockManager(num_blocks=4, block_size=4)
+    a = mgr.allocate(rid=0, n_blocks=2)
+    mgr.acquire(1, a)                       # rid 1 shares both blocks
+    assert all(mgr.refcount(b) == 2 for b in a)
+    assert mgr.free(0) == []                # still referenced: nothing freed
+    assert mgr.num_free_blocks == 2 and all(mgr.refcount(b) == 1 for b in a)
+    assert mgr.free(0) == []                # double free: no-op by design
+    assert sorted(mgr.free(1)) == sorted(a)  # last holder frees for real
+    assert mgr.free(1) == []
+    assert mgr.num_free_blocks == 4 and mgr.blocks_in_use == 0
+
+
+def test_prefix_index_lookup_and_lifetime():
+    mgr = BlockManager(num_blocks=8, block_size=4)
+    prompt = np.arange(10, 20, dtype=np.int32)      # 2 full blocks + 2 toks
+    ids = mgr.allocate(rid=0, n_blocks=3)
+    assert mgr.register_prefix(0, prompt) == 2      # partial block not indexed
+    assert mgr.lookup_prefix(prompt) == ids[:2]
+    assert mgr.lookup_prefix(prompt[:8]) == ids[:2]
+    assert mgr.lookup_prefix(prompt[:7]) == ids[:1]  # only 1 full block
+    div = prompt.copy()
+    div[5] = 99                                      # diverges in block 2
+    assert mgr.lookup_prefix(div) == ids[:1]
+    assert mgr.lookup_prefix(div[::-1]) == []
+    mgr.free(0)                                      # refcount 0 kills entries
+    assert mgr.lookup_prefix(prompt) == []
+    off = BlockManager(num_blocks=8, block_size=4, enable_prefix_sharing=False)
+    off.allocate(rid=0, n_blocks=3)
+    assert off.register_prefix(0, prompt) == 0
+    assert off.lookup_prefix(prompt) == []
+
+
+def test_fork_and_cow_semantics():
+    mgr = BlockManager(num_blocks=4, block_size=4)
+    a = mgr.allocate(rid=0, n_blocks=2)
+    assert mgr.fork(0, 1) == a                   # dst shares the whole table
+    assert all(mgr.refcount(b) == 2 for b in a)
+    with pytest.raises(NoFreeBlocksError):
+        mgr.cow(1, 1, limit_blocks=mgr.blocks_in_use)  # same cap as allocate
+    assert mgr.blocks_of(1) == a                 # failed cow changed nothing
+    old, new = mgr.cow(1, 1, limit_blocks=mgr.blocks_in_use + 1)
+    assert old == a[1] and new not in a
+    assert mgr.blocks_of(1) == [a[0], new]
+    assert mgr.blocks_of(0) == a                 # donor table untouched
+    assert mgr.refcount(old) == 1 and mgr.refcount(new) == 1
+    assert mgr.cow(1, 1) is None                 # now exclusive: no copy
+    # exhaust the pool: cow must fail loudly, not corrupt
+    mgr.allocate(rid=2, n_blocks=mgr.num_free_blocks)
+    with pytest.raises(NoFreeBlocksError):
+        mgr.cow(1, 0)
+    assert mgr.blocks_of(1) == [a[0], new]
+
+
+def test_pool_accounting_under_interleaved_share_fork_free():
+    mgr = BlockManager(num_blocks=8, block_size=2, bytes_per_token=16)
+    a = mgr.allocate(rid=0, n_blocks=3)
+    mgr.acquire(1, a[:2])
+    mgr.allocate(rid=1, n_blocks=1)
+    assert mgr.blocks_in_use == 4                # sharing costs no blocks
+    assert mgr.bytes_in_use == 4 * 2 * 16
+    mgr.fork(0, 2)
+    assert mgr.blocks_in_use == 4
+    mgr.cow(2, 2)                                # privatize one entry
+    assert mgr.blocks_in_use == 5
+    mgr.free(0)
+    assert mgr.blocks_in_use == 4                # only a[2] died with rid 0
+    mgr.free(1)
+    assert mgr.blocks_in_use == 3                # rid 1's private block dies
+    mgr.free(2)
+    assert mgr.blocks_in_use == 0 and mgr.bytes_in_use == 0
+    assert mgr.num_free_blocks == 8
+
+
+def test_refcount_property_random_share_free_sequences():
+    hyp = pytest.importorskip("hypothesis")
+    st = hyp.strategies
+
+    @hyp.settings(deadline=None, max_examples=60)
+    @hyp.given(st.lists(st.tuples(st.integers(0, 3), st.integers(0, 15)),
+                        max_size=40))
+    def run(ops):
+        mgr = BlockManager(num_blocks=8, block_size=4)
+        for op, arg in ops:
+            rid = arg % 4
+            if op == 0 and mgr.can_allocate(1):
+                mgr.allocate(rid, 1)
+            elif op == 1:
+                src = (arg // 4) % 4
+                if src != rid and mgr.blocks_of(src):
+                    mgr.acquire(rid, mgr.blocks_of(src)[:1])
+            elif op == 2:
+                mgr.free(rid)
+            elif op == 3:
+                for i, b in enumerate(mgr.blocks_of(rid)):
+                    if mgr.is_shared(b) and mgr.num_free_blocks:
+                        mgr.cow(rid, i)
+                        break
+            # the invariants: refcounts == ownership multiplicity, the free
+            # list is disjoint from live blocks, nothing leaks or double-
+            # allocates
+            live = Counter(b for ids in mgr._owned.values() for b in ids)
+            assert dict(live) == mgr._refcount
+            assert set(mgr._free).isdisjoint(live)
+            assert len(mgr._free) + len(live) == 8
+            assert mgr.blocks_in_use == len(live)
+        for rid in range(4):
+            mgr.free(rid)
+        assert mgr.num_free_blocks == 8 and not mgr._refcount
+
+    run()
 
 
 # ---------------------------------------------------------------------------
@@ -209,3 +346,119 @@ def test_fp8_kv_removes_preemptions_at_fixed_budget(setup):
     assert len(reports["bf16"].completed) == 6
     assert reports["fp8"].useful_token_rate > reports["bf16"].useful_token_rate
     assert reports["fp8"].budget_tokens == 2 * reports["bf16"].budget_tokens
+
+
+# ---------------------------------------------------------------------------
+# engine-level prefix sharing: dedup'd admission, CoW, preemption safety
+# ---------------------------------------------------------------------------
+
+def test_same_prompt_group_admits_with_shared_prompt_blocks(setup):
+    """N same-prompt requests (the GRPO shape) must admit with
+    prompt_blocks + N*decode_blocks, not N*(prompt + decode): every
+    request past the first dedups its full prompt blocks against the
+    prefix index."""
+    cfg, params = setup
+    n = 4
+    prompt = np.concatenate([[tasks.BOS], np.arange(5, 12)]).astype(np.int32)
+    assert len(prompt) == 8                       # 2 full bf16 blocks of 4
+    eng = ServingEngine(params, cfg, BF16_ROLLOUT, max_slots=n,
+                        max_seq_len=32, admission="reserve")
+    for i in range(n):
+        eng.submit(prompt, max_new=8, rid=i)
+    eng._try_admit()
+    mgr = eng.block_mgr
+    prompt_blocks = mgr.blocks_for_tokens(len(prompt))          # 2
+    total_blocks = mgr.blocks_for_tokens(len(prompt) + 8)       # 4
+    decode_blocks = total_blocks - prompt_blocks                # 2
+    assert mgr.blocks_in_use == prompt_blocks + n * decode_blocks
+    assert eng.stats["prefix_hits"] == (n - 1) * prompt_blocks
+    # every active table starts with the same two physical blocks
+    tables = [mgr.blocks_of(i) for i in range(n)]
+    assert all(t[:prompt_blocks] == tables[0][:prompt_blocks] for t in tables)
+    assert all(mgr.refcount(b) == n for b in tables[0][:prompt_blocks])
+    # and the workload completes bit-identically to a sharing-off engine
+    rep = eng.run(max_steps=100)
+    eng_off = ServingEngine(params, cfg, BF16_ROLLOUT, max_slots=n,
+                            max_seq_len=32, admission="reserve",
+                            prefix_sharing=False)
+    for i in range(n):
+        eng_off.submit(prompt, max_new=8, rid=i)
+    rep_off = eng_off.run(max_steps=100)
+    assert {r.rid: r.generated for r in rep.completed} == \
+        {r.rid: r.generated for r in rep_off.completed}
+    assert rep.peak_blocks_in_use < rep_off.peak_blocks_in_use
+    assert mgr.blocks_in_use == 0                 # refcounts fully drained
+
+
+def test_cow_guard_on_forked_partial_block(setup):
+    """Fork a mid-flight request's table (rollout-style: shared partial
+    boundary block), then decode both: the first divergent append must
+    copy-on-write, and the donor's tokens must stay bit-exact vs an
+    uncontended run."""
+    cfg, params = setup
+    prompt = np.array([tasks.BOS, 5, 6, 7, 8, 9], np.int32)  # block 1 partial
+    ref = ServingEngine(params, cfg, BF16_ROLLOUT, max_slots=2,
+                        max_seq_len=32)
+    ref.submit(prompt, max_new=6, rid=0)
+    ref_tokens = ref.run(max_steps=50).completed[0].generated
+
+    eng = ServingEngine(params, cfg, BF16_ROLLOUT, max_slots=2,
+                        max_seq_len=32)
+    eng.submit(prompt, max_new=6, rid=0)
+    eng._try_admit()                              # rid 0 live in slot 0
+    req_b = Request(rid=1, prompt=prompt, max_new=6)
+    eng.block_mgr.fork(0, 1)                      # share ALL blocks
+    slot = eng._free_slot()
+    eng._set_table_row(slot, eng.block_mgr.blocks_of(1))
+    eng.cache["lengths"] = eng.cache["lengths"].at[slot].set(len(prompt))
+    eng.pending_tok[slot] = eng.pending_tok[0]
+    req_b.generated = [int(eng.pending_tok[0])]
+    eng.slot_req[slot] = req_b
+    rep = eng.run(max_steps=50)
+    assert rep.cow_copies >= 1                    # the guard actually fired
+    got = {r.rid: list(r.generated) for r in rep.completed}
+    assert got[0] == ref_tokens                   # donor bit-exact
+    assert got[1] == ref_tokens                   # same prompt+seed token
+    assert eng.block_mgr.blocks_in_use == 0
+
+
+def test_preemption_never_evicts_shared_blocks(setup):
+    """Under a budget tight enough to preempt, a victim's blocks that are
+    still referenced by an active request must stay resident (refcount
+    >= 1, not on the free list), and everyone must still finish with the
+    uncontended tokens."""
+    cfg, params = setup
+    n = 6
+    prompt = np.concatenate([[tasks.BOS], np.arange(5, 12)]).astype(np.int32)
+    per_b16 = kv_bytes_per_token(cfg, BF16_ROLLOUT)
+
+    def build(budget_tokens):
+        eng = ServingEngine(params, cfg, BF16_ROLLOUT, max_slots=4,
+                            max_seq_len=32, admission="ondemand",
+                            kv_budget_bytes=per_b16 * budget_tokens)
+        for i in range(n):
+            eng.submit(prompt, max_new=8, rid=i)
+        return eng
+
+    ref_out = {r.rid: list(r.generated)
+               for r in build(400).run(max_steps=400).completed}
+
+    eng = build(32)                               # tight: forces preemption
+    shared_seen = []
+    orig_swap_out = eng._swap_out
+
+    def checked_swap_out(slot, req):
+        shared = [b for b in eng.block_mgr.blocks_of(req.rid)
+                  if eng.block_mgr.is_shared(b)]
+        orig_swap_out(slot, req)
+        for b in shared:                          # still held by someone else
+            assert eng.block_mgr.refcount(b) >= 1
+            assert b not in eng.block_mgr._free
+        shared_seen.extend(shared)
+
+    eng._swap_out = checked_swap_out
+    rep = eng.run(max_steps=400)
+    assert rep.preemptions >= 1 and shared_seen   # the invariant was tested
+    assert len(rep.completed) == n
+    assert {r.rid: list(r.generated) for r in rep.completed} == ref_out
+    assert eng.block_mgr.blocks_in_use == 0

@@ -10,7 +10,6 @@ import sys
 import textwrap
 
 import jax
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.distributed.sharding import safe_spec

@@ -1,0 +1,187 @@
+"""Rollout-side prefix sharing: GRPO group sampling forks per-sample block
+tables off one shared prefill (rl/rollout.py `num_samples_per_prompt`).
+
+The load-bearing claim is bit-exactness: sharing the prompt's physical KV
+blocks and copy-on-writing the boundary block must be invisible to the
+model — a group run must produce byte-identical trajectories to the naive
+path that prefills every sample separately on identity tables."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import BF16_ROLLOUT, FULL_FP8_ROLLOUT
+from repro.data import tasks
+from repro.models import init_params
+from repro.rl import sync_policy_weights
+from repro.rl.rollout import SamplerConfig, generate
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _cfg(name="qwen3-8b", **kw):
+    base = dict(n_layers=2, d_model=64, d_ff=128,
+                vocab_size=tasks.VOCAB_SIZE, n_heads=4, n_kv_heads=2,
+                d_head=16)
+    base.update(kw)
+    return get_config(name).reduced(**base)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = _cfg()
+    params = init_params(cfg, jax.random.key(0))
+    return cfg, params
+
+
+@pytest.mark.parametrize("precision", [BF16_ROLLOUT, FULL_FP8_ROLLOUT],
+                         ids=["bf16", "fp8"])
+def test_group_sampling_matches_identity_tables(setup, precision):
+    """Same key, temperature 1: the forked-table group run must equal the
+    naive tiled run token-for-token and logprob-for-logprob.  Divergent
+    appends land in the shared boundary block's CoW copies, so any
+    cross-sample corruption would break this equality."""
+    cfg, params = setup
+    roll, _ = sync_policy_weights(params, precision)
+    prompts = jnp.array([[1, 5, 6, 7, 8, 9],
+                         [1, 9, 10, 11, 12, 4]], jnp.int32)
+    plens = jnp.array([6, 6])
+    samp = SamplerConfig(max_new_tokens=6, temperature=1.0)
+    group = 3
+    t_g = generate(roll, prompts, plens, jax.random.key(7), cfg, precision,
+                   samp, page_size=4, num_samples_per_prompt=group,
+                   shared_prefix_blocks=1)
+    t_ref = generate(roll, jnp.repeat(prompts, group, 0),
+                     jnp.repeat(plens, group, 0), jax.random.key(7), cfg,
+                     precision, samp, page_size=4)
+    assert t_g.response_tokens.shape == (2 * group, 6)
+    np.testing.assert_array_equal(np.asarray(t_g.response_tokens),
+                                  np.asarray(t_ref.response_tokens))
+    np.testing.assert_array_equal(np.asarray(t_g.rollout_logps),
+                                  np.asarray(t_ref.rollout_logps))
+    np.testing.assert_array_equal(np.asarray(t_g.response_mask),
+                                  np.asarray(t_ref.response_mask))
+    np.testing.assert_array_equal(np.asarray(t_g.prompt_tokens),
+                                  np.asarray(t_ref.prompt_tokens))
+    # samples within a group genuinely diverged (CoW was exercised, not
+    # bypassed by everyone sampling the same continuation)
+    resp = np.asarray(t_g.response_tokens)
+    assert any(not np.array_equal(resp[i * group], resp[i * group + 1])
+               for i in range(2))
+
+
+def test_group_sampling_greedy_is_group_invariant(setup):
+    """Temperature 0: every sample of a group must emit the identical
+    greedy continuation — and it must match a plain group=1 run."""
+    cfg, params = setup
+    prompts = jnp.array([[1, 5, 6, 7, 8, 9, 10, 3]], jnp.int32)
+    plens = jnp.array([8])
+    samp = SamplerConfig(max_new_tokens=5, temperature=0.0)
+    t1 = generate(params, prompts, plens, jax.random.key(0), cfg,
+                  BF16_ROLLOUT, samp, page_size=4)
+    tg = generate(params, prompts, plens, jax.random.key(0), cfg,
+                  BF16_ROLLOUT, samp, page_size=4, num_samples_per_prompt=4,
+                  shared_prefix_blocks=2)
+    one = np.asarray(t1.response_tokens)[0]
+    for row in np.asarray(tg.response_tokens):
+        np.testing.assert_array_equal(row, one)
+
+
+def test_group_sampling_ragged_prompts_with_shared_blocks_bound(setup):
+    """Ragged prompt lengths: the caller bounds the shared region by the
+    shortest prompt (`shared_prefix_blocks`); the fork must still be
+    bit-exact against the naive path."""
+    cfg, params = setup
+    prompts = jnp.array([[1, 5, 6, 7, 8, 0, 0, 0],
+                         [1, 9, 10, 11, 12, 4, 13, 14]], jnp.int32)
+    plens = jnp.array([5, 8])
+    samp = SamplerConfig(max_new_tokens=5, temperature=1.0)
+    group = 2
+    shared = int(jnp.min(plens)) // 4
+    t_g = generate(params, prompts, plens, jax.random.key(11), cfg,
+                   BF16_ROLLOUT, samp, page_size=4,
+                   num_samples_per_prompt=group,
+                   shared_prefix_blocks=shared)
+    t_ref = generate(params, jnp.repeat(prompts, group, 0),
+                     jnp.repeat(plens, group, 0), jax.random.key(11), cfg,
+                     BF16_ROLLOUT, samp, page_size=4)
+    np.testing.assert_array_equal(np.asarray(t_g.response_tokens),
+                                  np.asarray(t_ref.response_tokens))
+    np.testing.assert_array_equal(np.asarray(t_g.rollout_logps),
+                                  np.asarray(t_ref.rollout_logps))
+
+
+def test_group_sampling_ragged_prompts_default_is_safe(setup):
+    """Regression: the default shared_prefix_blocks must be safe for
+    ragged prompts.  With sharing defaulted off (None -> 0 shared blocks)
+    a short prompt's first divergent append can never land in a block
+    another sample reads, so the group run must stay bit-exact without
+    the caller passing any bound."""
+    cfg, params = setup
+    prompts = jnp.array([[1, 5, 6, 7, 8, 0, 0, 0],
+                         [1, 9, 10, 11, 12, 4, 13, 14]], jnp.int32)
+    plens = jnp.array([5, 8])
+    samp = SamplerConfig(max_new_tokens=5, temperature=1.0)
+    group = 2
+    t_g = generate(params, prompts, plens, jax.random.key(11), cfg,
+                   BF16_ROLLOUT, samp, page_size=4,
+                   num_samples_per_prompt=group)
+    t_ref = generate(params, jnp.repeat(prompts, group, 0),
+                     jnp.repeat(plens, group, 0), jax.random.key(11), cfg,
+                     BF16_ROLLOUT, samp, page_size=4)
+    np.testing.assert_array_equal(np.asarray(t_g.response_tokens),
+                                  np.asarray(t_ref.response_tokens))
+    np.testing.assert_array_equal(np.asarray(t_g.rollout_logps),
+                                  np.asarray(t_ref.rollout_logps))
+
+
+def test_group_pool_layout_is_smaller_than_naive():
+    """The point of sharing: the forked layout allocates
+    B*shared + B*G*private pool rows, strictly fewer than the naive
+    B*G*ceil(max_len/page) — and its tables keep every sample inside its
+    own private range beyond the shared prefix."""
+    from repro.rl.rollout import _fork_group, _group_layout, _prefill_tables
+
+    b, group, p, g, ps = 2, 4, 8, 7, 4
+    fp, priv, w = _group_layout(p, g, ps, 2)
+    assert (fp, priv, w) == (2, 2, 4)
+    assert _group_layout(p, g, ps, None)[0] == 0   # default: share nothing
+    assert _group_layout(p, g, ps, 99)[0] == p // ps  # clamped to the prompt
+    pool_rows = b * fp + b * group * priv
+    assert pool_rows == 20 < b * group * w == 32   # vs naive identity pool
+    pre = np.asarray(_prefill_tables(b, group, w, fp, priv))
+    # prompt 1's shared rows then its group-donor private rows
+    np.testing.assert_array_equal(pre[1], [2, 3, 4 + 4 * priv,
+                                           4 + 4 * priv + 1])
+    cache = {"slots": {}, "lengths": jnp.full((b,), p, jnp.int32),
+             "block_tables": jnp.zeros((b, w), jnp.int32)}
+    forked = _fork_group(cache, b, group, p, ps, fp, priv, w)
+    tbl = np.asarray(forked["block_tables"])
+    assert tbl.shape == (b * group, w)
+    for i in range(b):
+        for s in range(group):
+            row = tbl[i * group + s]
+            np.testing.assert_array_equal(row[:fp], [i * fp, i * fp + 1])
+            own0 = b * fp + (i * group + s) * priv
+            np.testing.assert_array_equal(row[fp:], [own0, own0 + 1])
+    # private ranges are pairwise disjoint across samples
+    privs = [tuple(tbl[r, fp:]) for r in range(b * group)]
+    assert len(set(privs)) == b * group
+    assert np.asarray(forked["lengths"]).tolist() == [p] * (b * group)
+
+
+def test_group_sampling_moe_routing_shapes(setup):
+    """decode routing tracks samples (N rows); prefill routing stays
+    per-prompt — the prefix compute is genuinely shared."""
+    cfg = _cfg("granite-moe-3b-a800m")
+    params = init_params(cfg, jax.random.key(0))
+    prompts = jnp.array([[tasks.BOS, 5, 6, 7]], jnp.int32)
+    t = generate(params, prompts, jnp.array([4]), jax.random.key(0), cfg,
+                 BF16_ROLLOUT, SamplerConfig(max_new_tokens=4),
+                 want_routing=True, page_size=4, num_samples_per_prompt=2,
+                 shared_prefix_blocks=1)
+    pre = t.routing["prefill"]["s0"]
+    dec = t.routing["decode"]["s0"]
+    assert pre.shape[1] == 1        # (R, B, P, K): one prefill per prompt
+    assert dec.shape[2] == 2        # (G, R, N, 1, K): decode per sample

@@ -10,7 +10,6 @@ import numpy as np
 
 from repro.core import (
     E4M3,
-    E4M3_MAX,
     E5M2,
     E5M2_MAX,
     QuantizedTensor,

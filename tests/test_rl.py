@@ -1,6 +1,5 @@
 """RL-stack tests: correction math, rollout engine, trainer loop, fault
 recovery, both calibration paradigms."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -1,10 +1,9 @@
 """Roofline / dry-run infrastructure tests (no 512-device mesh needed)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
-from repro.configs import ALL_SHAPES, REGISTRY, get_config
+from repro.configs import REGISTRY, get_config
 from repro.configs.base import DECODE_32K, PREFILL_32K, TRAIN_4K
 from repro.core.precision import FULL_FP8_ROLLOUT
 from repro.launch import steps as steps_mod

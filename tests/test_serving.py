@@ -1,6 +1,5 @@
 """Serving-engine tests: capacity accounting, preemption, fp8-KV benefits."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

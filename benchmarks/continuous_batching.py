@@ -1,0 +1,239 @@
+"""Continuous-batching scheduler: chunked prefill TTFT + eviction policies.
+
+Two experiments on the real serving engine, both driven step-by-step so a
+token-unit clock can model arrival time (one unit = one token traced by
+the model, or one KV row moved over the host link by preemption):
+
+1. **Chunked prefill vs batch-1 admission (time-to-first-token).**  A
+   Poisson arrival trace is served twice at the same device byte budget:
+   once with the legacy batch-1 admission (each admission traces one
+   fixed `prompt_pad`-width prefill before anyone else makes progress)
+   and once with chunked prefill (`prefill_chunk` tokens per step,
+   bounded by the scheduler's `StepBudget`, piggybacked alongside
+   decode).  Chunked admission stops paying the fixed pad width for
+   short prompts and stops serializing bursts, so mean TTFT drops.
+
+2. **Eviction policies on a GRPO group-sharing trace.**  One heavy
+   unique-prompt request plus a group of same-prompt requests (the GRPO
+   shape: prompt blocks physically shared) run under a byte budget that
+   is *shrunk* mid-flight — the RL serving reality where the trainer
+   reclaims HBM at a weight sync.  The scheduler must shed load:
+   `youngest` evicts group members whose blocks are mostly shared
+   (freeing almost nothing, so it evicts again and again and pays the
+   swap tax each time), while `private-blocks` scores victims by
+   refcount-1 blocks actually freed and sheds the heavy request once.
+   Both finish bit-identically; the useful-token-rate (emitted tokens
+   per clock unit, swap traffic included) separates them.
+
+Run directly for CSV rows, or with --json/--check from the CI bench-smoke
+job to emit machine-readable results and assert the headline invariants.
+"""
+from __future__ import annotations
+
+import json
+
+import jax
+import numpy as np
+
+from repro.configs import tiny_serving_config as _cfg
+from repro.core.precision import BF16_ROLLOUT, FP8_KV_ONLY_ROLLOUT
+from repro.data import tasks
+from repro.models import init_params
+from repro.rl import sync_policy_weights
+from repro.serving import ServingEngine, StepBudget, kv_bytes_per_token
+
+
+def _drive(eng, trace, *, shrink_at=None, shrink_frac=1.0, max_iters=4000):
+    """Step the engine against (arrival_clock, prompt, max_new) tuples.
+
+    The clock advances by each decision's `cost_tokens`; requests are
+    submitted once the clock passes their arrival.  Returns per-request
+    TTFT (first token clock - arrival), the final clock, and the engine's
+    stats/tokens."""
+    order = sorted(range(len(trace)), key=lambda i: trace[i][0])
+    clock, idx = 0.0, 0
+    arrival, ttft, reqs = {}, {}, {}
+    full_budget, shrunk = eng.budget_tokens, False
+    for _ in range(max_iters):
+        while idx < len(order) and trace[order[idx]][0] <= clock:
+            rid = order[idx]
+            t0, prompt, max_new = trace[rid]
+            eng.submit(prompt, max_new=max_new, rid=rid)
+            arrival[rid] = t0
+            reqs[rid] = eng.queue[-1]
+            idx += 1
+        if shrink_at is not None and not shrunk and \
+                eng.stats["steps"] >= shrink_at:
+            eng.budget_tokens = int(full_budget * shrink_frac)
+            shrunk = True
+        decision = eng.step()
+        if decision.is_empty:
+            if idx < len(order):           # idle: jump to the next arrival
+                clock = max(clock, trace[order[idx]][0])
+                continue
+            break
+        clock += decision.cost_tokens
+        for rid, req in reqs.items():
+            if rid not in ttft and req.generated:
+                ttft[rid] = clock - arrival[rid]
+        if len(eng.done) == len(trace):
+            break
+    assert len(eng.done) == len(trace), \
+        f"trace did not complete: {len(eng.done)}/{len(trace)}"
+    return dict(
+        mean_ttft=float(np.mean([ttft[r] for r in sorted(ttft)])),
+        clock=clock,
+        steps=eng.stats["steps"],
+        emitted=eng.stats["emitted"],
+        useful_token_rate=eng.stats["emitted"] / max(clock, 1e-9),
+        preemptions=eng.stats["preemptions"],
+        wasted_tokens=eng.stats["wasted_tokens"],
+        prefill_chunks=eng.stats["prefill_chunks"],
+        tokens={r.rid: list(map(int, r.generated)) for r in eng.done},
+    )
+
+
+# ---------------------------------------------------------------------------
+# experiment 1: chunked prefill vs batch-1 admission under Poisson arrivals
+# ---------------------------------------------------------------------------
+
+def run_ttft(n_requests: int = 10, seed: int = 0, max_new: int = 8,
+             rate: float = 1 / 12.0, prefill_chunk: int = 4) -> dict:
+    # BF16 KV isolates the *scheduling* effect and keeps the two admission
+    # modes bit-exact: under FP8 KV the inference-side scale calibration
+    # observes a different amax window (first chunk vs whole first prompt),
+    # which changes quantized bytes — a calibration property, not a
+    # scheduling one (the engine tests cover fp8 chunked serving).
+    cfg = _cfg()
+    params = init_params(cfg, jax.random.key(seed))
+    prec = BF16_ROLLOUT
+    budget = kv_bytes_per_token(cfg, prec) * 4 * 24
+    rng = np.random.default_rng(seed)
+    # Poisson arrivals (exponential inter-arrival in clock token-units),
+    # prompt lengths <= prompt_pad so BOTH admission modes can serve them
+    trace, t = [], 0.0
+    for _ in range(n_requests):
+        t += rng.exponential(1.0 / rate)
+        plen = int(rng.integers(5, 16))
+        prompt = np.concatenate(
+            [[tasks.BOS], rng.integers(4, 19, size=plen - 1)]).astype(np.int32)
+        trace.append((t, prompt, max_new))
+
+    out = {}
+    for mode, kw in (
+            ("batch1", {}),
+            ("chunked", dict(prefill_chunk=prefill_chunk,
+                             step_budget=StepBudget(
+                                 prefill_tokens=2 * prefill_chunk)))):
+        eng = ServingEngine(params, cfg, prec, max_slots=4, max_seq_len=32,
+                            kv_budget_bytes=budget, seed=seed,
+                            admission="ondemand", eos_id=None, **kw)
+        out[mode] = _drive(eng, trace)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# experiment 2: eviction policies on a GRPO group-sharing trace
+# ---------------------------------------------------------------------------
+
+def run_eviction(group: int = 6, seed: int = 0, budget_blocks: int = 14,
+                 shrink_at: int = 6, shrink_frac: float = 0.5) -> dict:
+    cfg = _cfg()
+    params = init_params(cfg, jax.random.key(seed))
+    prec = FP8_KV_ONLY_ROLLOUT
+    roll, _ = sync_policy_weights(params, prec)
+    budget = kv_bytes_per_token(cfg, BF16_ROLLOUT) * 4 * budget_blocks
+    rng = np.random.default_rng(seed)
+    heavy = np.concatenate(
+        [[tasks.BOS], rng.integers(4, 19, size=15)]).astype(np.int32)
+    shared = np.concatenate(
+        [[tasks.BOS], rng.integers(4, 19, size=7)]).astype(np.int32)
+    # rid 0 = the heavy unique-prompt request (all blocks private);
+    # rids 1..group = one GRPO group (prompt blocks physically shared),
+    # all arriving at t=0 — the byte budget then shrinks mid-decode
+    trace = [(0.0, heavy, 20)] + [(0.0, shared, 16)] * group
+
+    out = {}
+    for policy in ("youngest", "lru", "private-blocks"):
+        eng = ServingEngine(roll, cfg, prec, max_slots=8, max_seq_len=48,
+                            kv_budget_bytes=budget, seed=seed,
+                            admission="ondemand", eviction=policy,
+                            eos_id=None)
+        out[policy] = _drive(eng, trace, shrink_at=shrink_at,
+                             shrink_frac=shrink_frac)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# harness / CI plumbing
+# ---------------------------------------------------------------------------
+
+def check(results: dict) -> None:
+    """The CI gates for the two headline claims."""
+    t = results["ttft"]
+    assert t["chunked"]["mean_ttft"] < t["batch1"]["mean_ttft"], (
+        "chunked prefill must strictly lower mean TTFT vs batch-1 "
+        f"admission: {t['chunked']['mean_ttft']:.1f} vs "
+        f"{t['batch1']['mean_ttft']:.1f}")
+    assert t["chunked"]["tokens"] == t["batch1"]["tokens"], \
+        "chunked prefill changed decoded tokens (must be bit-exact)"
+    e = results["eviction"]
+    pb, yg = e["private-blocks"], e["youngest"]
+    assert pb["useful_token_rate"] > yg["useful_token_rate"], (
+        "private-blocks must beat youngest on useful-token-rate in the "
+        f"group-sharing trace: {pb['useful_token_rate']:.4f} vs "
+        f"{yg['useful_token_rate']:.4f}")
+    assert pb["tokens"] == yg["tokens"] == e["lru"]["tokens"], \
+        "eviction policy changed decoded tokens (must be bit-exact)"
+
+
+def summarize(results: dict):
+    rows = []
+    t = results["ttft"]
+    for mode in ("batch1", "chunked"):
+        m = t[mode]
+        rows.append((f"continuous_batching/ttft_{mode}", 0.0,
+                     f"mean_ttft={m['mean_ttft']:.1f};"
+                     f"clock={m['clock']:.0f};"
+                     f"steps={m['steps']};chunks={m['prefill_chunks']};"
+                     f"useful_token_rate={m['useful_token_rate']:.4f}"))
+    rows.append(("continuous_batching/ttft_headline", 0.0,
+                 f"ttft_x={t['batch1']['mean_ttft'] / max(t['chunked']['mean_ttft'], 1e-9):.2f};"
+                 f"bit_exact={t['chunked']['tokens'] == t['batch1']['tokens']}"))
+    for policy, m in results["eviction"].items():
+        rows.append((f"continuous_batching/evict_{policy}", 0.0,
+                     f"useful_token_rate={m['useful_token_rate']:.4f};"
+                     f"preemptions={m['preemptions']};"
+                     f"wasted_tokens={m['wasted_tokens']};"
+                     f"clock={m['clock']:.0f}"))
+    return rows
+
+
+def main(quick: bool = False, json_path=None, run_check: bool = False):
+    results = {
+        "ttft": run_ttft(n_requests=6 if quick else 10),
+        "eviction": run_eviction(group=4 if quick else 6),
+    }
+    for name, us, derived in summarize(results):
+        print(f"{name},{us:.1f},{derived}")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(results, f, indent=2, default=float)
+        print(f"# wrote {json_path}")
+    if run_check:
+        check(results)
+        print("# continuous-batching invariants hold (chunked prefill "
+              "lowers TTFT; private-blocks eviction beats youngest)")
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller trace (what benchmarks.run uses)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write the results as JSON")
+    ap.add_argument("--check", action="store_true",
+                    help="assert the TTFT + eviction gates (CI)")
+    args = ap.parse_args()
+    main(quick=args.quick, json_path=args.json, run_check=args.check)

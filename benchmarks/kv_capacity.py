@@ -16,7 +16,7 @@ import json
 import jax
 import numpy as np
 
-from repro.configs import get_config
+from repro.configs import tiny_serving_config
 from repro.core.precision import BF16_ROLLOUT, FP8_KV_ONLY_ROLLOUT
 from repro.data import tasks
 from repro.models import init_params
@@ -25,9 +25,7 @@ from repro.serving import ServingEngine, kv_bytes_per_token
 
 
 def run(n_requests: int = 10, seed: int = 0, max_new: int = 10):
-    cfg = get_config("qwen3-8b").reduced(
-        n_layers=2, d_model=64, d_ff=128, vocab_size=tasks.VOCAB_SIZE,
-        n_heads=4, n_kv_heads=2, d_head=16)
+    cfg = tiny_serving_config()
     params = init_params(cfg, jax.random.key(seed))
     # ~3.5 requests' worth of BF16 KV: on-demand admission over-commits and
     # must preempt under BF16; FP8 holds 2x tokens in the same bytes.

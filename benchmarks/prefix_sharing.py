@@ -23,18 +23,12 @@ import json
 import jax
 import numpy as np
 
-from repro.configs import get_config
+from repro.configs import tiny_serving_config as _cfg
 from repro.core.precision import FP8_KV_ONLY_ROLLOUT, BF16_ROLLOUT
 from repro.data import tasks
 from repro.models import init_params
 from repro.rl import sync_policy_weights
 from repro.serving import ServingEngine, kv_bytes_per_token
-
-
-def _cfg():
-    return get_config("qwen3-8b").reduced(
-        n_layers=2, d_model=64, d_ff=128, vocab_size=tasks.VOCAB_SIZE,
-        n_heads=4, n_kv_heads=2, d_head=16)
 
 
 def _report_dict(rep) -> dict:

@@ -46,3 +46,13 @@ def get_config(name: str) -> ArchConfig:
 __all__ = ["ArchConfig", "ShapeConfig", "get_config", "REGISTRY", "ASSIGNED",
            "PAPER", "ALL_SHAPES", "TRAIN_4K", "PREFILL_32K", "DECODE_32K",
            "LONG_500K"]
+
+
+def tiny_serving_config() -> ArchConfig:
+    """The reduced qwen3-8b the serving benchmarks and tests measure — one
+    definition so they can never silently diverge on the model."""
+    from repro.data import tasks
+    return get_config("qwen3-8b").reduced(
+        n_layers=2, d_model=64, d_ff=128, vocab_size=tasks.VOCAB_SIZE,
+        n_heads=4, n_kv_heads=2, d_head=16)
+__all__ += ["tiny_serving_config"]

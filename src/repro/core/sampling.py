@@ -1,0 +1,43 @@
+"""Shared token sampler for every decode loop in the stack.
+
+The rollout engine (`rl/rollout.py`), the serving engine
+(`serving/engine.py`) and any future speculative/beam path all sample the
+next token from the same logits contract: f32 logits, temperature 0 means
+greedy argmax, temperature > 0 means (optionally top-k truncated)
+categorical sampling.  Keeping one implementation guarantees the rollout
+and serving paths stay bit-identical for the same logits/key — the
+train-inference-consistency story of the paper extends to the sampler.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample(logits: jax.Array, key, temperature: float, top_k: int = 0,
+           want_logp: bool = True):
+    """Sample next tokens from `logits` (..., V).
+
+    Returns (tokens, logps): the sampled ids and their log-probabilities
+    under the (temperature-scaled, top-k-truncated) sampling distribution.
+    temperature <= 0 is greedy argmax; logps then come from the untempered
+    softmax (the rollout-side pi^FP8 convention of TIS).
+
+    `want_logp=False` skips the vocab-wide log_softmax and returns
+    (tokens, None) — the serving engine discards logps, and the softmax
+    is pure waste on its per-step hot loop.
+    """
+    logits = logits.astype(jnp.float32)
+    if temperature <= 0.0:
+        tok = jnp.argmax(logits, axis=-1)
+    else:
+        scaled = logits / temperature
+        if top_k > 0:
+            thresh = jax.lax.top_k(scaled, top_k)[0][..., -1:]
+            scaled = jnp.where(scaled < thresh, -1e30, scaled)
+        logits = scaled
+        tok = jax.random.categorical(key, logits, axis=-1)
+    if not want_logp:
+        return tok, None
+    logp = jax.nn.log_softmax(logits, -1)
+    return tok, jnp.take_along_axis(logp, tok[..., None], -1)[..., 0]

@@ -1,7 +1,7 @@
 """Serving launcher: continuous batching with FP8 weights + FP8 KV cache.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --reduced \
-        --requests 16 --precision fp8
+        --requests 16 --precision fp8 --prefill-chunk 8 --eviction lru
 """
 from __future__ import annotations
 
@@ -16,7 +16,12 @@ from repro.data import tasks
 from repro.launch.train import PRECISIONS
 from repro.models import init_params
 from repro.rl import sync_policy_weights
-from repro.serving import ServingEngine, kv_bytes_per_token
+from repro.serving import (
+    EVICTION_POLICIES,
+    ServingEngine,
+    StepBudget,
+    kv_bytes_per_token,
+)
 
 
 def main(argv=None):
@@ -34,6 +39,18 @@ def main(argv=None):
                     default="reserve",
                     help="reserve: worst-case block reservation; "
                          "ondemand: vLLM-style growth + swap preemption")
+    ap.add_argument("--eviction", choices=sorted(EVICTION_POLICIES),
+                    default="youngest",
+                    help="preemption victim-selection policy")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked prefill width in tokens (default: "
+                         "legacy batch-1 prefill at --prompt-pad width)")
+    ap.add_argument("--prefill-budget", type=int, default=None,
+                    help="max prefill tokens scheduled per engine step")
+    ap.add_argument("--decode-kernel", choices=("gather", "paged"),
+                    default="gather",
+                    help="paged: Pallas fp8_paged_decode_attention "
+                         "(interpret on CPU, compiled on TPU)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -48,11 +65,17 @@ def main(argv=None):
     if args.budget_tokens:
         budget = args.budget_tokens * max(
             kv_bytes_per_token(cfg, precision), 1)
+    step_budget = StepBudget(prefill_tokens=args.prefill_budget) \
+        if args.prefill_budget else None
     eng = ServingEngine(rollout_params, cfg, precision,
                         max_slots=args.slots, max_seq_len=64,
                         kv_budget_bytes=budget, seed=args.seed,
                         block_size=args.block_size,
-                        admission=args.admission)
+                        admission=args.admission,
+                        eviction=args.eviction,
+                        prefill_chunk=args.prefill_chunk,
+                        step_budget=step_budget,
+                        decode_kernel=args.decode_kernel)
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):
         prob = tasks.sample_problem(rng)
@@ -65,6 +88,7 @@ def main(argv=None):
         "swap_outs": report.swap_outs,
         "swap_ins": report.swap_ins,
         "wasted_tokens": report.wasted_tokens,
+        "prefill_chunks": report.prefill_chunks,
         "emitted_tokens": report.emitted_tokens,
         "mean_occupancy": round(report.mean_occupancy, 4),
         "useful_token_rate": round(report.useful_token_rate, 4),

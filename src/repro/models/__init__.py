@@ -6,11 +6,12 @@ from repro.models.transformer import (
     init_cache,
     init_params,
     prefill,
+    prefill_chunk,
     token_logprobs,
 )
 
 __all__ = [
     "attention", "blocks", "common", "mlp", "moe", "ssm", "transformer",
     "init_params", "forward_train", "token_logprobs", "init_cache",
-    "prefill", "decode_step",
+    "prefill", "prefill_chunk", "decode_step",
 ]

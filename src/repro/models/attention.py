@@ -427,6 +427,58 @@ def attention_prefill(
     return linear(out, params["wo"], precision=precision), cache
 
 
+def attention_prefill_chunk(
+    x: jax.Array,                # (B, C, D) hidden of this prompt chunk
+    params: dict,
+    cfg,
+    cache: PagedKVCache,
+    precision: PrecisionConfig,
+    *,
+    start: jax.Array,            # (B,) tokens already in the cache
+    lengths: jax.Array,          # (B,) total valid tokens AFTER this chunk
+    block_tables: jax.Array,     # (B, W)
+    use_rope: bool = True,
+):
+    """Chunked-prefill attention: write C prompt tokens at positions
+    [start, start+C) through the block table, then attend each of them over
+    everything reachable so far — the KV of earlier chunks is *gathered
+    back from the pool* (the same table-gather decode uses), so a prompt of
+    any length streams through a fixed-width chunk trace.
+
+    Positions at or past `lengths` (ragged final chunk) scatter to the
+    trash block and their outputs are garbage the caller never reads.
+    """
+    assert isinstance(cache, PagedKVCache), "chunked prefill is paged-only"
+    b, c, _ = x.shape
+    q, k, v = _project_qkv(x, params, cfg, precision)
+    positions = start[:, None] + jnp.arange(c)[None, :]         # (B, C)
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    kq, vq, cache = _quantize_kv(k, v, cache, precision, recalibrate=True)
+    valid = positions < lengths[:, None]
+    cache = paged_write(cache, block_tables, positions, valid, kq, vq)
+
+    # gather the whole reachable prefix (earlier chunks included) and mask
+    # causally by absolute position — bit-identical bytes to what a
+    # one-shot prefill would have written, so the logits agree
+    w, bs = block_tables.shape[1], cache.block_size
+    phys = _paged_physical(cache, block_tables)
+    k_raw = cache.k[phys].reshape(b, w * bs, cache.k.shape[2], cfg.d_head)
+    v_raw = cache.v[phys].reshape(b, w * bs, cache.v.shape[2], cfg.d_head)
+    if cache.quantized:
+        k_all = dequantize_per_tensor(k_raw, cache.k_scale, x.dtype)
+        v_all = dequantize_per_tensor(v_raw, cache.v_scale, x.dtype)
+    else:
+        k_all, v_all = k_raw, v_raw
+    k_pos = jnp.arange(w * bs)[None, None, :]                   # (1, 1, S')
+    mask = jnp.logical_and(k_pos <= positions[:, :, None],
+                           k_pos < lengths[:, None, None])      # (B, C, S')
+    out = _sdpa(q, k_all, v_all, mask, precision, cfg)
+    return linear(out, params["wo"], precision=precision), cache
+
+
 def attention_decode(
     x: jax.Array,                # (B, 1, D) current-token hidden
     params: dict,

@@ -91,6 +91,7 @@ def apply_slot_full(
     forced_topk=None,
     use_rope=True,
     block_tables=None,             # (B, W) when kv_cache is paged
+    chunk_start=None,              # (B,) -> chunked prefill of [start, start+C)
 ):
     """Returns (x, aux_dict, new_kv_cache, new_ssm_state)."""
     aux = {}
@@ -100,7 +101,12 @@ def apply_slot_full(
     if spec.mixer == "attn":
         p = slot_params["attn"]
         xn = rms_norm(x, p["norm_scale"], cfg.norm_eps)
-        if kv_cache is not None:
+        if kv_cache is not None and chunk_start is not None:
+            h, new_kv = attn_mod.attention_prefill_chunk(
+                xn, p, cfg, kv_cache, precision, start=chunk_start,
+                lengths=lengths, block_tables=block_tables,
+                use_rope=use_rope)
+        elif kv_cache is not None:
             h, new_kv = attn_mod.attention_prefill(
                 xn, p, cfg, kv_cache, precision, lengths=lengths,
                 positions=positions, use_rope=use_rope,
@@ -163,6 +169,7 @@ def apply_slot_decode(
     lengths=None,
     forced_topk=None,
     block_tables=None,             # (B, W) when kv_cache is paged
+    use_kernel=False,              # route attention through the Pallas kernel
 ):
     aux = {}
     new_kv, new_ssm = kv_cache, ssm_state
@@ -172,7 +179,7 @@ def apply_slot_decode(
         xn = rms_norm(x, p["norm_scale"], cfg.norm_eps)
         h, new_kv = attn_mod.attention_decode(
             xn, p, cfg, kv_cache, lengths, precision,
-            block_tables=block_tables)
+            block_tables=block_tables, use_kernel=use_kernel)
         x = x + h
     else:
         p = slot_params["ssm"]

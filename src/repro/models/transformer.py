@@ -408,6 +408,66 @@ def prefill(
     return out
 
 
+def prefill_chunk(
+    params,
+    tokens: jax.Array,        # (B, C) one chunk of prompt tokens
+    start: jax.Array,         # (B,) tokens already written to the cache
+    chunk_lengths: jax.Array,  # (B,) valid tokens in this chunk (<= C)
+    cache: dict,
+    cfg,
+    precision: PrecisionConfig,
+):
+    """Process one prompt chunk of a *paged* cache (continuous-batching
+    chunked prefill): scatter the chunk's KV at positions
+    [start, start+chunk_lengths) and return logits at the chunk's last
+    valid position.
+
+    Attention gathers earlier chunks back from the pool through the block
+    table, so a prompt of any length streams through one fixed-width (C)
+    trace instead of one fixed-width-`prompt_pad` trace per admission.
+    SSM slots carry their recurrent state chunk-to-chunk; enc-dec/VLM
+    inputs are not supported on this path (they prefill one-shot).
+    """
+    assert cache.get("block_tables") is not None, \
+        "chunked prefill needs a paged cache with block tables"
+    assert not cfg.is_encdec and cfg.frontend is None, \
+        "chunked prefill serves decoder-only text models"
+    pattern = blocks_mod.layer_pattern(cfg)
+    x = _embed(params, tokens)
+    b, c, _ = x.shape
+    new_lengths = start + chunk_lengths
+    block_tables = cache["block_tables"]
+
+    def body(carry, xs):
+        h = carry
+        slot_params, slot_caches = xs
+        new_caches = {}
+        for j, spec in enumerate(pattern):
+            name = f"s{j}"
+            sc = slot_caches.get(name, {})
+            h, _, new_kv, new_ssm = blocks_mod.apply_slot_full(
+                h, slot_params[name], spec, cfg, precision,
+                lengths=new_lengths, kv_cache=sc.get("kv"),
+                ssm_state=sc.get("ssm"), want_ssm_state=True,
+                block_tables=block_tables, chunk_start=start,
+            )
+            nc = {}
+            if new_kv is not None:
+                nc["kv"] = new_kv
+            if new_ssm is not None:
+                nc["ssm"] = new_ssm
+            new_caches[name] = nc
+        return h, {"caches": new_caches}
+
+    x, ys = _scan(body, x, (params["blocks"], cache["slots"]))
+    cache = dict(cache, slots=ys["caches"], lengths=new_lengths)
+
+    idx = jnp.clip(chunk_lengths - 1, 0, c - 1)
+    x_last = x[jnp.arange(b), idx]                            # (B, D)
+    logits = _unembed(params, x_last, cfg, precision)
+    return logits, cache
+
+
 # ---------------------------------------------------------------------------
 # decode
 # ---------------------------------------------------------------------------
@@ -420,8 +480,14 @@ def decode_step(
     precision: PrecisionConfig,
     *,
     want_routing: bool = False,
+    use_kernel: bool = False,
 ):
-    """One autoregressive step.  Returns (logits (B,V), cache, aux)."""
+    """One autoregressive step.  Returns (logits (B,V), cache, aux).
+
+    `use_kernel=True` routes attention through the Pallas decode kernels
+    (`fp8_paged_decode_attention` for paged caches) — interpret-mode on
+    CPU, compiled on TPU.
+    """
     pattern = blocks_mod.layer_pattern(cfg)
     lengths = cache["lengths"]
     src_lengths = cache.get("src_lengths")
@@ -441,6 +507,7 @@ def decode_step(
                 kv_cache=sc.get("kv"), ssm_state=sc.get("ssm"),
                 cross_cache=sc.get("cross"), src_lengths=src_lengths,
                 lengths=lengths, block_tables=block_tables,
+                use_kernel=use_kernel,
             )
             nc = {}
             if new_kv is not None:

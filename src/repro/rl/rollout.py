@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.precision import PrecisionConfig
+from repro.core.sampling import sample as _sample
 from repro.data import tasks
 from repro.models import decode_step, init_cache, prefill
 from repro.models import attention as attn_mod
@@ -51,21 +52,6 @@ class SamplerConfig:
     top_k: int = 0              # 0 = full softmax
     eos_id: int = tasks.EOS
     pad_id: int = tasks.PAD
-
-
-def _sample(logits: jax.Array, key, temperature: float, top_k: int):
-    logits = logits.astype(jnp.float32)
-    if temperature <= 0.0:
-        tok = jnp.argmax(logits, axis=-1)
-        logp = jax.nn.log_softmax(logits, -1)
-        return tok, jnp.take_along_axis(logp, tok[:, None], -1)[:, 0]
-    logits = logits / temperature
-    if top_k > 0:
-        thresh = jax.lax.top_k(logits, top_k)[0][..., -1:]
-        logits = jnp.where(logits < thresh, -1e30, logits)
-    tok = jax.random.categorical(key, logits, axis=-1)
-    logp = jax.nn.log_softmax(logits, -1)
-    return tok, jnp.take_along_axis(logp, tok[:, None], -1)[:, 0]
 
 
 @functools.partial(

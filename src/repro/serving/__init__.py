@@ -1,4 +1,17 @@
 from repro.serving.block_manager import BlockManager, NoFreeBlocksError
-from repro.serving.engine import Request, ServeReport, ServingEngine, kv_bytes_per_token
+from repro.serving.engine import (
+    Request,
+    ServeReport,
+    ServingEngine,
+    kv_bytes_per_token,
+)
+from repro.serving.scheduler import (
+    EVICTION_POLICIES,
+    ScheduleDecision,
+    Scheduler,
+    StepBudget,
+)
+
 __all__ = ["ServingEngine", "ServeReport", "Request", "kv_bytes_per_token",
-           "BlockManager", "NoFreeBlocksError"]
+           "BlockManager", "NoFreeBlocksError", "Scheduler",
+           "ScheduleDecision", "StepBudget", "EVICTION_POLICIES"]

@@ -84,6 +84,11 @@ class BlockManager:
         # reverse map so freeing a block retires its index entry
         self._prefix_index: Dict[bytes, int] = {}
         self._block_key: Dict[int, bytes] = {}
+        # freed-but-indexed block cache (vLLM's evictor): refcount-0 blocks
+        # whose prefix entry survives until the space is actually needed.
+        # Insertion-ordered dict = eviction order (oldest freed evicts
+        # first); values are unused.
+        self._cached: Dict[int, None] = {}
 
     # -- construction --------------------------------------------------------
     @classmethod
@@ -113,11 +118,17 @@ class BlockManager:
 
     @property
     def num_free_blocks(self) -> int:
-        return len(self._free)
+        """Blocks an allocation could take: truly free + evictable cached."""
+        return len(self._free) + len(self._cached)
+
+    @property
+    def num_cached_blocks(self) -> int:
+        """Refcount-0 blocks still holding a live prefix-index entry."""
+        return len(self._cached)
 
     @property
     def blocks_in_use(self) -> int:
-        return self.num_blocks - len(self._free)
+        return self.num_blocks - self.num_free_blocks
 
     @property
     def bytes_in_use(self) -> int:
@@ -139,11 +150,28 @@ class BlockManager:
         return self.refcount(block_id) > 1
 
     # -- allocation ----------------------------------------------------------
+    def _evict_cached(self) -> int:
+        """Reclaim the oldest freed-but-indexed block: its prefix entry
+        dies NOW (the space is actually needed — vLLM evictor semantics)."""
+        b = next(iter(self._cached))
+        del self._cached[b]
+        key = self._block_key.pop(b, None)
+        if key is not None and self._prefix_index.get(key) == b:
+            del self._prefix_index[key]
+        return b
+
+    def _pop_free_block(self) -> int:
+        """Take one block: the true free list first, then the evictor."""
+        if self._free:
+            return self._free.pop()
+        return self._evict_cached()
+
     def can_allocate(self, n_blocks: int, *, limit_blocks: Optional[int] = None
                      ) -> bool:
         """True if `n_blocks` more blocks fit — under the physical free list
-        and (optionally) a soft block limit below the pool size."""
-        if n_blocks > len(self._free):
+        (cached evictable blocks included) and (optionally) a soft block
+        limit below the pool size."""
+        if n_blocks > self.num_free_blocks:
             return False
         if limit_blocks is not None and \
                 self.blocks_in_use + n_blocks > limit_blocks:
@@ -154,16 +182,18 @@ class BlockManager:
                  limit_blocks: Optional[int] = None) -> List[int]:
         """Append `n_blocks` fresh blocks (refcount 1) to request `rid`'s
         table.  Enforces the same soft cap as `can_allocate`, so the two
-        can never disagree under on-demand admission."""
-        if n_blocks > len(self._free):
+        can never disagree under on-demand admission.  Takes from the true
+        free list first; only under pressure does it evict cached
+        (freed-but-indexed) blocks, retiring their prefix entries."""
+        if n_blocks > self.num_free_blocks:
             raise NoFreeBlocksError(
-                f"need {n_blocks} blocks, {len(self._free)} free")
+                f"need {n_blocks} blocks, {self.num_free_blocks} free")
         if limit_blocks is not None and \
                 self.blocks_in_use + n_blocks > limit_blocks:
             raise NoFreeBlocksError(
                 f"need {n_blocks} blocks, but {self.blocks_in_use} in use "
                 f"against a limit of {limit_blocks}")
-        ids = [self._free.pop() for _ in range(n_blocks)]
+        ids = [self._pop_free_block() for _ in range(n_blocks)]
         for b in ids:
             self._refcount[b] = 1
         self._owned.setdefault(rid, []).extend(ids)
@@ -181,34 +211,43 @@ class BlockManager:
         return list(self._owned.get(rid, []))
 
     def free(self, rid: int) -> List[int]:
-        """Drop one reference per block in `rid`'s table.  Only blocks that
-        reach refcount 0 return to the free list (and leave the prefix
-        index); blocks another request still holds stay resident.  Returns
-        the physically freed ids.  Freeing an unknown/already-freed rid is
-        a no-op, so a double `free` can never double-release a shared
-        block."""
-        freed: List[int] = []
+        """Drop one reference per block in `rid`'s table.  Blocks that reach
+        refcount 0 are released: ones with a live prefix-index entry move
+        to the evictor cache (entry survives until the space is needed),
+        the rest return to the free list.  Blocks another request still
+        holds stay resident either way.  Returns the released ids.
+        Freeing an unknown/already-freed rid is a no-op, so a double
+        `free` can never double-release a shared block."""
+        released: List[int] = []
+        plain: List[int] = []
         for b in self._owned.pop(rid, []):
             self._refcount[b] -= 1
             if self._refcount[b] == 0:
                 del self._refcount[b]
-                key = self._block_key.pop(b, None)
-                if key is not None and self._prefix_index.get(key) == b:
-                    del self._prefix_index[key]
-                freed.append(b)
-        self._free.extend(reversed(freed))
-        return freed
+                released.append(b)
+                if b in self._block_key:
+                    self._cached[b] = None      # evictor keeps the entry
+                else:
+                    plain.append(b)
+        self._free.extend(reversed(plain))
+        return released
 
     # -- sharing -------------------------------------------------------------
     def acquire(self, rid: int, block_ids: List[int]) -> List[int]:
-        """Append existing *live* blocks to `rid`'s table, adding one
-        reference each (the sharing primitive behind prefix hits and
-        fork)."""
+        """Append existing blocks to `rid`'s table, adding one reference
+        each (the sharing primitive behind prefix hits and fork).  Blocks
+        may be live (refcount >= 1) or sitting in the evictor cache
+        (refcount 0, content intact) — the latter are *revived*: pulled
+        out of the cache at refcount 1."""
         for b in block_ids:
-            if self._refcount.get(b, 0) <= 0:
+            if self._refcount.get(b, 0) <= 0 and b not in self._cached:
                 raise ValueError(f"block {b} is not live; cannot share it")
         for b in block_ids:
-            self._refcount[b] += 1
+            if b in self._cached:
+                del self._cached[b]
+                self._refcount[b] = 1
+            else:
+                self._refcount[b] += 1
         self._owned.setdefault(rid, []).extend(block_ids)
         return list(block_ids)
 
@@ -232,13 +271,13 @@ class BlockManager:
         old = ids[index]
         if self._refcount.get(old, 0) <= 1:
             return None
-        if not self._free:
+        if not self.num_free_blocks:
             raise NoFreeBlocksError("copy-on-write needs a free block")
         if limit_blocks is not None and self.blocks_in_use + 1 > limit_blocks:
             raise NoFreeBlocksError(
                 f"copy-on-write needs a block, but {self.blocks_in_use} in "
                 f"use against a limit of {limit_blocks}")
-        new = self._free.pop()
+        new = self._pop_free_block()
         self._refcount[new] = 1
         self._refcount[old] -= 1
         ids[index] = new
@@ -254,15 +293,17 @@ class BlockManager:
                 for i in range(n_full)]
 
     def lookup_prefix(self, tokens) -> List[int]:
-        """Longest run of indexed live blocks covering a full-block prefix
-        of `tokens` (the dedup step of admission).  The caller must
-        `acquire` the returned ids before relying on them."""
+        """Longest run of indexed blocks covering a full-block prefix of
+        `tokens` (the dedup step of admission).  Hits may be live blocks
+        *or* evictor-cached ones (refcount 0, content intact); the caller
+        must `acquire` the returned ids before relying on them."""
         if not self.enable_prefix_sharing:
             return []
         hits: List[int] = []
         for key in self._prefix_keys(tokens):
             b = self._prefix_index.get(key)
-            if b is None or self._refcount.get(b, 0) <= 0:
+            if b is None or \
+                    (self._refcount.get(b, 0) <= 0 and b not in self._cached):
                 break
             hits.append(b)
         return hits

@@ -1,66 +1,74 @@
-"""Continuous-batching serving engine on a paged FP8/BF16 KV cache.
+"""Serving engine: pure *execution mechanism* over a paged FP8/BF16 KV pool.
 
-The paper's §2.3.2 performance analysis: under long-context load, BF16 KV
-exhausts cache capacity, vLLM preempts requests (wasting their compute),
-and throughput collapses; FP8 KV doubles capacity, raises concurrency and
-removes the preemptions.  This engine reproduces that mechanism with
-vLLM's actual memory architecture:
+Since the scheduler split, this module runs device work and nothing else;
+every admission / eviction / growth / chunking decision lives in
+`serving.scheduler.Scheduler`.  The run loop is two lines:
+
+    decision = scheduler.step(engine)   # policy + host bookkeeping
+    engine.execute(decision)            # device work, in plan order
+
+The paper's §2.3.2 chain — FP8 KV doubles block capacity, capacity raises
+concurrency, concurrency removes preemptions — is reproduced by the layers
+below; once capacity stops binding, the scheduler's chunked prefill and
+eviction scoring take over as the throughput levers.
 
 Paged KV cache
     Device KV memory is one shared pool of fixed-size blocks per attention
     layer (`models.attention.PagedKVCache`, pool shape (N+1, BS, KVH, D));
     each request owns an ordered list of physical block ids and attention
     gathers K/V through the per-slot block table.  Pool row N is the trash
-    block: prompt padding and inactive decode slots scatter there, so one
-    fused jit step serves every slot without branching.
+    block: prompt padding, masked-slot decode writes and inactive slots
+    scatter there, so one fused jit step serves every slot without
+    branching.  Byte accounting is precision-aware: a block is
+    `block_size` bf16-KV tokens' worth of bytes, so at equal byte budget
+    FP8 KV holds 2x the tokens per block (`BlockManager`).
 
-Byte accounting (per token / per block)
-    `kv_bytes_per_token` = n_attn_layers * 2 * KVH * D * elem_bytes is the
-    true target-device footprint of one token (elem_bytes: 1 fp8, 2 bf16);
-    a block is `block_size` bf16-KV tokens' worth of bytes regardless of
-    the active KV dtype.  The `BlockManager` sizes the pool from a device
-    byte budget, so at equal byte budget FP8 KV keeps the same number of
-    physical blocks but each holds 2x the tokens — `capacity_tokens`
-    literally doubles, and admission, concurrency and preemption follow
-    mechanically.
+Prefill — one-shot or chunked
+    Legacy (prefill_chunk=None): a request's whole prompt is prefilled in
+    one batch-1 trace of fixed width `prompt_pad` at admission (prompts
+    longer than `prompt_pad` are rejected).  Chunked (prefill_chunk=C):
+    the scheduler slices the prompt into C-token chunks served across
+    successive steps by `models.prefill_chunk`, which scatters the
+    chunk's KV through the block table and gathers earlier chunks back
+    from the pool — decode for other slots runs between chunks, prompts
+    of any length stream through one fixed-width trace, and a prompt
+    whose leading full blocks hit the prefix index skips straight past
+    them (attention-only models).  During the fused decode step,
+    mid-prefill slots have their table rows masked to the trash block so
+    the batch-wide KV write cannot touch real (possibly shared) blocks.
 
-Admission
-    "reserve" (default): a request is admitted only when worst-case blocks
-    (ceil((prompt + max_new) / block_size)) are free — no mid-flight OOM.
-    "ondemand" (vLLM semantics): admission takes prompt blocks only;
-    decode grows tables block-by-block and OOM preempts the youngest
-    request.  `budget_tokens` stays a mutable attribute: shrinking it
-    mid-run lowers the effective block limit (tests use this).
+Decode
+    One fused `decode_step` over every decode-ready slot per step;
+    `decode_kernel="paged"` routes attention through the Pallas
+    `fp8_paged_decode_attention` kernel (scalar-prefetch block tables;
+    interpret-mode on CPU, compiled on TPU) instead of the jnp
+    table-gather path.
 
 Prefix sharing (refcount + content hash + copy-on-write)
-    Admission first asks the BlockManager's prefix index for live blocks
-    whose content matches a full-block prefix of the prompt; hits are
-    `acquire`d (refcount +1) and only the *remaining* blocks count against
-    the free list and the budget — N same-prompt GRPO requests admit with
-    prompt_blocks + N*decode_blocks instead of N*(prompt + decode).
-    Prefill still runs the full prompt (the logits need it) and its
-    scatter re-writes shared blocks with bit-identical bytes: causal
-    attention makes prefix KV a pure function of the prefix tokens, and
-    the per-layer scales are calibrated once and global.  A decode step,
-    however, *diverges*: `_cow_for_decode` checks the block the next token
-    lands in and, if it is shared, copies the physical row into a fresh
-    private block first (`models.attention.paged_copy_rows`) — the
-    copy-on-write that keeps the other holders' KV intact.
+    Admission dedups full-block prompt prefixes against the
+    `BlockManager` index (hits are `acquire`d, refcount +1); prefill
+    re-writes shared blocks bit-identically (causal prefix KV is a pure
+    function of the prefix tokens; scales are global post-calibration);
+    the first divergent decode append into a shared block is preceded by
+    a copy-on-write planned by the scheduler and executed here
+    (`paged_copy_rows`).  Freed blocks with a live index entry move to
+    the BlockManager's evictor cache — the entry survives until the
+    space is actually needed, so a re-submitted prompt can revive its
+    own KV for free.
 
 Preemption = swap-to-host
-    A preempted request's blocks are copied to host memory and released
-    (refcount -1 each); only blocks no other request holds actually leave
-    the pool, so preemption can never evict a block an active request
-    still reads.  On re-admission the prompt's shared prefix is re-deduped
-    against the index and only the non-shared tail is copied back into
-    freshly allocated rows; decoding resumes from the exact pending token
-    — retained tokens are NOT recomputed (old engine recomputed the whole
-    prefill).
+    A victim's blocks are copied to host and released (refcount -1 each;
+    blocks another request holds stay resident).  On re-admission the
+    prompt is re-deduped against the index, only the non-shared tail is
+    restored, and decoding (or chunked prefill, for a victim preempted
+    mid-prefill) resumes from the exact pending position — nothing is
+    recomputed, and every restored token is counted in `wasted_tokens`
+    (the swap tax the victim pays for the preemption).
 
 KV scales
-    Calibrated on the engine's first prefill after weight load (vLLM's
-    `calculate_kv_scales` semantics), stored once in the shared pool, and
-    reused by every later prefill/decode (scales survive swap untouched).
+    Calibrated on the engine's first prefill chunk after weight load
+    (vLLM's `calculate_kv_scales` semantics), stored once in the shared
+    pool, reused by every later prefill/decode (scales survive swap).
 """
 from __future__ import annotations
 
@@ -72,10 +80,22 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.precision import PrecisionConfig
+from repro.core.sampling import sample
 from repro.data import tasks
-from repro.models import decode_step, init_cache, prefill
+from repro.models import blocks as blocks_mod
+from repro.models import decode_step, init_cache, prefill, prefill_chunk
 from repro.models.attention import paged_copy_rows
-from repro.serving.block_manager import BlockManager, NoFreeBlocksError
+from repro.serving.block_manager import BlockManager
+from repro.serving.scheduler import (
+    Admit,
+    Cow,
+    Grow,
+    Prefill,
+    ScheduleDecision,
+    Scheduler,
+    StepBudget,
+    SwapOut,
+)
 
 
 def kv_bytes_per_token(cfg, precision: PrecisionConfig) -> int:
@@ -95,7 +115,10 @@ class Request:
     max_new: int
     generated: List[int] = dataclasses.field(default_factory=list)
     preemptions: int = 0
-    wasted_tokens: int = 0
+    wasted_tokens: int = 0       # tokens re-restored after preemption
+    prefilled: int = 0           # prompt tokens whose KV is (being) computed
+    cached_tokens: int = 0       # valid KV rows in the pool (host truth)
+    last_used: int = 0           # scheduler tick last scheduled (lru)
     # swap-to-host state (set while preempted, cleared on resume)
     swap_kv: Optional[Dict[str, Tuple[np.ndarray, np.ndarray]]] = None
     swap_tokens: int = 0         # kv rows held in swap
@@ -116,6 +139,7 @@ class ServeReport:
     peak_blocks_in_use: int = 0
     prefix_hit_blocks: int = 0     # block allocations avoided by sharing
     cow_copies: int = 0            # shared blocks privatized before a write
+    prefill_chunks: int = 0        # chunked-prefill traces executed
 
     @property
     def useful_token_rate(self) -> float:
@@ -130,9 +154,15 @@ class ServingEngine:
                  kv_budget_bytes: Optional[int] = None,
                  temperature: float = 0.0, seed: int = 0,
                  prompt_pad: int = 16, block_size: int = 4,
-                 admission: str = "reserve", prefix_sharing: bool = True):
+                 admission: str = "reserve", prefix_sharing: bool = True,
+                 eviction: str = "youngest",
+                 prefill_chunk: Optional[int] = None,
+                 step_budget: Optional[StepBudget] = None,
+                 decode_kernel: str = "gather",
+                 eos_id: Optional[int] = tasks.EOS):
         assert admission in ("reserve", "ondemand"), admission
-        self.prompt_pad = prompt_pad   # fixed prefill width (one jit trace)
+        assert decode_kernel in ("gather", "paged"), decode_kernel
+        self.prompt_pad = prompt_pad   # legacy one-shot prefill width
         self.params = params
         self.cfg = cfg
         self.precision = precision
@@ -140,7 +170,19 @@ class ServingEngine:
         self.max_seq_len = max_seq_len
         self.temperature = temperature
         self.admission = admission
+        self.use_kernel = decode_kernel == "paged"
+        self.eos_id = eos_id           # None = decode max_new tokens always
         self.key = jax.random.key(seed)
+        self.scheduler = Scheduler(eviction=eviction,
+                                   prefill_chunk=prefill_chunk,
+                                   budget=step_budget)
+        # shared-prefix compute skip is sound only when prefix KV is the
+        # whole carried state: pure causal attention, no recurrent/cross
+        # state, no multimodal prefix
+        self._chunk_skip_ok = (
+            not cfg.is_encdec and cfg.frontend is None
+            and all(s.mixer == "attn" and not s.cross
+                    for s in blocks_mod.layer_pattern(cfg)))
 
         per_tok = max(kv_bytes_per_token(cfg, precision), 1)
         if kv_budget_bytes is None:
@@ -169,15 +211,25 @@ class ServingEngine:
         self._scales_calibrated = False
         self.stats = dict(preemptions=0, wasted_tokens=0, emitted=0,
                           steps=0, occupancy=0.0, swap_outs=0, swap_ins=0,
-                          peak_blocks=0, prefix_hits=0, cow_copies=0)
+                          peak_blocks=0, prefix_hits=0, cow_copies=0,
+                          prefill_chunks=0)
 
     # ------------------------------------------------------------------
     def submit(self, prompt_ids, max_new: int, rid: Optional[int] = None):
         prompt = np.asarray(prompt_ids, np.int32)
-        if len(prompt) > self.prompt_pad:
+        if self.scheduler.prefill_chunk is None and \
+                len(prompt) > self.prompt_pad:
             raise ValueError(
                 f"prompt of {len(prompt)} tokens exceeds prompt_pad="
-                f"{self.prompt_pad} (the engine prefills one fixed width)")
+                f"{self.prompt_pad}; enable chunked prefill "
+                f"(prefill_chunk=...) to serve long prompts")
+        if len(prompt) + max_new > self.max_seq_len:
+            # the block table has ceil(max_seq_len / block_size) entries;
+            # a decode write past it would clamp into the wrong block and
+            # silently corrupt live KV
+            raise ValueError(
+                f"prompt ({len(prompt)}) + max_new ({max_new}) exceeds "
+                f"max_seq_len={self.max_seq_len}")
         if rid is None:
             rid = self._next_rid
         # rid keys BlockManager ownership — collisions would merge two live
@@ -211,7 +263,7 @@ class ServingEngine:
         else:
             # vLLM semantics: what it holds right now, +1 so the first
             # decode step's KV write is always mapped (a request admitted
-            # after _grow_for_decode ran would otherwise scatter its pending
+            # after the growth pass ran would otherwise scatter its pending
             # token to the trash block when the prompt fills its last block)
             tokens = max(len(req.prompt) + 1, retained + 1)
         return self.block_mgr.blocks_for_tokens(tokens)
@@ -266,33 +318,89 @@ class ServingEngine:
             slots[name] = merged
         self.cache = dict(self.cache, slots=slots)
 
-    # -- admission -----------------------------------------------------------
+    # -- execution mechanism -------------------------------------------------
+    def execute(self, decision: ScheduleDecision):
+        """Run one planned step.  Actions run strictly in plan order (the
+        scheduler's bookkeeping already assumed it: a victim's rows are
+        copied to host before any later-ordered action can overwrite
+        them); the fused decode over `decode_slots` runs last."""
+        for act in decision.actions:
+            if isinstance(act, SwapOut):
+                self._exec_swap_out(act)
+            elif isinstance(act, Admit):
+                self._exec_admit(act)
+            elif isinstance(act, Grow):
+                self._set_table_row(act.slot, act.block_ids)
+            elif isinstance(act, Cow):
+                self._copy_block(act.src, act.dst)
+                self._set_table_row(act.slot, act.block_ids)
+            elif isinstance(act, Prefill):
+                self._exec_prefill(act)
+            else:                              # pragma: no cover
+                raise TypeError(f"unknown action {act!r}")
+        self.stats["peak_blocks"] = max(self.stats["peak_blocks"],
+                                        self.block_mgr.blocks_in_use)
+        if decision.decode_slots:
+            self._exec_decode(decision.decode_slots)
+
+    def step(self) -> ScheduleDecision:
+        """One scheduler+engine step (the unit external drivers — the
+        continuous-batching benchmark, the property tests — advance by)."""
+        decision = self.scheduler.step(self)
+        if not decision.is_empty:
+            self.execute(decision)
+        return decision
+
     def _try_admit(self):
-        while self.queue:
-            slot = self._free_slot()
-            if slot is None:
-                return
-            req = self.queue[0]
-            # dedup full prompt blocks against the prefix index: hits are
-            # shared (refcount +1), only the remainder costs fresh blocks
-            shared = self.block_mgr.lookup_prefix(req.prompt)
-            need = max(self._reserve_blocks(req) - len(shared), 0)
-            if not self.block_mgr.can_allocate(
-                    need, limit_blocks=self._effective_blocks):
-                return                      # capacity-bound: stay queued
-            self.queue.pop(0)
-            if shared:
-                self.block_mgr.acquire(req.rid, shared)
-                self.stats["prefix_hits"] += len(shared)
-            self.block_mgr.allocate(req.rid, need,
-                                    limit_blocks=self._effective_blocks)
-            ids = self.block_mgr.blocks_of(req.rid)
-            if req.swap_kv is not None:
-                self._swap_in(slot, req, ids, n_shared=len(shared))
-            else:
-                self._prefill_into(slot, req, ids)
+        """Admission-only pass (tests drive this directly): plan and run
+        admissions plus their prefill work, nothing else."""
+        self.execute(self.scheduler.step(self, admit_only=True))
+
+    # -- prefill -------------------------------------------------------------
+    def _exec_admit(self, act: Admit):
+        req = act.req
+        self._set_table_row(act.slot, act.block_ids)
+        if act.swap_in:
+            self._swap_in(act.slot, req, act.block_ids,
+                          n_shared=act.n_shared)
+        else:
+            self.cache["lengths"] = self.cache["lengths"].at[act.slot].set(
+                req.prefilled)
+
+    def _exec_prefill(self, act: Prefill):
+        if act.oneshot:
+            self._prefill_into(act.slot, act.req,
+                               self.block_mgr.blocks_of(act.req.rid))
+            return
+        req = act.req
+        chunk = np.full((act.width,), tasks.PAD, np.int32)
+        n = act.end - act.start
+        chunk[:n] = req.prompt[act.start:act.end]
+        prec = self.precision
+        if self._scales_calibrated and prec.kv_quantized:
+            prec = prec.replace(calculate_kv_scales=False)
+        view = self._slot_view(act.slot)
+        logits, new_cache = prefill_chunk(
+            self.params, jnp.asarray(chunk)[None, :],
+            jnp.array([act.start], jnp.int32), jnp.array([n], jnp.int32),
+            view, self.cfg, prec)
+        self._merge_view(new_cache, act.slot)
+        self.cache["lengths"] = self.cache["lengths"].at[act.slot].set(
+            act.end)
+        req.cached_tokens = act.end
+        self._scales_calibrated = True
+        self.stats["prefill_chunks"] += 1
+        if act.last:
+            self.block_mgr.register_prefix(req.rid, req.prompt)
+            self.key, k = jax.random.split(self.key)
+            tok = sample(logits[0], k, self.temperature,
+                         want_logp=False)[0]
+            self.pending_tok[act.slot] = tok
+            req.generated = [int(tok)]
 
     def _prefill_into(self, slot: int, req: Request, ids: List[int]):
+        """Legacy one-shot prefill: the whole prompt through one fixed
+        `prompt_pad`-width batch-1 trace."""
         p = len(req.prompt)                  # <= prompt_pad (submit checks)
         padded = np.full((self.prompt_pad,), tasks.PAD, np.int32)
         padded[:p] = req.prompt
@@ -318,36 +426,42 @@ class ServingEngine:
         self._scales_calibrated = True
         self.block_mgr.register_prefix(req.rid, req.prompt)
         self.key, k = jax.random.split(self.key)
-        tok = _sample_token(logits[0], k, self.temperature)
+        tok = sample(logits[0], k, self.temperature, want_logp=False)[0]
         self.pending_tok[slot] = tok
         self.slot_req[slot] = req
         req.generated = [int(tok)]
+        req.cached_tokens = p
 
     # -- preemption / swap ---------------------------------------------------
-    def _swap_out(self, slot: int, req: Request):
-        """Copy the request's blocks to host, release them, requeue at
-        front.  `free` is refcount-aware: blocks shared with an active
-        request stay resident in the pool (never evicted from under a
-        reader) — the host copy spans the full table anyway so swap-in
-        can restore whatever is no longer shared by then."""
-        ids = self.block_mgr.blocks_of(req.rid)
-        idx = jnp.asarray(ids, jnp.int32)
+    def _exec_swap_out(self, act: SwapOut):
+        """Copy the victim's blocks to host.  The scheduler already freed
+        them and requeued the request at plan time; refcount-aware `free`
+        means blocks shared with an active request never left the pool,
+        and no action ordered after this one can have overwritten the
+        rows being copied."""
+        req = act.req
         host = {}
-        for name, sd in self.cache["slots"].items():
-            if "kv" in sd:
-                kv = sd["kv"]
-                host[name] = (np.asarray(kv.k[:, idx]),
-                              np.asarray(kv.v[:, idx]))
+        if act.block_ids:
+            idx = jnp.asarray(act.block_ids, jnp.int32)
+            for name, sd in self.cache["slots"].items():
+                if "kv" in sd:
+                    kv = sd["kv"]
+                    host[name] = (np.asarray(kv.k[:, idx]),
+                                  np.asarray(kv.v[:, idx]))
+        # Authoritative (re-)claim of the swap state.  The scheduler set
+        # swap_tokens at plan time, but when this victim was swap-admitted
+        # earlier in the SAME step, that Admit's `_swap_in` has just
+        # consumed and zeroed the fields — and `pending_tok[slot]` only
+        # became correct when that restore ran — so both are (re)recorded
+        # here, at this action's place in the execution order.
         req.swap_kv = host
-        req.swap_tokens = int(np.asarray(self.cache["lengths"])[slot])
-        req.swap_pending = int(self.pending_tok[slot])
+        req.swap_tokens = act.tokens
+        req.swap_pending = int(self.pending_tok[act.slot]) \
+            if req.prefilled >= len(req.prompt) else 0
         req.preemptions += 1
         self.stats["preemptions"] += 1
         self.stats["swap_outs"] += 1
-        self.block_mgr.free(req.rid)
-        self.slot_req[slot] = None
-        self._clear_slot(slot)
-        self.queue.insert(0, req)
+        self._clear_slot(act.slot)
 
     def _swap_in(self, slot: int, req: Request, ids: List[int],
                  n_shared: int = 0):
@@ -356,7 +470,8 @@ class ServingEngine:
         The leading `n_shared` table entries came from a prefix-index hit
         at re-admission: those pool rows already hold the prompt's KV
         (content-keyed, bit-identical), so only the tail of the host copy
-        is restored."""
+        is restored — and only the restored tokens count as `wasted`
+        (the swap tax of the preemption)."""
         n = next(iter(req.swap_kv.values()))[0].shape[1] if req.swap_kv \
             else 0
         s = min(n_shared, n)
@@ -373,65 +488,21 @@ class ServingEngine:
                         v=kv.v.at[:, idx].set(jnp.asarray(host_v[:, s:n])))
                 slots[name] = merged
             self.cache = dict(self.cache, slots=slots)
-        self._set_table_row(slot, ids)
+        restored = max(req.swap_tokens - s * self.block_size, 0)
+        req.wasted_tokens += restored
+        self.stats["wasted_tokens"] += restored
         self.cache["lengths"] = self.cache["lengths"].at[slot].set(
             req.swap_tokens)
         self.pending_tok[slot] = req.swap_pending
-        self.slot_req[slot] = req
+        req.cached_tokens = req.swap_tokens
         req.swap_kv = None
         req.swap_tokens = 0
         self.stats["swap_ins"] += 1
         # the restored prompt blocks can serve later same-prompt requests
-        # (no-op for prefixes still indexed by another holder)
-        self.block_mgr.register_prefix(req.rid, req.prompt)
-
-    def _youngest_active(self, exclude: Optional[int] = None) -> Optional[int]:
-        victims = [i for i, r in enumerate(self.slot_req)
-                   if r is not None and i != exclude]
-        if not victims:
-            return None
-        return max(victims, key=lambda i: self.slot_req[i].rid)
-
-    def _maybe_preempt(self):
-        """Evict youngest requests while over the (possibly shrunk) budget."""
-        while self.block_mgr.blocks_in_use > self._effective_blocks:
-            slot = self._youngest_active()
-            if slot is None:
-                return
-            self._swap_out(slot, self.slot_req[slot])
-
-    def _grow_for_decode(self):
-        """ondemand mode: every active slot needs room for the KV row the
-        next decode step writes; allocate on block boundaries, preempting
-        the youngest request when the pool is exhausted."""
-        lengths = np.asarray(self.cache["lengths"])
-        for slot in sorted(
-                (i for i, r in enumerate(self.slot_req) if r is not None),
-                key=lambda i: self.slot_req[i].rid):
-            req = self.slot_req[slot]
-            if req is None:
-                continue
-            while self.slot_req[slot] is req:
-                need = self.block_mgr.blocks_for_tokens(
-                    int(lengths[slot]) + 1) - \
-                    len(self.block_mgr.blocks_of(req.rid))
-                if need <= 0:
-                    break
-                if self.block_mgr.can_allocate(
-                        need, limit_blocks=self._effective_blocks):
-                    self.block_mgr.allocate(
-                        req.rid, need, limit_blocks=self._effective_blocks)
-                    self._set_table_row(slot,
-                                        self.block_mgr.blocks_of(req.rid))
-                    break
-                victim = self._youngest_active(exclude=slot)
-                if victim is None:
-                    # alone, every in-use block is its own, so a failed
-                    # allocation means the request exceeds the whole pool
-                    raise RuntimeError(
-                        "KV pool smaller than a single request; raise "
-                        "kv_budget_bytes or block_size")
-                self._swap_out(victim, self.slot_req[victim])
+        # (no-op for prefixes still indexed by another holder, and for a
+        # victim resumed mid-prefill whose prompt is not fully written)
+        if req.prefilled >= len(req.prompt):
+            self.block_mgr.register_prefix(req.rid, req.prompt)
 
     # -- copy-on-write -------------------------------------------------------
     def _copy_block(self, src: int, dst: int):
@@ -445,71 +516,56 @@ class ServingEngine:
             slots[name] = merged
         self.cache = dict(self.cache, slots=slots)
 
-    def _cow_for_decode(self):
-        """The next decode step appends at position `lengths[slot]`; if the
-        block holding that position is shared (refcount > 1), the scatter
-        would corrupt every other holder — privatize it first: allocate a
-        fresh block, copy the physical row, remap the table entry.
-        Preempts the youngest other request if CoW itself needs a block."""
-        lengths = np.asarray(self.cache["lengths"])
-        for slot in range(self.max_slots):
-            req = self.slot_req[slot]
-            if req is None:
-                continue
-            ids = self.block_mgr.blocks_of(req.rid)
-            j = int(lengths[slot]) // self.block_size
-            if j >= len(ids) or not self.block_mgr.is_shared(ids[j]):
-                continue
-            while True:
-                try:
-                    res = self.block_mgr.cow(
-                        req.rid, j, limit_blocks=self._effective_blocks)
-                    break
-                except NoFreeBlocksError:
-                    victim = self._youngest_active(exclude=slot)
-                    if victim is None:
-                        raise
-                    self._swap_out(victim, self.slot_req[victim])
-            if res is None:       # a preemption above dropped the refcount
-                continue
-            old, new = res
-            self._copy_block(old, new)
-            self._set_table_row(slot, self.block_mgr.blocks_of(req.rid))
-            self.stats["cow_copies"] += 1
+    # -- decode --------------------------------------------------------------
+    def _exec_decode(self, decode_slots: List[int]):
+        """One fused decode step over `decode_slots`.  Mid-prefill slots
+        are masked to the trash block for the duration: the batch-wide KV
+        scatter writes one row per slot, and a garbage row must never
+        land in a real (possibly shared) block."""
+        masked = [i for i, r in enumerate(self.slot_req)
+                  if r is not None and i not in decode_slots]
+        if masked:
+            saved = self.cache["block_tables"]
+            self.cache["block_tables"] = saved.at[jnp.asarray(masked)].set(-1)
+        toks = jnp.asarray(self.pending_tok)
+        logits, self.cache, _ = decode_step(
+            self.params, toks, self.cache, self.cfg, self.precision,
+            use_kernel=self.use_kernel)
+        if masked:
+            idx = jnp.asarray(masked)
+            self.cache["block_tables"] = \
+                self.cache["block_tables"].at[idx].set(saved[idx])
+        self.key, k = jax.random.split(self.key)
+        next_toks = np.asarray(
+            sample(logits, k, self.temperature, want_logp=False)[0])
+        self.stats["steps"] += 1
+        self.stats["occupancy"] += len(decode_slots) / self.max_slots
+        for i in decode_slots:
+            req = self.slot_req[i]
+            tok = int(next_toks[i])
+            self.stats["emitted"] += 1
+            req.generated.append(tok)
+            req.cached_tokens += 1
+            self.pending_tok[i] = tok
+            if tok == self.eos_id or len(req.generated) >= req.max_new:
+                self.done.append(req)
+                self.slot_req[i] = None
+                self.block_mgr.free(req.rid)
+                self._clear_slot(i)
 
     # -- main loop ---------------------------------------------------------
     def run(self, max_steps: int = 1000) -> ServeReport:
+        # chunk-only scheduler steps don't count against max_steps (it
+        # bounds decode steps, the old contract), so keep a generous
+        # runaway guard for capacity-stuck chunk loops
+        guard = 16 * max_steps + 256
         while (self.queue or any(r is not None for r in self.slot_req)) \
-                and self.stats["steps"] < max_steps:
-            self._maybe_preempt()
-            self._try_admit()
-            if self.admission == "ondemand":
-                self._grow_for_decode()
-                self._try_admit()      # eviction may have freed a slot
-            self._cow_for_decode()
-            self.stats["peak_blocks"] = max(self.stats["peak_blocks"],
-                                            self.block_mgr.blocks_in_use)
-            active = [i for i, r in enumerate(self.slot_req) if r is not None]
-            if not active:
+                and self.stats["steps"] < max_steps and guard > 0:
+            guard -= 1
+            decision = self.scheduler.step(self)
+            if decision.is_empty:
                 break
-            toks = jnp.asarray(self.pending_tok)
-            logits, self.cache, _ = decode_step(
-                self.params, toks, self.cache, self.cfg, self.precision)
-            self.key, k = jax.random.split(self.key)
-            next_toks = np.asarray(_sample_batch(logits, k, self.temperature))
-            self.stats["steps"] += 1
-            self.stats["occupancy"] += len(active) / self.max_slots
-            for i in active:
-                req = self.slot_req[i]
-                tok = int(next_toks[i])
-                self.stats["emitted"] += 1
-                req.generated.append(tok)
-                self.pending_tok[i] = tok
-                if tok == tasks.EOS or len(req.generated) >= req.max_new:
-                    self.done.append(req)
-                    self.slot_req[i] = None
-                    self.block_mgr.free(req.rid)
-                    self._clear_slot(i)
+            self.execute(decision)
         steps = max(self.stats["steps"], 1)
         return ServeReport(
             completed=self.done,
@@ -524,16 +580,5 @@ class ServingEngine:
             peak_blocks_in_use=self.stats["peak_blocks"],
             prefix_hit_blocks=self.stats["prefix_hits"],
             cow_copies=self.stats["cow_copies"],
+            prefill_chunks=self.stats["prefill_chunks"],
         )
-
-
-def _sample_token(logits, key, temperature):
-    if temperature <= 0:
-        return jnp.argmax(logits, -1)
-    return jax.random.categorical(key, logits / temperature, -1)
-
-
-def _sample_batch(logits, key, temperature):
-    if temperature <= 0:
-        return jnp.argmax(logits, -1)
-    return jax.random.categorical(key, logits / temperature, -1)

@@ -1,0 +1,438 @@
+"""Continuous-batching scheduler: admission / eviction / growth *policy*.
+
+The paper's §2.3.2 argument is that rollout throughput is a scheduling
+outcome: FP8 KV doubles block capacity, which raises concurrency and
+removes preemptions — but once capacity stops binding, *admission latency*
+(batch-1, fixed-width prefill) and *eviction waste* (evicting a heavy
+sharer frees almost nothing) become the limits.  This module owns every
+such decision; `ServingEngine` stays pure execution mechanism.  The run
+loop is the vLLM split:
+
+    decision = scheduler.step(engine)     # host-side policy + bookkeeping
+    engine.execute(decision)              # device work, in plan order
+
+Chunked prefill
+    A prompt is no longer prefilled in one batch-1 trace of fixed width
+    `prompt_pad`.  The scheduler slices it into `prefill_chunk`-token
+    chunks and schedules one chunk per slot per step, bounded by
+    `StepBudget.prefill_tokens`; the chunk trace
+    (`models.prefill_chunk`) writes KV through the block table and
+    gathers earlier chunks back from the pool, so decode for other slots
+    proceeds *between* chunks (piggybacked prefill) and a prompt of any
+    length streams through one fixed-width trace.  When the prefix index
+    already holds leading full blocks of the prompt, chunking starts at
+    the shared boundary — shared prefix compute is skipped outright
+    (attention-only models; recurrent state cannot be skipped).
+
+Eviction policies (registry)
+    `youngest`        evict the highest rid (the least sunk cost).
+    `lru`             evict the slot least recently scheduled (chunk or
+                      decode) — FIFO-ish here since fused decode touches
+                      every active slot each step, but it separates
+                      prefill-stalled requests from hot decoders.
+    `private-blocks`  evict the slot whose eviction actually frees the
+                      most blocks: count refcount-1 (private) blocks.
+                      Under GRPO group sharing, evicting a heavy sharer
+                      frees little — its prompt blocks stay resident for
+                      the group — so victim choice by rid wastes swaps.
+
+A `ScheduleDecision` is an *ordered* action log: the engine executes
+actions in plan order, which makes plan-time bookkeeping (free a victim's
+blocks, hand them to a growing request) consistent with execute-time
+device copies (the victim's rows are copied to host before any action
+ordered after the swap-out can overwrite them).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+from repro.serving.block_manager import NoFreeBlocksError
+
+# ---------------------------------------------------------------------------
+# decision = ordered action log + decode set + cost accounting
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class StepBudget:
+    """Per-step scheduling budget.
+
+    prefill_tokens : max padded prefill tokens traced per step (None =
+                     unlimited).  At least one chunk is always scheduled
+                     when prefill work is pending, so a small budget
+                     throttles rather than deadlocks.
+    new_blocks     : max fresh block allocations *for admission* per step
+                     (None = unlimited).  Growth/CoW of already-running
+                     requests is never budget-blocked — the decode write
+                     must land somewhere.
+    """
+
+    prefill_tokens: Optional[int] = None
+    new_blocks: Optional[int] = None
+
+
+@dataclasses.dataclass
+class SwapOut:
+    slot: int
+    req: object                  # engine.Request
+    block_ids: List[int]         # table snapshot (device copy source)
+    tokens: int                  # valid KV rows to save
+
+
+@dataclasses.dataclass
+class Admit:
+    slot: int
+    req: object
+    block_ids: List[int]
+    swap_in: bool                # restore host KV instead of prefilling
+    n_shared: int                # leading table entries from prefix hits
+
+
+@dataclasses.dataclass
+class Grow:
+    slot: int
+    block_ids: List[int]         # full table after growth
+
+
+@dataclasses.dataclass
+class Cow:
+    slot: int
+    src: int                     # physical row to copy
+    dst: int
+    block_ids: List[int]         # full table after the remap
+
+
+@dataclasses.dataclass
+class Prefill:
+    slot: int
+    req: object
+    start: int                   # token range [start, end) of the prompt
+    end: int
+    width: int                   # padded trace width (cost accounting)
+    last: bool                   # final chunk: sample the first token
+    oneshot: bool                # legacy batch-1 full-prompt prefill
+
+
+Action = object
+
+
+@dataclasses.dataclass
+class ScheduleDecision:
+    """One step's plan.  `actions` execute strictly in order; the fused
+    decode over `decode_slots` runs last."""
+
+    actions: List[Action] = dataclasses.field(default_factory=list)
+    decode_slots: List[int] = dataclasses.field(default_factory=list)
+    prefill_tokens: int = 0      # padded widths scheduled this step
+    swap_tokens: int = 0         # KV rows moved host<->device this step
+
+    @property
+    def cost_tokens(self) -> int:
+        """Engine-work cost proxy in token units: tokens traced this step
+        (padded prefill widths + one per decode slot) plus KV rows moved
+        over the host link by preemption (swap-out saves + swap-in
+        restores).  The continuous-batching benchmark advances its
+        arrival clock by this — which is what makes eviction waste
+        visible: a policy that swaps sharers back and forth pays here."""
+        return self.prefill_tokens + len(self.decode_slots) + \
+            self.swap_tokens
+
+    @property
+    def is_empty(self) -> bool:
+        return not self.actions and not self.decode_slots
+
+
+# ---------------------------------------------------------------------------
+# eviction-policy registry
+# ---------------------------------------------------------------------------
+
+EVICTION_POLICIES: Dict[str, Callable] = {}
+
+
+def eviction_policy(name: str):
+    def deco(fn):
+        EVICTION_POLICIES[name] = fn
+        return fn
+    return deco
+
+
+@eviction_policy("youngest")
+def _victim_youngest(eng, slots: List[int]) -> int:
+    """Highest rid = least sunk cost (the pre-scheduler hard-coded rule)."""
+    return max(slots, key=lambda i: eng.slot_req[i].rid)
+
+
+@eviction_policy("lru")
+def _victim_lru(eng, slots: List[int]) -> int:
+    """Least recently scheduled slot; ties fall back to youngest."""
+    return max(slots, key=lambda i: (-eng.slot_req[i].last_used,
+                                     eng.slot_req[i].rid))
+
+
+@eviction_policy("private-blocks")
+def _victim_private_blocks(eng, slots: List[int]) -> int:
+    """Most refcount-1 blocks = most pool actually reclaimed.  Evicting a
+    heavy sharer frees nothing the group still reads; ties fall back to
+    youngest."""
+    def private(i):
+        mgr = eng.block_mgr
+        return sum(1 for b in mgr.blocks_of(eng.slot_req[i].rid)
+                   if mgr.refcount(b) == 1)
+    return max(slots, key=lambda i: (private(i), eng.slot_req[i].rid))
+
+
+# ---------------------------------------------------------------------------
+# the scheduler
+# ---------------------------------------------------------------------------
+
+
+class Scheduler:
+    """Owns admission, chunked-prefill pacing, growth, CoW planning and
+    victim selection over a `ServingEngine`'s host-visible state
+    (queue / slot_req / block_mgr / cache lengths).  Produces a
+    `ScheduleDecision`; never touches device arrays itself."""
+
+    def __init__(self, *, eviction: str = "youngest",
+                 prefill_chunk: Optional[int] = None,
+                 budget: Optional[StepBudget] = None):
+        assert eviction in EVICTION_POLICIES, (
+            f"unknown eviction policy {eviction!r}; "
+            f"registered: {sorted(EVICTION_POLICIES)}")
+        self.eviction = eviction
+        self.prefill_chunk = prefill_chunk   # None = legacy batch-1 prefill
+        self.budget = budget or StepBudget()
+        self._tick = 0
+
+    # -- victim selection ---------------------------------------------------
+    def _select_victim(self, eng, exclude=()) -> Optional[int]:
+        slots = [i for i, r in enumerate(eng.slot_req)
+                 if r is not None and i not in exclude]
+        if not slots:
+            return None
+        return EVICTION_POLICIES[self.eviction](eng, slots)
+
+    def _plan_swap_out(self, eng, decision: ScheduleDecision, slot: int,
+                       planned: Dict[int, Prefill]):
+        """Preempt `slot` at plan time: bookkeeping now (free + requeue),
+        device copy when the engine reaches the action.  A chunk already
+        planned for the victim this step is cancelled and rolled back —
+        its writes must never land in blocks that were just handed to
+        someone else."""
+        req = eng.slot_req[slot]
+        chunk = planned.pop(slot, None)
+        if chunk is not None:
+            decision.actions.remove(chunk)
+            decision.prefill_tokens -= chunk.width
+            req.prefilled = chunk.start
+        ids = eng.block_mgr.blocks_of(req.rid)
+        # `cached_tokens` is the host-authoritative count of valid KV rows
+        # (kept in lockstep by engine.execute); for a slot admitted earlier
+        # THIS step it already covers exactly the rows whose content is
+        # valid at the swap-out action's place in the execution order
+        decision.actions.append(SwapOut(slot, req, ids, req.cached_tokens))
+        decision.swap_tokens += req.cached_tokens
+        # claim the swap state NOW: a re-admission later in this same plan
+        # must see the request as swapped (not fresh), or it would schedule
+        # a full re-prefill and throw away its generated tokens.  Only the
+        # token COUNT is claimed here (same-plan `_reserve_blocks` reads
+        # it); the pending token and the host KV copy are recorded when
+        # the engine executes the SwapOut — `pending_tok[slot]` can be
+        # stale at plan time when this victim was itself swap-admitted
+        # earlier in the same plan, but is always current at execute time,
+        # and execute-time re-claiming also undoes `_swap_in` zeroing the
+        # fields when that same-plan Admit ran first.
+        req.swap_tokens = req.cached_tokens
+        if req.swap_kv is None:
+            req.swap_kv = {}
+        eng.block_mgr.free(req.rid)
+        eng.slot_req[slot] = None
+        eng.queue.insert(0, req)
+
+    # -- admission ----------------------------------------------------------
+    def _plan_admissions(self, eng, decision: ScheduleDecision,
+                         fresh_blocks: List[int]):
+        while eng.queue:
+            slot = eng._free_slot()
+            if slot is None:
+                return
+            req = eng.queue[0]
+            shared = eng.block_mgr.lookup_prefix(req.prompt)
+            need = max(eng._reserve_blocks(req) - len(shared), 0)
+            # evictor-cached hits are revived (refcount 0 -> 1): they leave
+            # the reclaimable pool exactly like a fresh allocation would
+            revive = sum(1 for b in shared if eng.block_mgr.refcount(b) == 0)
+            if self.budget.new_blocks is not None and \
+                    fresh_blocks[0] + need > self.budget.new_blocks and \
+                    fresh_blocks[0] > 0:
+                return              # block budget spent: admit next step
+            if not eng.block_mgr.can_allocate(
+                    need + revive, limit_blocks=eng._effective_blocks):
+                return              # capacity-bound: stay queued
+            eng.queue.pop(0)
+            fresh_blocks[0] += need
+            if shared:
+                eng.block_mgr.acquire(req.rid, shared)
+                eng.stats["prefix_hits"] += len(shared)
+            eng.block_mgr.allocate(req.rid, need,
+                                   limit_blocks=eng._effective_blocks)
+            ids = eng.block_mgr.blocks_of(req.rid)
+            swap_in = req.swap_kv is not None
+            if not swap_in:
+                # fresh request: skip straight past the shared full-block
+                # prefix (its KV is already in the pool) — but only where
+                # prefix KV is the *whole* carried state (pure attention),
+                # and always leave >= 1 token so the last chunk has logits
+                p = len(req.prompt)
+                skip = min(len(shared) * eng.block_size, p - 1) \
+                    if (self.prefill_chunk is not None
+                        and eng._chunk_skip_ok) else 0
+                req.prefilled = skip
+                req.cached_tokens = skip
+            else:
+                req.cached_tokens = req.swap_tokens
+                # restore traffic: rows beyond the re-deduped shared head
+                s = min(len(shared),
+                        eng.block_mgr.blocks_for_tokens(req.swap_tokens))
+                decision.swap_tokens += max(
+                    req.swap_tokens - s * eng.block_size, 0)
+            req.last_used = self._tick
+            eng.slot_req[slot] = req
+            if self.prefill_chunk is None:
+                # legacy one-shot prefill: register the prompt's blocks at
+                # PLAN time so a same-step same-prompt admission (the GRPO
+                # burst shape) dedups against them.  Safe because a legacy
+                # sharer recomputes its whole prompt and only *rewrites*
+                # shared blocks (bit-identically) — it never reads pool
+                # content that hasn't been written yet.  The chunked path
+                # registers at execute time instead: its chunk attention
+                # gathers earlier KV back from the pool, so a prefix must
+                # be fully materialized before it becomes discoverable.
+                eng.block_mgr.register_prefix(req.rid, req.prompt)
+            decision.actions.append(
+                Admit(slot, req, ids, swap_in, len(shared)))
+
+    # -- chunked prefill ----------------------------------------------------
+    def _plan_prefills(self, eng, decision: ScheduleDecision,
+                       planned: Dict[int, Prefill]):
+        cap = self.budget.prefill_tokens
+        for slot, req in enumerate(eng.slot_req):
+            if req is None or slot in planned:
+                continue
+            p = len(req.prompt)
+            if req.prefilled >= p:
+                continue
+            if self.prefill_chunk is None:
+                start, end, width, oneshot = 0, p, eng.prompt_pad, True
+            else:
+                start = req.prefilled
+                end = min(start + self.prefill_chunk, p)
+                width, oneshot = self.prefill_chunk, False
+            if cap is not None and \
+                    decision.prefill_tokens + width > cap and \
+                    decision.prefill_tokens > 0:
+                break               # budget spent; progress guaranteed above
+            chunk = Prefill(slot, req, start, end, width, last=(end == p),
+                            oneshot=oneshot)
+            decision.actions.append(chunk)
+            decision.prefill_tokens += width
+            planned[slot] = chunk
+            req.prefilled = end
+            req.last_used = self._tick
+
+    # -- growth / copy-on-write --------------------------------------------
+    def _decode_ready(self, eng) -> List[int]:
+        return [i for i, r in enumerate(eng.slot_req)
+                if r is not None and r.prefilled >= len(r.prompt)]
+
+    def _plan_growth(self, eng, decision: ScheduleDecision,
+                     planned: Dict[int, Prefill]):
+        """ondemand mode: every decode-ready slot needs the next token's KV
+        row mapped; allocate on block boundaries, evicting by policy when
+        the pool is exhausted."""
+        for slot in sorted(self._decode_ready(eng),
+                           key=lambda i: eng.slot_req[i].rid):
+            req = eng.slot_req[slot]
+            if req is None:
+                continue
+            while eng.slot_req[slot] is req:
+                length = max(req.cached_tokens, req.prefilled)
+                need = eng.block_mgr.blocks_for_tokens(length + 1) - \
+                    len(eng.block_mgr.blocks_of(req.rid))
+                if need <= 0:
+                    break
+                if eng.block_mgr.can_allocate(
+                        need, limit_blocks=eng._effective_blocks):
+                    eng.block_mgr.allocate(
+                        req.rid, need, limit_blocks=eng._effective_blocks)
+                    decision.actions.append(
+                        Grow(slot, eng.block_mgr.blocks_of(req.rid)))
+                    break
+                victim = self._select_victim(eng, exclude=(slot,))
+                if victim is None:
+                    raise RuntimeError(
+                        "KV pool smaller than a single request; raise "
+                        "kv_budget_bytes or block_size")
+                self._plan_swap_out(eng, decision, victim, planned)
+
+    def _plan_cow(self, eng, decision: ScheduleDecision,
+                  planned: Dict[int, Prefill]):
+        """Privatize any shared block the next decode write would land in
+        (the scatter would corrupt every other holder)."""
+        for slot in self._decode_ready(eng):
+            req = eng.slot_req[slot]
+            if req is None:          # evicted by an earlier slot's CoW
+                continue
+            ids = eng.block_mgr.blocks_of(req.rid)
+            j = max(req.cached_tokens, req.prefilled) // eng.block_size
+            if j >= len(ids) or not eng.block_mgr.is_shared(ids[j]):
+                continue
+            while True:
+                try:
+                    res = eng.block_mgr.cow(
+                        req.rid, j, limit_blocks=eng._effective_blocks)
+                    break
+                except NoFreeBlocksError:
+                    victim = self._select_victim(eng, exclude=(slot,))
+                    if victim is None:
+                        raise
+                    self._plan_swap_out(eng, decision, victim, planned)
+            if res is None:          # an eviction above dropped the refcount
+                continue
+            old, new = res
+            decision.actions.append(
+                Cow(slot, old, new, eng.block_mgr.blocks_of(req.rid)))
+            eng.stats["cow_copies"] += 1
+
+    # -- one step -----------------------------------------------------------
+    def step(self, eng, *, admit_only: bool = False) -> ScheduleDecision:
+        """Plan one engine step.  Order mirrors the pre-scheduler loop:
+        budget preemption, admission, prefill chunks, then (ondemand)
+        growth + a second admission pass, CoW, and the decode set."""
+        self._tick += 1
+        decision = ScheduleDecision()
+        planned: Dict[int, Prefill] = {}
+        fresh_blocks = [0]
+
+        # over the (possibly shrunk) budget: evict by policy until legal
+        while eng.block_mgr.blocks_in_use > eng._effective_blocks:
+            victim = self._select_victim(eng)
+            if victim is None:
+                break
+            self._plan_swap_out(eng, decision, victim, planned)
+
+        self._plan_admissions(eng, decision, fresh_blocks)
+        self._plan_prefills(eng, decision, planned)
+        if admit_only:
+            return decision
+
+        if eng.admission == "ondemand":
+            self._plan_growth(eng, decision, planned)
+            self._plan_admissions(eng, decision, fresh_blocks)
+            self._plan_prefills(eng, decision, planned)
+        self._plan_cow(eng, decision, planned)
+
+        decision.decode_slots = self._decode_ready(eng)
+        for i in decision.decode_slots:
+            eng.slot_req[i].last_used = self._tick
+        return decision

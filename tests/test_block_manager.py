@@ -127,7 +127,18 @@ def test_prefix_index_lookup_and_lifetime():
     div[5] = 99                                      # diverges in block 2
     assert mgr.lookup_prefix(div) == ids[:1]
     assert mgr.lookup_prefix(div[::-1]) == []
-    mgr.free(0)                                      # refcount 0 kills entries
+    # refcount 0 moves indexed blocks to the evictor cache: entries SURVIVE
+    # (vLLM evictor) and a same-prompt lookup can revive them for free
+    mgr.free(0)
+    assert mgr.num_cached_blocks == 2 and mgr.blocks_in_use == 0
+    assert mgr.lookup_prefix(prompt) == ids[:2]
+    mgr.acquire(1, mgr.lookup_prefix(prompt))        # revival: cache -> live
+    assert mgr.num_cached_blocks == 0
+    assert all(mgr.refcount(b) == 1 for b in ids[:2])
+    mgr.free(1)
+    # entries die only when the space is actually needed: exhaust the pool
+    mgr.allocate(rid=2, n_blocks=8)
+    assert mgr.num_cached_blocks == 0
     assert mgr.lookup_prefix(prompt) == []
     off = BlockManager(num_blocks=8, block_size=4, enable_prefix_sharing=False)
     off.allocate(rid=0, n_blocks=3)
@@ -327,8 +338,11 @@ def test_preemption_frees_blocks_and_swap_resumes(setup):
     # so every request's tokens match the uncontended run
     got_out = {r.rid: list(r.generated) for r in rep.completed}
     assert got_out == ref_out
-    # swap path means retained work is never recomputed -> nothing wasted
-    assert rep.wasted_tokens == 0
+    # the preemption tax is visible: every token a victim had to restore
+    # from host on swap-in is counted (and only those — no recompute)
+    assert rep.swap_ins >= 1 and rep.wasted_tokens >= 1
+    assert rep.wasted_tokens == sum(r.wasted_tokens for r in rep.completed)
+    assert rep_ref.wasted_tokens == 0          # no preemption, no tax
 
 
 def test_fp8_kv_removes_preemptions_at_fixed_budget(setup):
@@ -406,7 +420,8 @@ def test_cow_guard_on_forked_partial_block(setup):
                         max_seq_len=32)
     eng.submit(prompt, max_new=6, rid=0)
     eng._try_admit()                              # rid 0 live in slot 0
-    req_b = Request(rid=1, prompt=prompt, max_new=6)
+    req_b = Request(rid=1, prompt=prompt, max_new=6,
+                    prefilled=len(prompt), cached_tokens=len(prompt))
     eng.block_mgr.fork(0, 1)                      # share ALL blocks
     slot = eng._free_slot()
     eng._set_table_row(slot, eng.block_mgr.blocks_of(1))
@@ -445,18 +460,20 @@ def test_preemption_never_evicts_shared_blocks(setup):
 
     eng = build(32)                               # tight: forces preemption
     shared_seen = []
-    orig_swap_out = eng._swap_out
+    sched = eng.scheduler
+    orig_plan_swap_out = sched._plan_swap_out
 
-    def checked_swap_out(slot, req):
-        shared = [b for b in eng.block_mgr.blocks_of(req.rid)
-                  if eng.block_mgr.is_shared(b)]
-        orig_swap_out(slot, req)
+    def checked_plan_swap_out(e, decision, slot, planned):
+        req = e.slot_req[slot]
+        shared = [b for b in e.block_mgr.blocks_of(req.rid)
+                  if e.block_mgr.is_shared(b)]
+        orig_plan_swap_out(e, decision, slot, planned)
         for b in shared:                          # still held by someone else
-            assert eng.block_mgr.refcount(b) >= 1
-            assert b not in eng.block_mgr._free
+            assert e.block_mgr.refcount(b) >= 1
+            assert b not in e.block_mgr._free
         shared_seen.extend(shared)
 
-    eng._swap_out = checked_swap_out
+    sched._plan_swap_out = checked_plan_swap_out
     rep = eng.run(max_steps=400)
     assert rep.preemptions >= 1 and shared_seen   # the invariant was tested
     assert len(rep.completed) == n

@@ -1,0 +1,230 @@
+"""Hybrid-state serving: SSM / hybrid / enc-dec preemption + fp8 capacity.
+
+Two experiments on the real serving engine, covering every layer pattern
+the model zoo defines beyond pure causal attention:
+
+1. **Preemption correctness.**  A mamba2-style (attention-free), a
+   jamba-style (attn+ssm interleave) and a seamless-style (enc-dec with
+   per-request frames) trace each run twice: uncontended (the oracle — no
+   preemption) and under a mid-flight byte-budget shrink that forces
+   swap-out/swap-in of slots whose state is NOT just paged KV blocks (SSM
+   h/conv rows, cross-attention KV).  The gate is bit-exactness: a
+   preempted request must resume from host-restored recurrent state and
+   decode the oracle's exact tokens.  (Pre-fix, swap carried only the
+   paged KV and the next occupant clobbered the victim's state rows.)
+
+2. **FP8 KV capacity on hybrid models.**  At an equal device byte budget
+   the fp8-KV engine must admit MORE concurrent jamba-style requests than
+   bf16: the per-token KV footprint halves while the (never-quantized)
+   SSM state stays constant — the §2.3.2 capacity chain, with the
+   hybrid-model caveat that constant state bounds the gain.
+
+Run directly for CSV rows, or with --json/--check from the CI bench-smoke
+job to emit machine-readable results and assert the invariants.
+"""
+from __future__ import annotations
+
+import json
+
+import jax
+
+from repro.configs import (
+    tiny_encdec_serving_config,
+    tiny_hybrid_serving_config,
+    tiny_ssm_serving_config,
+)
+from repro.core.precision import BF16_ROLLOUT, FP8_KV_ONLY_ROLLOUT
+from repro.data import tasks
+from repro.models import init_params
+from repro.serving import (
+    ServingEngine,
+    kv_bytes_per_token,
+    request_state_bytes,
+)
+
+PATTERNS = {
+    "mamba2-style": tiny_ssm_serving_config,
+    "jamba-style": tiny_hybrid_serving_config,
+    "seamless-style": tiny_encdec_serving_config,
+}
+
+
+_prompt = tasks.random_prompt
+_frames = tasks.random_frames
+
+
+def _drive(eng, *, shrink_at=None, shrink_frac=0.6, max_iters=3000) -> dict:
+    """Step the engine to completion, optionally shrinking the byte budget
+    mid-flight (the RL reality: the trainer reclaims HBM at a weight
+    sync).  Tracks peak concurrent slots."""
+    full = eng.budget_tokens
+    peak = 0
+    for _ in range(max_iters):
+        if shrink_at is not None and eng.stats["steps"] >= shrink_at:
+            eng.budget_tokens = int(full * shrink_frac)
+            shrink_at = None
+        decision = eng.step()
+        peak = max(peak, sum(r is not None for r in eng.slot_req))
+        if decision.is_empty:
+            break
+    return dict(
+        completed=len(eng.done),
+        steps=eng.stats["steps"],
+        preemptions=eng.stats["preemptions"],
+        swap_outs=eng.stats["swap_outs"],
+        swap_ins=eng.stats["swap_ins"],
+        wasted_tokens=eng.stats["wasted_tokens"],
+        peak_concurrent=peak,
+        emitted=eng.stats["emitted"],
+        useful_token_rate=eng.stats["emitted"] / max(eng.stats["steps"], 1),
+        tokens={r.rid: list(map(int, r.generated)) for r in eng.done},
+    )
+
+
+# ---------------------------------------------------------------------------
+# experiment 1: preemption correctness per layer pattern
+# ---------------------------------------------------------------------------
+
+def pressured_vs_oracle(cfg, params, *, n_requests: int = 5,
+                        max_new: int = 8, seed: int = 0):
+    """THE canonical preemption trace: the same request set served
+    uncontended (oracle) and under ~2.5 requests' worth of memory with a
+    further mid-flight shrink.  `tests/test_hybrid_serving.py` imports
+    this so the regression tests and the CI gate can never silently
+    exercise different pressure recipes.  Returns (oracle, pressured,
+    pressured_engine, state_bytes)."""
+    prec = BF16_ROLLOUT
+    per = max(kv_bytes_per_token(cfg, prec), 1)
+    state = request_state_bytes(cfg, prec, 8 if cfg.is_encdec else 0)
+
+    def engine(budget_bytes):
+        eng = ServingEngine(params, cfg, prec, max_slots=4, max_seq_len=48,
+                            admission="ondemand", eos_id=None,
+                            kv_budget_bytes=budget_bytes, seed=seed)
+        for i in range(n_requests):
+            kw = {}
+            if cfg.is_encdec:
+                kw["frames"] = _frames(100 + i, 6, cfg.d_model)
+            eng.submit(_prompt(i, 5 + i % 5), max_new=max_new, rid=i, **kw)
+        return eng
+
+    # oracle: everything fits, zero preemptions
+    oracle = _drive(engine(per * 4 * 200 + 16 * state))
+    # pressured: ~2.5 requests' worth of memory, shrunk again mid-decode
+    eng = engine(per * 4 * 10 + int(2.5 * state))
+    pressured = _drive(eng, shrink_at=4)
+    return oracle, pressured, eng, state
+
+
+def run_preemption(pattern: str, n_requests: int = 5, max_new: int = 8,
+                   seed: int = 0) -> dict:
+    cfg = PATTERNS[pattern]()
+    params = init_params(cfg, jax.random.key(seed))
+    oracle, pressured, _, state = pressured_vs_oracle(
+        cfg, params, n_requests=n_requests, max_new=max_new, seed=seed)
+    return dict(
+        state_bytes=state,
+        oracle=oracle,
+        pressured=pressured,
+        bit_exact=pressured["tokens"] == oracle["tokens"],
+    )
+
+
+# ---------------------------------------------------------------------------
+# experiment 2: fp8 KV admits more concurrent hybrid requests
+# ---------------------------------------------------------------------------
+
+def run_capacity(n_requests: int = 6, max_new: int = 16,
+                 budget_blocks: int = 56, seed: int = 0) -> dict:
+    """Equal byte budget, reserve admission: concurrency = how many whole
+    requests (worst-case KV + constant state) fit."""
+    cfg = tiny_hybrid_serving_config()
+    params = init_params(cfg, jax.random.key(seed))
+    per_bf16 = kv_bytes_per_token(cfg, BF16_ROLLOUT)
+    budget = 4 * per_bf16 * budget_blocks       # block_bytes * budget_blocks
+    out = {}
+    for name, prec in (("bf16", BF16_ROLLOUT), ("fp8", FP8_KV_ONLY_ROLLOUT)):
+        eng = ServingEngine(params, cfg, prec, max_slots=6, max_seq_len=48,
+                            admission="reserve", eos_id=None,
+                            kv_budget_bytes=budget, seed=seed)
+        for i in range(n_requests):
+            eng.submit(_prompt(i, 5 + i % 8), max_new=max_new, rid=i)
+        out[name] = _drive(eng)
+        out[name]["state_blocks"] = eng.state_blocks
+        # bit-exactness is a within-precision property (KV quantization
+        # legitimately moves logits); both traces must still finish whole
+        assert out[name]["completed"] == n_requests, (name, out[name])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# harness / CI plumbing
+# ---------------------------------------------------------------------------
+
+def check(results: dict) -> None:
+    for pattern, r in results["preemption"].items():
+        assert r["oracle"]["preemptions"] == 0, pattern
+        assert r["pressured"]["preemptions"] >= 1, (
+            f"{pattern}: the shrink trace must actually preempt "
+            f"(got {r['pressured']['preemptions']})")
+        assert r["pressured"]["completed"] == r["oracle"]["completed"], \
+            pattern
+        assert r["bit_exact"], (
+            f"{pattern}: preempted completions diverged from the "
+            "no-preemption oracle — recurrent/cross state did not survive "
+            "the swap round-trip")
+    cap = results["capacity"]
+    assert cap["fp8"]["peak_concurrent"] > cap["bf16"]["peak_concurrent"], (
+        "fp8 KV must admit more concurrent hybrid requests than bf16 at "
+        f"equal bytes: {cap['fp8']['peak_concurrent']} vs "
+        f"{cap['bf16']['peak_concurrent']}")
+
+
+def summarize(results: dict):
+    rows = []
+    for pattern, r in results["preemption"].items():
+        p = r["pressured"]
+        rows.append((f"hybrid_serving/{pattern}", 0.0,
+                     f"preemptions={p['preemptions']};"
+                     f"swap_ins={p['swap_ins']};"
+                     f"wasted_tokens={p['wasted_tokens']};"
+                     f"state_bytes={r['state_bytes']};"
+                     f"bit_exact={r['bit_exact']}"))
+    cap = results["capacity"]
+    rows.append(("hybrid_serving/fp8_capacity", 0.0,
+                 f"peak_concurrent_bf16={cap['bf16']['peak_concurrent']};"
+                 f"peak_concurrent_fp8={cap['fp8']['peak_concurrent']};"
+                 f"rate_bf16={cap['bf16']['useful_token_rate']:.3f};"
+                 f"rate_fp8={cap['fp8']['useful_token_rate']:.3f}"))
+    return rows
+
+
+def main(quick: bool = False, json_path=None, run_check: bool = False):
+    n = 4 if quick else 5
+    results = {
+        "preemption": {p: run_preemption(p, n_requests=n) for p in PATTERNS},
+        "capacity": run_capacity(n_requests=4 if quick else 6),
+    }
+    for name, us, derived in summarize(results):
+        print(f"{name},{us:.1f},{derived}")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(results, f, indent=2, default=float)
+        print(f"# wrote {json_path}")
+    if run_check:
+        check(results)
+        print("# hybrid-serving invariants hold (SSM/enc-dec preemption "
+              "bit-exact; fp8 KV raises hybrid concurrency)")
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller trace (what benchmarks.run uses)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write the results as JSON")
+    ap.add_argument("--check", action="store_true",
+                    help="assert the bit-exact + capacity gates (CI)")
+    args = ap.parse_args()
+    main(quick=args.quick, json_path=args.json, run_check=args.check)

@@ -55,4 +55,38 @@ def tiny_serving_config() -> ArchConfig:
     return get_config("qwen3-8b").reduced(
         n_layers=2, d_model=64, d_ff=128, vocab_size=tasks.VOCAB_SIZE,
         n_heads=4, n_kv_heads=2, d_head=16)
-__all__ += ["tiny_serving_config"]
+
+
+def tiny_hybrid_serving_config() -> ArchConfig:
+    """Jamba-style attn+ssm interleave (period 2: one attention layer, one
+    Mamba2 layer) at serving-test scale — the hybrid-state serving tests
+    and benchmark all measure this one pattern."""
+    from repro.data import tasks
+    return get_config("jamba-1.5-large-398b").reduced(
+        n_layers=2, attn_period=2, n_experts=0, top_k=0,
+        moe_period=1, moe_offset=0,
+        d_model=64, d_ff=128, vocab_size=tasks.VOCAB_SIZE,
+        n_heads=4, n_kv_heads=2, d_head=16,
+        ssm_state=8, ssm_head_dim=16)
+
+
+def tiny_ssm_serving_config() -> ArchConfig:
+    """Attention-free reduced mamba2-780m: no KV cache at all — serving is
+    bounded purely by the per-slot recurrent-state bytes."""
+    from repro.data import tasks
+    return get_config("mamba2-780m").reduced(
+        n_layers=2, d_model=64, vocab_size=tasks.VOCAB_SIZE,
+        ssm_state=8, ssm_head_dim=16)
+
+
+def tiny_encdec_serving_config() -> ArchConfig:
+    """Reduced seamless-m4t-medium: enc-dec with per-request frames and
+    cross-attention KV held alongside the paged decoder self-KV."""
+    from repro.data import tasks
+    return get_config("seamless-m4t-medium").reduced(
+        n_layers=2, n_enc_layers=2, d_model=64, d_ff=128,
+        vocab_size=tasks.VOCAB_SIZE, n_heads=4, n_kv_heads=2, d_head=16)
+
+
+__all__ += ["tiny_serving_config", "tiny_hybrid_serving_config",
+            "tiny_ssm_serving_config", "tiny_encdec_serving_config"]

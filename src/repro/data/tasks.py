@@ -48,6 +48,25 @@ class Problem:
     answer: str
 
 
+def random_prompt(seed: int, length: int) -> np.ndarray:
+    """Deterministic synthetic prompt: BOS + random in-vocab tokens.
+
+    The serving tests and benchmarks all draw traces through this ONE
+    recipe — their bit-exact oracle comparisons depend on trace
+    generation never desynchronizing between files.
+    """
+    rng = np.random.default_rng(seed)
+    return np.concatenate(
+        [[BOS], rng.integers(4, 19, size=length - 1)]).astype(np.int32)
+
+
+def random_frames(seed: int, n: int, d_model: int) -> np.ndarray:
+    """Deterministic synthetic encoder frame embeddings — the audio/vision
+    frontend stand-in for enc-dec serving traces."""
+    return np.random.default_rng(seed).normal(
+        size=(n, d_model)).astype(np.float32)
+
+
 def sample_problem(rng: np.random.Generator, max_operand: int = 99) -> Problem:
     a = int(rng.integers(0, max_operand + 1))
     b = int(rng.integers(0, max_operand + 1))

@@ -2,6 +2,13 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --reduced \
         --requests 16 --precision fp8 --prefill-chunk 8 --eviction lru
+
+Every layer pattern in the zoo serves: hybrid/SSM archs
+(`--arch jamba-1.5-large-398b --reduced`, `--arch mamba2-780m --reduced`)
+swap their recurrent state to host on preemption, and enc-dec archs
+(`--arch seamless-m4t-medium --reduced`) get synthetic source frames per
+request (real frontends would feed frame embeddings through the same
+`submit(..., frames=...)` path).
 """
 from __future__ import annotations
 
@@ -21,6 +28,7 @@ from repro.serving import (
     ServingEngine,
     StepBudget,
     kv_bytes_per_token,
+    request_state_bytes,
 )
 
 
@@ -51,8 +59,20 @@ def main(argv=None):
                     default="gather",
                     help="paged: Pallas fp8_paged_decode_attention "
                          "(interpret on CPU, compiled on TPU)")
+    ap.add_argument("--src-pad", type=int, default=8,
+                    help="enc-dec: source-frame capacity per slot "
+                         "(requests carry up to this many frames)")
+    ap.add_argument("--shrink-at", type=int, default=None,
+                    help="shrink the byte budget after N engine steps "
+                         "(the RL reality: the trainer reclaims HBM at a "
+                         "weight sync) — forces swap even on attention-"
+                         "free archs whose KV usage is zero")
+    ap.add_argument("--shrink-frac", type=float, default=0.5,
+                    help="fraction of the budget kept after --shrink-at")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.src_pad < 1:
+        ap.error("--src-pad must be >= 1 (frames per enc-dec request)")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -61,10 +81,13 @@ def main(argv=None):
     params = init_params(cfg, jax.random.key(args.seed))
     rollout_params, sync_stats = sync_policy_weights(params, precision)
 
+    state_bytes = request_state_bytes(
+        cfg, precision, src_len=args.src_pad if cfg.is_encdec else 0)
     budget = None
     if args.budget_tokens:
         budget = args.budget_tokens * max(
-            kv_bytes_per_token(cfg, precision), 1)
+            kv_bytes_per_token(cfg, precision), 1) \
+            + args.slots * state_bytes
     step_budget = StepBudget(prefill_tokens=args.prefill_budget) \
         if args.prefill_budget else None
     eng = ServingEngine(rollout_params, cfg, precision,
@@ -75,11 +98,24 @@ def main(argv=None):
                         eviction=args.eviction,
                         prefill_chunk=args.prefill_chunk,
                         step_budget=step_budget,
-                        decode_kernel=args.decode_kernel)
+                        decode_kernel=args.decode_kernel,
+                        max_src_len=args.src_pad)
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):
         prob = tasks.sample_problem(rng)
-        eng.submit(prob.prompt_ids, max_new=args.max_new, rid=i)
+        frames = None
+        if cfg.is_encdec:
+            # synthetic frame embeddings stand in for the audio frontend
+            n = int(rng.integers(min(3, args.src_pad), args.src_pad + 1))
+            frames = tasks.random_frames(args.seed * 1000 + i, n,
+                                         cfg.d_model)
+        eng.submit(prob.prompt_ids, max_new=args.max_new, rid=i,
+                   frames=frames)
+    if args.shrink_at is not None:
+        full = eng.budget_tokens
+        for _ in range(args.shrink_at):
+            eng.step()
+        eng.budget_tokens = int(full * args.shrink_frac)
     report = eng.run()
     print(json.dumps({
         "completed": len(report.completed),
@@ -94,6 +130,7 @@ def main(argv=None):
         "useful_token_rate": round(report.useful_token_rate, 4),
         "budget_tokens": report.budget_tokens,
         "kv_bytes_per_token": kv_bytes_per_token(cfg, precision),
+        "state_bytes_per_request": state_bytes,
         "sync_ms": round(sync_stats.get("sync_ms", 0.0), 2),
     }, indent=2))
 

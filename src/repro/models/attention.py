@@ -587,13 +587,24 @@ def _paged_attention_over_table(
 # ---------------------------------------------------------------------------
 
 def cross_attention_cache(enc_out: jax.Array, params: dict, cfg,
-                          precision: PrecisionConfig):
-    """Precompute cross K/V from encoder output; quantize once (DESIGN §6)."""
+                          precision: PrecisionConfig,
+                          k_scale: Optional[jax.Array] = None,
+                          v_scale: Optional[jax.Array] = None):
+    """Precompute cross K/V from encoder output; quantize once (DESIGN §6).
+
+    `k_scale`/`v_scale` seed the fresh cache's scales: the serving engine
+    passes the pool's per-layer globals so a request prefilled after the
+    calibration forward quantizes its cross K/V with the *calibrated*
+    scales instead of the init value (with `calculate_kv_scales` still on,
+    calibration from this tensor's amax overrides the seed).
+    """
     b, s, _ = enc_out.shape
     kvh, dh = cfg.n_kv_heads, cfg.d_head
     k = linear(enc_out, params["wk"], precision=precision).reshape(b, s, kvh, dh)
     v = linear(enc_out, params["wv"], precision=precision).reshape(b, s, kvh, dh)
     cache = init_kv_cache(b, s, kvh, dh, precision, enc_out.dtype)
+    if k_scale is not None:
+        cache = cache._replace(k_scale=k_scale, v_scale=v_scale)
     kq, vq, cache = _quantize_kv(k, v, cache, precision, recalibrate=True)
     return cache._replace(k=kq, v=vq)
 

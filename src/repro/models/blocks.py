@@ -120,9 +120,17 @@ def apply_slot_full(
     else:
         p = slot_params["ssm"]
         xn = rms_norm(x, p["norm_scale"], cfg.norm_eps)
+        # when the recurrent state is carried out (prefill / chunked
+        # prefill), padded positions must be state no-ops: `lengths` is the
+        # total valid length, so inside a chunk starting at `chunk_start`
+        # the valid region is the first (lengths - chunk_start) positions
+        ssm_lengths = None
+        if want_ssm_state and lengths is not None:
+            ssm_lengths = lengths - chunk_start if chunk_start is not None \
+                else lengths
         h, new_ssm = ssm_mod.ssm_forward(
             xn, p, cfg, precision, state=ssm_state,
-            return_state=want_ssm_state)
+            return_state=want_ssm_state, lengths=ssm_lengths)
         x = x + h
 
     if spec.cross and enc_out is not None or (spec.cross and cross_cache is not None):

@@ -66,9 +66,16 @@ def _split_in_proj(proj: jax.Array, cfg):
     return z, xbc, dt  # gate (.., di); conv input (.., di+2n); dt (.., h)
 
 
-def _causal_conv(xbc: jax.Array, conv_w, conv_b, tail: Optional[jax.Array]):
+def _causal_conv(xbc: jax.Array, conv_w, conv_b, tail: Optional[jax.Array],
+                 lengths: Optional[jax.Array] = None):
     """Depthwise causal conv over time.  xbc (B,T,C); tail (B,W-1,C) or None
-    (zeros).  Returns (out (B,T,C), new_tail (B,W-1,C))."""
+    (zeros).  Returns (out (B,T,C), new_tail (B,W-1,C)).
+
+    With `lengths` (valid tokens per row, right-padded input) the returned
+    tail ends at the last *valid* position instead of the last padded one,
+    so a later chunk / decode step continues from real history — a tail
+    built from PAD embeddings would poison every subsequent conv window.
+    """
     w = conv_w.shape[0]
     b, t, c = xbc.shape
     if tail is None:
@@ -80,7 +87,15 @@ def _causal_conv(xbc: jax.Array, conv_w, conv_b, tail: Optional[jax.Array]):
         out = out + full[:, i:i + t].astype(jnp.float32) * \
             conv_w[i].astype(jnp.float32)
     out = out + conv_b.astype(jnp.float32)
-    return jax.nn.silu(out).astype(xbc.dtype), full[:, t:]
+    if lengths is None:
+        new_tail = full[:, t:]
+    else:
+        # token j of this input sits at combined index W-1+j, so the W-1
+        # entries ending at the last valid token span [n, n+W-1)
+        n = jnp.clip(lengths, 0, t)
+        idx = n[:, None] + jnp.arange(w - 1)[None, :]         # (B, W-1)
+        new_tail = jnp.take_along_axis(full, idx[:, :, None], axis=1)
+    return jax.nn.silu(out).astype(xbc.dtype), new_tail
 
 
 def _segsum(a: jax.Array) -> jax.Array:
@@ -156,18 +171,32 @@ def ssm_forward(
     precision: Optional[PrecisionConfig] = None,
     state: Optional[SSMState] = None,
     return_state: bool = False,
+    lengths: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[SSMState]]:
-    """Full-sequence SSD pass (training / prefill when return_state)."""
+    """Full-sequence SSD pass (training / prefill when return_state).
+
+    `lengths` (B,) marks the valid (right-padded) region of `x`: positions
+    at or past it get dt = 0, which makes them exact state no-ops (decay
+    exp(a*0) = 1, input contribution dt*x (x) B = 0) and steers the conv
+    tail to the last valid token — so the returned state is a pure
+    function of the valid tokens, and chunked prefill / padded serving
+    prefill hand decode the same recurrent state a one-shot unpadded pass
+    would.  Outputs at invalid positions are garbage the caller masks.
+    """
     b, t, d = x.shape
     di, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
 
     proj = linear(x, params["w_in"], precision=precision)
     z, xbc, dt_raw = _split_in_proj(proj, cfg)
     tail = state.conv if state is not None else None
-    xbc, new_tail = _causal_conv(xbc, params["conv_w"], params["conv_b"], tail)
+    xbc, new_tail = _causal_conv(xbc, params["conv_w"], params["conv_b"],
+                                 tail, lengths=lengths)
     xs, bmat, cmat = jnp.split(xbc, [di, di + n], axis=-1)
     xh = xs.reshape(b, t, h, p)
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    if lengths is not None:
+        valid = jnp.arange(t)[None, :] < lengths[:, None]     # (B, T)
+        dt = jnp.where(valid[:, :, None], dt, 0.0)
     a_head = -jnp.exp(params["a_log"])
 
     # pad T to a chunk multiple (prefill lengths are arbitrary)

@@ -347,15 +347,25 @@ def prefill(
                           inputs.get("src_lengths"))
         if inputs.get("src_lengths") is not None:
             src_lengths = inputs["src_lengths"]
-        # build cross caches (quantized once — DESIGN §6)
+        # build cross caches (quantized once — DESIGN §6); the previous
+        # cache's per-layer scales seed the fresh one so post-calibration
+        # prefills reuse the calibrated globals (vLLM scale semantics)
         for j, spec in enumerate(pattern):
             if spec.cross:
                 cross_params = jax.tree.map(
                     lambda a: a, params["blocks"][f"s{j}"]["cross"])
-                cache["slots"][f"s{j}"]["cross"] = jax.vmap(
-                    lambda p: attn_mod.cross_attention_cache(
-                        enc_out, p, cfg, precision)
-                )(cross_params)
+                old = cache["slots"][f"s{j}"].get("cross")
+                if old is not None:
+                    cache["slots"][f"s{j}"]["cross"] = jax.vmap(
+                        lambda p, ks, vs: attn_mod.cross_attention_cache(
+                            enc_out, p, cfg, precision, k_scale=ks,
+                            v_scale=vs)
+                    )(cross_params, old.k_scale, old.v_scale)
+                else:
+                    cache["slots"][f"s{j}"]["cross"] = jax.vmap(
+                        lambda p: attn_mod.cross_attention_cache(
+                            enc_out, p, cfg, precision)
+                    )(cross_params)
         cache["src_lengths"] = src_lengths
 
     x, prefix_len = _decoder_inputs(params, inputs, cfg, precision)
@@ -425,18 +435,21 @@ def prefill_chunk(
     Attention gathers earlier chunks back from the pool through the block
     table, so a prompt of any length streams through one fixed-width (C)
     trace instead of one fixed-width-`prompt_pad` trace per admission.
-    SSM slots carry their recurrent state chunk-to-chunk; enc-dec/VLM
-    inputs are not supported on this path (they prefill one-shot).
+    SSM slots carry their recurrent state chunk-to-chunk (padded positions
+    in a ragged final chunk are state no-ops — see `ssm_forward`), so
+    hybrid and attention-free models stream through this path too;
+    enc-dec/VLM inputs are not supported (they prefill one-shot).
     """
-    assert cache.get("block_tables") is not None, \
+    pattern = blocks_mod.layer_pattern(cfg)
+    has_attn = any(s.mixer == "attn" for s in pattern)
+    assert not has_attn or cache.get("block_tables") is not None, \
         "chunked prefill needs a paged cache with block tables"
     assert not cfg.is_encdec and cfg.frontend is None, \
         "chunked prefill serves decoder-only text models"
-    pattern = blocks_mod.layer_pattern(cfg)
     x = _embed(params, tokens)
     b, c, _ = x.shape
     new_lengths = start + chunk_lengths
-    block_tables = cache["block_tables"]
+    block_tables = cache.get("block_tables")
 
     def body(carry, xs):
         h = carry

@@ -4,6 +4,7 @@ from repro.serving.engine import (
     ServeReport,
     ServingEngine,
     kv_bytes_per_token,
+    request_state_bytes,
 )
 from repro.serving.scheduler import (
     EVICTION_POLICIES,
@@ -13,5 +14,6 @@ from repro.serving.scheduler import (
 )
 
 __all__ = ["ServingEngine", "ServeReport", "Request", "kv_bytes_per_token",
-           "BlockManager", "NoFreeBlocksError", "Scheduler",
-           "ScheduleDecision", "StepBudget", "EVICTION_POLICIES"]
+           "request_state_bytes", "BlockManager", "NoFreeBlocksError",
+           "Scheduler", "ScheduleDecision", "StepBudget",
+           "EVICTION_POLICIES"]

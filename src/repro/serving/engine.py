@@ -65,10 +65,31 @@ Preemption = swap-to-host
     recomputed, and every restored token is counted in `wasted_tokens`
     (the swap tax the victim pays for the preemption).
 
+Hybrid / enc-dec slot state
+    SSM layers (mamba2 / jamba patterns) carry recurrent state (`h`,
+    conv tail) and enc-dec decoders carry cross-attention KV; both live
+    slot-indexed, NOT in the paged pool.  Swap-out copies the victim's
+    state rows to host alongside its blocks and swap-in restores them
+    into whichever slot the request resumes in; a fresh admission zeroes
+    the slot's recurrent rows first.  During the fused decode step,
+    mid-prefill slots' SSM rows are written back afterwards (the state
+    analogue of the trash-block table mask), so piggybacked decode never
+    advances a half-prefilled recurrence.  The per-request constant
+    footprint (`request_state_bytes`) is priced into admission and swap
+    accounting as block-equivalents — attention-free models are bounded
+    purely by it.  Enc-dec requests carry `frames` through `submit()`
+    (padded to `max_src_len`; the encoder masks via src_lengths), and
+    prefix sharing is disabled there: decoder KV depends on the frames,
+    so token-keyed dedup would alias different sources.
+
 KV scales
-    Calibrated on the engine's first prefill chunk after weight load
-    (vLLM's `calculate_kv_scales` semantics), stored once in the shared
-    pool, reused by every later prefill/decode (scales survive swap).
+    Calibrated on the engine's first prefill after weight load (vLLM's
+    `calculate_kv_scales` semantics), stored once in the shared pool,
+    reused by every later prefill/decode (scales survive swap).  Under
+    chunked prefill the calibrating prefill runs as ONE full-width chunk
+    so its amax window — and every quantized pool byte — matches the
+    one-shot path exactly (chunked-vs-batch1 stays bit-exact with fp8
+    KV); cross-attention scales calibrate once the same way.
 """
 from __future__ import annotations
 
@@ -83,6 +104,7 @@ from repro.core.precision import PrecisionConfig
 from repro.core.sampling import sample
 from repro.data import tasks
 from repro.models import blocks as blocks_mod
+from repro.models import ssm as ssm_mod
 from repro.models import decode_step, init_cache, prefill, prefill_chunk
 from repro.models.attention import paged_copy_rows
 from repro.serving.block_manager import BlockManager
@@ -99,8 +121,11 @@ from repro.serving.scheduler import (
 
 
 def kv_bytes_per_token(cfg, precision: PrecisionConfig) -> int:
-    """KV bytes one token occupies across all attention layers (the real
-    target-device footprint; scales amortize to ~0)."""
+    """*Self-attention* KV bytes one token occupies across all attention
+    layers (the real target-device footprint; scales amortize to ~0).
+    This is the per-token marginal cost only — the per-request *constant*
+    footprint (SSM recurrent state, cross-attention KV) is
+    `request_state_bytes`, and both enter the engine's byte accounting."""
     if cfg.attention_free:
         return 0
     n_attn = sum(cfg.is_attn_layer(i) for i in range(cfg.n_layers))
@@ -108,11 +133,36 @@ def kv_bytes_per_token(cfg, precision: PrecisionConfig) -> int:
     return n_attn * 2 * cfg.n_kv_heads * cfg.d_head * elem
 
 
+def request_state_bytes(cfg, precision: PrecisionConfig,
+                        src_len: int = 0) -> int:
+    """Constant per-request slot-state bytes beyond the paged KV blocks:
+    SSM recurrent state (`h` f32 + conv tail bf16 per SSM layer — never
+    quantized, DESIGN §6) and the cross-attention KV a decoder holds over
+    `src_len` encoder positions (quantized once at prefill, so FP8 halves
+    it).  This is what the pre-fix `kv_bytes_per_token`-only accounting
+    missed: enc-dec and hybrid models over-admitted against the byte
+    budget because every admitted request silently pins this much extra
+    memory."""
+    total = 0
+    repeats = blocks_mod.n_repeats(cfg)
+    for spec in blocks_mod.layer_pattern(cfg):
+        if spec.mixer == "ssm":
+            h = cfg.ssm_heads * cfg.ssm_head_dim * cfg.ssm_state * 4
+            conv = (cfg.ssm_conv - 1) * ssm_mod.conv_channels(cfg) * 2
+            total += repeats * (h + conv)
+        if spec.cross:
+            elem = 1 if precision.kv_quantized else 2
+            total += repeats * 2 * src_len * cfg.n_kv_heads * cfg.d_head \
+                * elem
+    return total
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
     prompt: np.ndarray           # (P,) unpadded
     max_new: int
+    frames: Optional[np.ndarray] = None   # (S_src, D) enc-dec source frames
     generated: List[int] = dataclasses.field(default_factory=list)
     preemptions: int = 0
     wasted_tokens: int = 0       # tokens re-restored after preemption
@@ -123,6 +173,10 @@ class Request:
     swap_kv: Optional[Dict[str, Tuple[np.ndarray, np.ndarray]]] = None
     swap_tokens: int = 0         # kv rows held in swap
     swap_pending: int = 0        # pending (sampled, not yet fed) token
+    # non-KV slot state held while preempted: per layer-stack host copies
+    # of the SSM h/conv rows and cross-attention K/V rows (the paged-KV
+    # swap above cannot carry them — they live slot-indexed, not pooled)
+    swap_state: Optional[Dict[str, dict]] = None
 
 
 @dataclasses.dataclass
@@ -159,9 +213,13 @@ class ServingEngine:
                  prefill_chunk: Optional[int] = None,
                  step_budget: Optional[StepBudget] = None,
                  decode_kernel: str = "gather",
-                 eos_id: Optional[int] = tasks.EOS):
+                 eos_id: Optional[int] = tasks.EOS,
+                 max_src_len: int = 8):
         assert admission in ("reserve", "ondemand"), admission
         assert decode_kernel in ("gather", "paged"), decode_kernel
+        assert prefill_chunk is None or not cfg.is_encdec, (
+            "enc-dec requests prefill one-shot (the encoder pass over "
+            "frames is not chunkable); leave prefill_chunk unset")
         self.prompt_pad = prompt_pad   # legacy one-shot prefill width
         self.params = params
         self.cfg = cfg
@@ -172,6 +230,7 @@ class ServingEngine:
         self.admission = admission
         self.use_kernel = decode_kernel == "paged"
         self.eos_id = eos_id           # None = decode max_new tokens always
+        self.src_pad = max_src_len     # enc-dec frames capacity per slot
         self.key = jax.random.key(seed)
         self.scheduler = Scheduler(eviction=eviction,
                                    prefill_chunk=prefill_chunk,
@@ -183,10 +242,20 @@ class ServingEngine:
             not cfg.is_encdec and cfg.frontend is None
             and all(s.mixer == "attn" and not s.cross
                     for s in blocks_mod.layer_pattern(cfg)))
+        # prefix-index sharing keys blocks by prompt TOKENS; on enc-dec /
+        # multimodal models the decoder's self-KV also depends on the
+        # frames, so two same-token requests must never share blocks
+        prefix_sharing = prefix_sharing and not cfg.is_encdec \
+            and cfg.frontend is None
 
         per_tok = max(kv_bytes_per_token(cfg, precision), 1)
+        # per-request constant footprint beyond paged KV (SSM state, cross
+        # KV) — priced into the byte budget as block-equivalents below
+        self.state_bytes = request_state_bytes(
+            cfg, precision, src_len=max_src_len if cfg.is_encdec else 0)
         if kv_budget_bytes is None:
-            kv_budget_bytes = per_tok * max_slots * max_seq_len
+            kv_budget_bytes = per_tok * max_slots * max_seq_len \
+                + max_slots * self.state_bytes
         # Physical block byte size is precision-INDEPENDENT (`block_size`
         # tokens at bf16 KV width), so quantizing the KV cache doubles the
         # tokens each block holds rather than the number of blocks — the
@@ -199,10 +268,19 @@ class ServingEngine:
         # Mutable token-denominated view of the budget; shrinking it lowers
         # the effective block limit below the physical pool size.
         self.budget_tokens = self.block_mgr.capacity_tokens
+        # block-equivalents one admitted request's slot state pins against
+        # the budget, and the token-units moving it over the host link
+        # costs a swap (scheduler StepBudget / cost accounting)
+        self.state_blocks = -(-self.state_bytes
+                              // max(self.block_mgr.block_bytes, 1)) \
+            if self.state_bytes else 0
+        self.state_swap_tokens = self.state_blocks * self.block_mgr.block_size
 
         self.cache = init_cache(cfg, max_slots, max_seq_len, precision,
                                 page_size=self.block_mgr.block_size,
-                                num_pages=self.block_mgr.num_blocks)
+                                num_pages=self.block_mgr.num_blocks,
+                                src_len=self.src_pad if cfg.is_encdec else 0)
+        self.has_paged_kv = "block_tables" in self.cache
         self.slot_req: List[Optional[Request]] = [None] * max_slots
         self.queue: List[Request] = []
         self.done: List[Request] = []
@@ -215,7 +293,8 @@ class ServingEngine:
                           prefill_chunks=0)
 
     # ------------------------------------------------------------------
-    def submit(self, prompt_ids, max_new: int, rid: Optional[int] = None):
+    def submit(self, prompt_ids, max_new: int, rid: Optional[int] = None,
+               frames=None):
         prompt = np.asarray(prompt_ids, np.int32)
         if self.scheduler.prefill_chunk is None and \
                 len(prompt) > self.prompt_pad:
@@ -230,12 +309,29 @@ class ServingEngine:
             raise ValueError(
                 f"prompt ({len(prompt)}) + max_new ({max_new}) exceeds "
                 f"max_seq_len={self.max_seq_len}")
+        if self.cfg.is_encdec:
+            if frames is None:
+                raise ValueError(
+                    "encoder-decoder serving needs frames=(S_src, d_model) "
+                    "source embeddings per request")
+            frames = np.asarray(frames, np.float32)
+            if frames.ndim != 2 or frames.shape[1] != self.cfg.d_model:
+                raise ValueError(
+                    f"frames must be (S_src, d_model={self.cfg.d_model}); "
+                    f"got {frames.shape}")
+            if frames.shape[0] > self.src_pad:
+                raise ValueError(
+                    f"{frames.shape[0]} frames exceed max_src_len="
+                    f"{self.src_pad}")
+        elif frames is not None:
+            raise ValueError("frames only apply to encoder-decoder models")
         if rid is None:
             rid = self._next_rid
         # rid keys BlockManager ownership — collisions would merge two live
         # requests' block lists, so keep auto-assignment monotonic
         self._next_rid = max(self._next_rid, rid + 1)
-        self.queue.append(Request(rid=rid, prompt=prompt, max_new=max_new))
+        self.queue.append(Request(rid=rid, prompt=prompt, max_new=max_new,
+                                  frames=frames))
 
     # -- accounting ---------------------------------------------------------
     @property
@@ -243,10 +339,32 @@ class ServingEngine:
         return self.block_mgr.block_size
 
     @property
+    def _state_blocks_in_use(self) -> int:
+        """Block-equivalents pinned by active slots' non-KV state (derived
+        from slot occupancy, so plan-time slot updates are priced
+        immediately)."""
+        return self.state_blocks * sum(
+            r is not None for r in self.slot_req)
+
+    @property
     def _effective_blocks(self) -> int:
-        """Block limit implied by the (possibly shrunk) token budget."""
+        """Block limit left for *paged KV* under the (possibly shrunk)
+        token budget: active slots' constant state (SSM h/conv, cross KV)
+        is netted out first, so a budget shrink can force preemption even
+        on attention-free models whose KV usage is zero."""
         return min(self.block_mgr.num_blocks,
-                   self.block_mgr.blocks_for_tokens(self.budget_tokens))
+                   self.block_mgr.blocks_for_tokens(self.budget_tokens)) \
+            - self._state_blocks_in_use
+
+    @property
+    def _needs_kv_calibration(self) -> bool:
+        """True until the first prefill locks the pool's KV scales (the
+        scheduler widens that prefill's chunk to the whole prompt so the
+        calibration amax window matches one-shot prefill exactly)."""
+        return (self.precision.kv_quantized
+                and self.precision.calculate_kv_scales
+                and not self._scales_calibrated
+                and not self.cfg.attention_free)
 
     def _free_slot(self) -> Optional[int]:
         for i, r in enumerate(self.slot_req):
@@ -255,7 +373,10 @@ class ServingEngine:
         return None
 
     def _reserve_blocks(self, req: Request) -> int:
-        """Blocks a request needs at admission time."""
+        """Paged-KV blocks a request needs at admission time (its constant
+        state footprint is priced separately via `state_blocks`)."""
+        if self.cfg.attention_free:
+            return 0
         retained = req.swap_tokens if req.swap_kv is not None else 0
         if self.admission == "reserve":
             # worst case: full prompt + every token it may still generate
@@ -270,6 +391,8 @@ class ServingEngine:
 
     # -- cache surgery ------------------------------------------------------
     def _set_table_row(self, slot: int, ids: List[int]):
+        if not self.has_paged_kv:       # attention-free: no block tables
+            return
         w = self.cache["block_tables"].shape[1]
         row = np.full((w,), -1, np.int32)
         row[:len(ids)] = ids[:w]
@@ -277,10 +400,60 @@ class ServingEngine:
             self.cache["block_tables"].at[slot].set(jnp.asarray(row))
 
     def _clear_slot(self, slot: int):
-        w = self.cache["block_tables"].shape[1]
-        self.cache["block_tables"] = self.cache["block_tables"].at[slot].set(
-            jnp.full((w,), -1, jnp.int32))
+        if self.has_paged_kv:
+            w = self.cache["block_tables"].shape[1]
+            self.cache["block_tables"] = \
+                self.cache["block_tables"].at[slot].set(
+                    jnp.full((w,), -1, jnp.int32))
         self.cache["lengths"] = self.cache["lengths"].at[slot].set(0)
+
+    def _update_slot_state(self, ssm=None, cross=None):
+        """Rebuild cache["slots"] with `ssm(name, state)` / `cross(name,
+        kv_cache)` applied to every layer-stack entry holding that kind
+        (None leaves the kind untouched).  The ONE writer for non-KV slot
+        state — reset, swap-in restore and the decode write-back all go
+        through here so a new state kind has a single seam to thread."""
+        slots = {}
+        changed = False
+        for name, sd in self.cache["slots"].items():
+            merged = dict(sd)
+            if ssm is not None and "ssm" in sd:
+                merged["ssm"] = ssm(name, sd["ssm"])
+                changed = True
+            if cross is not None and "cross" in sd:
+                merged["cross"] = cross(name, sd["cross"])
+                changed = True
+            slots[name] = merged
+        if changed:
+            self.cache = dict(self.cache, slots=slots)
+
+    def _snapshot_slot_state(self, slot: int) -> Dict[str, dict]:
+        """Host copies of the slot's non-KV state rows, keyed by
+        layer-stack name then kind (the read counterpart of
+        `_update_slot_state`)."""
+        state: Dict[str, dict] = {}
+        for name, sd in self.cache["slots"].items():
+            entry = {}
+            if "ssm" in sd:
+                entry["ssm"] = jax.tree.map(
+                    lambda a: np.asarray(a[:, slot:slot + 1]), sd["ssm"])
+            if "cross" in sd:
+                cr = sd["cross"]
+                entry["cross"] = (np.asarray(cr.k[:, slot:slot + 1]),
+                                  np.asarray(cr.v[:, slot:slot + 1]))
+            if entry:
+                state[name] = entry
+        return state
+
+    def _reset_slot_state(self, slot: int):
+        """Zero the slot's recurrent state for a FRESH occupant.  The
+        previous occupant's SSM h/conv rows otherwise leak into the new
+        request's prefill as a bogus h0 (cross caches need no reset — the
+        enc-dec prefill overwrites them wholesale and `src_lengths` masks
+        the stale tail)."""
+        self._update_slot_state(
+            ssm=lambda name, st: jax.tree.map(
+                lambda a: a.at[:, slot].set(0), st))
 
     def _slot_view(self, slot: int) -> dict:
         """Batch-1 cache view for prefill into `slot`: KV pools are shared
@@ -297,11 +470,15 @@ class ServingEngine:
                         if a.ndim >= 2 else a,
                         state)
             slots[name] = view
-        return {
+        out = {
             "slots": slots,
             "lengths": self.cache["lengths"][slot:slot + 1],
-            "block_tables": self.cache["block_tables"][slot:slot + 1],
         }
+        if self.has_paged_kv:
+            out["block_tables"] = self.cache["block_tables"][slot:slot + 1]
+        if "src_lengths" in self.cache:
+            out["src_lengths"] = self.cache["src_lengths"][slot:slot + 1]
+        return out
 
     def _merge_view(self, new_cache: dict, slot: int):
         slots = {}
@@ -311,12 +488,20 @@ class ServingEngine:
                 if key == "kv":
                     merged[key] = new_cache["slots"][name][key]
                 else:
+                    # batched leaves merge at the slot; scalar leaves (the
+                    # per-layer cross k/v scales) are pool-wide globals and
+                    # take the prefill's value — exactly like the paged
+                    # pool's own scales, which ride along in "kv"
                     merged[key] = jax.tree.map(
                         lambda big, small: jax.lax.dynamic_update_slice_in_dim(
-                            big, small, slot, 1) if big.ndim >= 2 else big,
+                            big, small, slot, 1) if big.ndim >= 2 else small,
                         state, new_cache["slots"][name][key])
             slots[name] = merged
         self.cache = dict(self.cache, slots=slots)
+        if "src_lengths" in self.cache and "src_lengths" in new_cache:
+            self.cache["src_lengths"] = \
+                self.cache["src_lengths"].at[slot].set(
+                    new_cache["src_lengths"][0])
 
     # -- execution mechanism -------------------------------------------------
     def execute(self, decision: ScheduleDecision):
@@ -364,6 +549,11 @@ class ServingEngine:
             self._swap_in(act.slot, req, act.block_ids,
                           n_shared=act.n_shared)
         else:
+            # fresh occupant: the slot's recurrent state rows still hold
+            # the previous occupant's h/conv (the preemption-clobber bug:
+            # these rows are NOT part of the paged pool, so nothing else
+            # resets them)
+            self._reset_slot_state(act.slot)
             self.cache["lengths"] = self.cache["lengths"].at[act.slot].set(
                 req.prefilled)
 
@@ -413,14 +603,22 @@ class ServingEngine:
         self._set_table_row(slot, ids)
         view = self._slot_view(slot)
         view["lengths"] = jnp.zeros((1,), jnp.int32)
+        inputs = {"tokens": prompt, "lengths": jnp.array([p])}
+        if self.cfg.is_encdec:
+            # encoder source: the request's frames padded to the slot's
+            # fixed capacity; src_lengths masks the padding through the
+            # encoder and every later cross-attention read
+            n = req.frames.shape[0]
+            fr = np.zeros((1, self.src_pad, self.cfg.d_model), np.float32)
+            fr[0, :n] = req.frames
+            inputs["frames"] = jnp.asarray(fr, jnp.bfloat16)
+            inputs["src_lengths"] = jnp.array([n], jnp.int32)
         # Shared prefix blocks in `ids` are re-written here with the exact
         # bytes they already hold: causal attention makes prefix KV a pure
         # function of the prefix tokens, and scales are global post-
         # calibration — so the logits get their full prompt while the
         # other holders' KV stays bit-identical.
-        logits, new_cache = prefill(
-            self.params, {"tokens": prompt, "lengths": jnp.array([p])},
-            view, self.cfg, prec)
+        logits, new_cache = prefill(self.params, inputs, view, self.cfg, prec)
         self._merge_view(new_cache, slot)
         self.cache["lengths"] = self.cache["lengths"].at[slot].set(p)
         self._scales_calibrated = True
@@ -448,6 +646,11 @@ class ServingEngine:
                     kv = sd["kv"]
                     host[name] = (np.asarray(kv.k[:, idx]),
                                   np.asarray(kv.v[:, idx]))
+        # Non-KV slot state rides along: SSM h/conv and cross-attention
+        # K/V live slot-indexed (not in the paged pool), so a swap that
+        # only saved blocks would let the next occupant of this slot
+        # clobber them — resume would then decode from garbage state.
+        state = self._snapshot_slot_state(act.slot)
         # Authoritative (re-)claim of the swap state.  The scheduler set
         # swap_tokens at plan time, but when this victim was swap-admitted
         # earlier in the SAME step, that Admit's `_swap_in` has just
@@ -455,6 +658,7 @@ class ServingEngine:
         # became correct when that restore ran — so both are (re)recorded
         # here, at this action's place in the execution order.
         req.swap_kv = host
+        req.swap_state = state or None
         req.swap_tokens = act.tokens
         req.swap_pending = int(self.pending_tok[act.slot]) \
             if req.prefilled >= len(req.prompt) else 0
@@ -470,8 +674,9 @@ class ServingEngine:
         The leading `n_shared` table entries came from a prefix-index hit
         at re-admission: those pool rows already hold the prompt's KV
         (content-keyed, bit-identical), so only the tail of the host copy
-        is restored — and only the restored tokens count as `wasted`
-        (the swap tax of the preemption)."""
+        is restored — and only the restored tokens (plus the slot-state
+        block-equivalents for SSM/cross models) count as `wasted` (the
+        swap tax of the preemption)."""
         n = next(iter(req.swap_kv.values()))[0].shape[1] if req.swap_kv \
             else 0
         s = min(n_shared, n)
@@ -488,7 +693,36 @@ class ServingEngine:
                         v=kv.v.at[:, idx].set(jnp.asarray(host_v[:, s:n])))
                 slots[name] = merged
             self.cache = dict(self.cache, slots=slots)
+        if req.swap_state:
+            # restore the victim's recurrent/cross rows into the (possibly
+            # different) slot it resumes in
+            host = req.swap_state
+
+            def restore_ssm(name, st):
+                entry = host.get(name, {})
+                if "ssm" not in entry:
+                    return st
+                return jax.tree.map(
+                    lambda big, small: big.at[:, slot:slot + 1].set(
+                        jnp.asarray(small)),
+                    st, entry["ssm"])
+
+            def restore_cross(name, cr):
+                entry = host.get(name, {})
+                if "cross" not in entry:
+                    return cr
+                host_k, host_v = entry["cross"]
+                return cr._replace(
+                    k=cr.k.at[:, slot:slot + 1].set(jnp.asarray(host_k)),
+                    v=cr.v.at[:, slot:slot + 1].set(jnp.asarray(host_v)))
+
+            self._update_slot_state(ssm=restore_ssm, cross=restore_cross)
+        if self.cfg.is_encdec:
+            self.cache["src_lengths"] = \
+                self.cache["src_lengths"].at[slot].set(req.frames.shape[0])
         restored = max(req.swap_tokens - s * self.block_size, 0)
+        if req.swap_state:
+            restored += self.state_swap_tokens
         req.wasted_tokens += restored
         self.stats["wasted_tokens"] += restored
         self.cache["lengths"] = self.cache["lengths"].at[slot].set(
@@ -496,6 +730,7 @@ class ServingEngine:
         self.pending_tok[slot] = req.swap_pending
         req.cached_tokens = req.swap_tokens
         req.swap_kv = None
+        req.swap_state = None
         req.swap_tokens = 0
         self.stats["swap_ins"] += 1
         # the restored prompt blocks can serve later same-prompt requests
@@ -521,20 +756,29 @@ class ServingEngine:
         """One fused decode step over `decode_slots`.  Mid-prefill slots
         are masked to the trash block for the duration: the batch-wide KV
         scatter writes one row per slot, and a garbage row must never
-        land in a real (possibly shared) block."""
+        land in a real (possibly shared) block.  Their SSM state rows get
+        the same treatment by write-back — the fused recurrence advances
+        every batch row, and a mid-prefill slot's h/conv must not absorb
+        a garbage decode token between its chunks."""
         masked = [i for i, r in enumerate(self.slot_req)
                   if r is not None and i not in decode_slots]
-        if masked:
+        if masked and self.has_paged_kv:
             saved = self.cache["block_tables"]
             self.cache["block_tables"] = saved.at[jnp.asarray(masked)].set(-1)
+        old_slots = self.cache["slots"]
         toks = jnp.asarray(self.pending_tok)
         logits, self.cache, _ = decode_step(
             self.params, toks, self.cache, self.cfg, self.precision,
             use_kernel=self.use_kernel)
         if masked:
             idx = jnp.asarray(masked)
-            self.cache["block_tables"] = \
-                self.cache["block_tables"].at[idx].set(saved[idx])
+            if self.has_paged_kv:
+                self.cache["block_tables"] = \
+                    self.cache["block_tables"].at[idx].set(saved[idx])
+            self._update_slot_state(
+                ssm=lambda name, st: jax.tree.map(
+                    lambda new, old: new.at[:, idx].set(old[:, idx]),
+                    st, old_slots[name]["ssm"]))
         self.key, k = jax.random.split(self.key)
         next_toks = np.asarray(
             sample(logits, k, self.temperature, want_logp=False)[0])

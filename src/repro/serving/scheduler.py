@@ -174,7 +174,9 @@ def _victim_lru(eng, slots: List[int]) -> int:
 def _victim_private_blocks(eng, slots: List[int]) -> int:
     """Most refcount-1 blocks = most pool actually reclaimed.  Evicting a
     heavy sharer frees nothing the group still reads; ties fall back to
-    youngest."""
+    youngest.  (Every victim additionally frees its `state_blocks` of
+    constant slot state — a uniform offset within one model, so it
+    cancels in the comparison but is priced in the budget accounting.)"""
     def private(i):
         mgr = eng.block_mgr
         return sum(1 for b in mgr.blocks_of(eng.slot_req[i].rid)
@@ -229,9 +231,12 @@ class Scheduler:
         # `cached_tokens` is the host-authoritative count of valid KV rows
         # (kept in lockstep by engine.execute); for a slot admitted earlier
         # THIS step it already covers exactly the rows whose content is
-        # valid at the swap-out action's place in the execution order
+        # valid at the swap-out action's place in the execution order.
+        # Non-KV slot state (SSM h/conv, cross KV) moves over the host
+        # link too — priced in block-equivalent token units alongside the
+        # KV rows, so evicting a hybrid/enc-dec slot is never free.
         decision.actions.append(SwapOut(slot, req, ids, req.cached_tokens))
-        decision.swap_tokens += req.cached_tokens
+        decision.swap_tokens += req.cached_tokens + eng.state_swap_tokens
         # claim the swap state NOW: a re-admission later in this same plan
         # must see the request as swapped (not fresh), or it would schedule
         # a full re-prefill and throw away its generated tokens.  Only the
@@ -262,20 +267,26 @@ class Scheduler:
             # evictor-cached hits are revived (refcount 0 -> 1): they leave
             # the reclaimable pool exactly like a fresh allocation would
             revive = sum(1 for b in shared if eng.block_mgr.refcount(b) == 0)
+            # the request's constant slot state (SSM h/conv, cross KV)
+            # counts against the byte budget like `state_blocks` more
+            # fresh blocks — an enc-dec/hybrid model must not over-admit
+            # on its per-token KV cost alone
             if self.budget.new_blocks is not None and \
-                    fresh_blocks[0] + need > self.budget.new_blocks and \
-                    fresh_blocks[0] > 0:
+                    fresh_blocks[0] + need + eng.state_blocks > \
+                    self.budget.new_blocks and fresh_blocks[0] > 0:
                 return              # block budget spent: admit next step
             if not eng.block_mgr.can_allocate(
-                    need + revive, limit_blocks=eng._effective_blocks):
+                    need + revive,
+                    limit_blocks=eng._effective_blocks - eng.state_blocks):
                 return              # capacity-bound: stay queued
             eng.queue.pop(0)
-            fresh_blocks[0] += need
+            fresh_blocks[0] += need + eng.state_blocks
             if shared:
                 eng.block_mgr.acquire(req.rid, shared)
                 eng.stats["prefix_hits"] += len(shared)
-            eng.block_mgr.allocate(req.rid, need,
-                                   limit_blocks=eng._effective_blocks)
+            eng.block_mgr.allocate(
+                req.rid, need,
+                limit_blocks=eng._effective_blocks - eng.state_blocks)
             ids = eng.block_mgr.blocks_of(req.rid)
             swap_in = req.swap_kv is not None
             if not swap_in:
@@ -291,11 +302,13 @@ class Scheduler:
                 req.cached_tokens = skip
             else:
                 req.cached_tokens = req.swap_tokens
-                # restore traffic: rows beyond the re-deduped shared head
+                # restore traffic: rows beyond the re-deduped shared head,
+                # plus the slot state coming back from host
                 s = min(len(shared),
                         eng.block_mgr.blocks_for_tokens(req.swap_tokens))
                 decision.swap_tokens += max(
-                    req.swap_tokens - s * eng.block_size, 0)
+                    req.swap_tokens - s * eng.block_size, 0) + \
+                    eng.state_swap_tokens
             req.last_used = self._tick
             eng.slot_req[slot] = req
             if self.prefill_chunk is None:
@@ -316,6 +329,7 @@ class Scheduler:
     def _plan_prefills(self, eng, decision: ScheduleDecision,
                        planned: Dict[int, Prefill]):
         cap = self.budget.prefill_tokens
+        calib_planned = False
         for slot, req in enumerate(eng.slot_req):
             if req is None or slot in planned:
                 continue
@@ -324,6 +338,21 @@ class Scheduler:
                 continue
             if self.prefill_chunk is None:
                 start, end, width, oneshot = 0, p, eng.prompt_pad, True
+            elif req.prefilled == 0 and not calib_planned and \
+                    eng._needs_kv_calibration:
+                # KV-scale calibration: the first quantized prefill's amax
+                # window must cover the WHOLE first prompt (and match the
+                # one-shot window exactly for prompts both modes serve) —
+                # per-chunk windows would lock scales from the first
+                # chunk's amax alone, and a running amax across chunks
+                # cannot help because earlier chunks' pool bytes are
+                # already quantized at the provisional scale.  So the
+                # calibrating prefill runs as ONE full-width chunk; later-
+                # ordered chunks this step execute with scales locked.
+                start, end, oneshot = 0, p, False
+                width = max(eng.prompt_pad,
+                            -(-p // self.prefill_chunk) * self.prefill_chunk)
+                calib_planned = True
             else:
                 start = req.prefilled
                 end = min(start + self.prefill_chunk, p)
@@ -350,6 +379,8 @@ class Scheduler:
         """ondemand mode: every decode-ready slot needs the next token's KV
         row mapped; allocate on block boundaries, evicting by policy when
         the pool is exhausted."""
+        if eng.cfg.attention_free:
+            return                  # no per-token KV rows to map
         for slot in sorted(self._decode_ready(eng),
                            key=lambda i: eng.slot_req[i].rid):
             req = eng.slot_req[slot]

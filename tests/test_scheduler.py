@@ -1,8 +1,9 @@
 """Continuous-batching scheduler tests: chunked prefill, eviction-policy
 registry, decision cost accounting, the paged-kernel decode path, and a
-hypothesis property over random arrival/length/policy traces asserting the
-scheduler invariants (no request lost or duplicated, the block budget is
-never exceeded, completed tokens are bit-exact vs a no-preemption oracle).
+hypothesis property over random arrival/length/policy/layer-pattern traces
+(pure attention and attn+ssm hybrid) asserting the scheduler invariants
+(no request lost or duplicated, the block budget is never exceeded,
+completed tokens are bit-exact vs a no-preemption oracle).
 """
 import jax
 import jax.numpy as jnp
@@ -19,6 +20,7 @@ from repro.serving import (
     ServingEngine,
     StepBudget,
     kv_bytes_per_token,
+    request_state_bytes,
 )
 
 jax.config.update("jax_platform_name", "cpu")
@@ -31,10 +33,7 @@ def setup():
     return cfg, params
 
 
-def _prompt(rng_seed, length):
-    rng = np.random.default_rng(rng_seed)
-    return np.concatenate(
-        [[tasks.BOS], rng.integers(4, 19, size=length - 1)]).astype(np.int32)
+_prompt = tasks.random_prompt
 
 
 # ---------------------------------------------------------------------------
@@ -61,24 +60,34 @@ def test_long_prompt_serves_via_chunked_prefill(setup):
     assert eng.block_mgr.blocks_in_use == 0
 
 
-def test_chunked_prefill_bit_exact_vs_batch1(setup):
+@pytest.mark.parametrize("precision", [BF16_ROLLOUT, FP8_KV_ONLY_ROLLOUT],
+                         ids=["bf16", "fp8"])
+def test_chunked_prefill_bit_exact_vs_batch1(setup, precision):
     """For prompts both admission modes can serve, chunked prefill must
-    decode the exact same tokens as the one-shot batch-1 path."""
+    decode the exact same tokens as the one-shot batch-1 path.
+
+    This now holds with QUANTIZED KV too (the PR 3 BF16-only caveat is
+    gone): the scheduler serves the calibrating prefill as one full-width
+    chunk, so the KV-scale amax window — and therefore every quantized
+    byte — matches the one-shot path exactly."""
     cfg, params = setup
     prompts = [_prompt(s, int(5 + s % 9)) for s in range(6)]
     outs = {}
+    scales = {}
     for mode, kw in (("batch1", {}),
                      ("chunked", dict(prefill_chunk=4,
                                       step_budget=StepBudget(
                                           prefill_tokens=8)))):
-        eng = ServingEngine(params, cfg, BF16_ROLLOUT, max_slots=4,
+        eng = ServingEngine(params, cfg, precision, max_slots=4,
                             max_seq_len=32, **kw)
         for i, p in enumerate(prompts):
             eng.submit(p, max_new=6, rid=i)
         rep = eng.run(max_steps=300)
         assert len(rep.completed) == len(prompts)
         outs[mode] = {r.rid: list(r.generated) for r in rep.completed}
+        scales[mode] = np.asarray(eng.cache["slots"]["s0"]["kv"].k_scale)
     assert outs["chunked"] == outs["batch1"]
+    np.testing.assert_array_equal(scales["chunked"], scales["batch1"])
 
 
 def test_chunked_prefill_piggybacks_alongside_decode(setup):
@@ -265,16 +274,16 @@ def test_engine_paged_kernel_decode_end_to_end(setup):
 
 
 # ---------------------------------------------------------------------------
-# hypothesis property: random arrival/length/policy traces
+# hypothesis property: random arrival/length/policy/layer-pattern traces
 # ---------------------------------------------------------------------------
 
 _ORACLE_CACHE = {}
 
 
-def _oracle_tokens(cfg, params, prompt, max_new):
+def _oracle_tokens(pattern, cfg, params, prompt, max_new):
     """No-preemption single-request reference run (greedy decode depends
     only on the prompt, so this is the bit-exact ground truth)."""
-    key = (prompt.tobytes(), max_new)
+    key = (pattern, prompt.tobytes(), max_new)
     if key not in _ORACLE_CACHE:
         eng = ServingEngine(params, cfg, BF16_ROLLOUT, max_slots=1,
                             max_seq_len=32)
@@ -285,10 +294,20 @@ def _oracle_tokens(cfg, params, prompt, max_new):
     return _ORACLE_CACHE[key]
 
 
-def test_scheduler_invariants_random_traces(setup):
+@pytest.fixture(scope="module")
+def zoo(setup):
+    """Layer patterns the trace property draws from: pure attention and a
+    jamba-style attn+ssm hybrid (whose per-slot recurrent state must also
+    survive random preemption)."""
+    from repro.configs import tiny_hybrid_serving_config
+    hyb = tiny_hybrid_serving_config()
+    return {"attn": setup,
+            "hybrid": (hyb, init_params(hyb, jax.random.key(0)))}
+
+
+def test_scheduler_invariants_random_traces(zoo):
     hyp = pytest.importorskip("hypothesis")
     st = hyp.strategies
-    cfg, params = setup
     canonical = [_prompt(s, 4 + 2 * s) for s in range(4)]   # lens 4..10
 
     @hyp.settings(deadline=None, max_examples=8)
@@ -302,12 +321,18 @@ def test_scheduler_invariants_random_traces(setup):
         admission=st.sampled_from(["reserve", "ondemand"]),
         chunk=st.sampled_from([None, 3]),
         budget_blocks=st.integers(5, 10),
+        pattern=st.sampled_from(["attn", "hybrid"]),
     )
-    def run(reqs, policy, admission, chunk, budget_blocks):
+    def run(reqs, policy, admission, chunk, budget_blocks, pattern):
+        cfg, params = zoo[pattern]
         per = kv_bytes_per_token(cfg, BF16_ROLLOUT)
+        # KV pressure drives the preemptions; the per-slot recurrent
+        # state (hybrid) always fits so admission cannot deadlock
+        budget = per * 4 * budget_blocks + \
+            3 * request_state_bytes(cfg, BF16_ROLLOUT)
         eng = ServingEngine(
             params, cfg, BF16_ROLLOUT, max_slots=3, max_seq_len=32,
-            kv_budget_bytes=per * 4 * budget_blocks, admission=admission,
+            kv_budget_bytes=budget, admission=admission,
             eviction=policy, prefill_chunk=chunk)
         submitted = {}
         by_arrival = sorted(enumerate(reqs), key=lambda kv: kv[1][2])
@@ -337,8 +362,9 @@ def test_scheduler_invariants_random_traces(setup):
         for r in eng.done:
             pi, max_new = submitted[r.rid]
             assert list(r.generated) == _oracle_tokens(
-                cfg, params, canonical[pi], max_new), \
-                f"rid {r.rid} diverged (policy={policy}, chunk={chunk})"
+                pattern, cfg, params, canonical[pi], max_new), \
+                f"rid {r.rid} diverged (policy={policy}, chunk={chunk}, " \
+                f"pattern={pattern})"
         assert eng.block_mgr.blocks_in_use == 0
 
     run()

@@ -18,6 +18,7 @@ MODULES = [
     ("kv_capacity", "§2.3.2 fp8-KV capacity/preemption (serving engine)"),
     ("prefix_sharing", "GRPO prefix-block sharing (refcount + CoW)"),
     ("continuous_batching", "Scheduler: chunked-prefill TTFT + eviction"),
+    ("kernel_hotpath", "Pallas hot path: trace parity + bytes-moved gate"),
     ("hybrid_serving", "SSM/enc-dec swap-resume + fp8 hybrid capacity"),
     ("weight_sync", "§2.1.2 weight-sync cost + quant error"),
     ("router_precision", "Fig 6 router precision mismatch-KL"),

@@ -8,14 +8,18 @@ fp8_kv_attention  — FlashDecoding over an fp8 KV cache
 pure-jnp oracles the kernels are validated against.
 """
 from repro.kernels import ops, ref
+from repro.kernels.config import KernelConfig
 from repro.kernels.ops import (
     fp8_decode_attention,
     fp8_matmul,
+    fp8_paged_decode_attention,
+    fp8_paged_prefill_attention,
     quantize_activation,
     quantize_weight,
 )
 
 __all__ = [
-    "ops", "ref", "fp8_decode_attention", "fp8_matmul",
+    "ops", "ref", "KernelConfig", "fp8_decode_attention", "fp8_matmul",
+    "fp8_paged_decode_attention", "fp8_paged_prefill_attention",
     "quantize_activation", "quantize_weight",
 ]

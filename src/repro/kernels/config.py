@@ -1,0 +1,50 @@
+"""Kernel routing configuration for the serving hot path.
+
+One small frozen config decides which attention hot paths run through the
+Pallas kernels instead of the jnp fallbacks.  It is threaded as a single
+object from `ServingEngine(kernel_config=...)` through the scheduler's
+executed actions into `models.prefill_chunk` / `models.decode_step`, so
+"which mechanism serves this step" is decided in exactly one place.
+
+Accepted spellings (string shorthands map onto the dataclass):
+
+    "off"      — jnp table-gather everywhere (the debugging baseline)
+    "decode"   — fp8_paged_decode_attention for the fused decode step
+    "prefill"  — fp8_paged_prefill_attention for chunked-prefill chunks
+    "all"      — both (the production configuration)
+
+On CPU the kernels run interpret-mode (see `ops._interpret`); on TPU they
+compile natively.  Either way the numerics contract is the repo-wide one:
+per-step allclose + argmax agreement with the jnp paths, never token
+equality across precisions.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelConfig:
+    prefill: bool = False   # chunked-prefill attention through the kernel
+    decode: bool = False    # fused decode attention through the kernel
+
+    @classmethod
+    def parse(cls, spec) -> "KernelConfig":
+        """Accept a KernelConfig or one of the string shorthands."""
+        if isinstance(spec, KernelConfig):
+            return spec
+        table = {
+            "off": cls(),
+            "decode": cls(decode=True),
+            "prefill": cls(prefill=True),
+            "all": cls(prefill=True, decode=True),
+        }
+        if spec not in table:
+            raise ValueError(
+                f"unknown kernel_config {spec!r}; expected a KernelConfig "
+                f"or one of {sorted(table)}")
+        return table[spec]
+
+    @property
+    def any(self) -> bool:
+        return self.prefill or self.decode

@@ -1,25 +1,61 @@
-"""Pallas TPU kernel: decode attention over an FP8 KV cache.
+"""Pallas TPU kernels: serving attention over an FP8 KV cache.
 
 Paper §2.3: fp8 KV storage with per-step recalibrated scales removes the
-long-context memory bottleneck.  On TPU the decode step is purely
-HBM-bandwidth bound — each generated token must stream the whole KV cache
-through VMEM — so storing KV as fp8 halves the dominant traffic term.
+long-context memory bottleneck.  On TPU the generation step is purely
+HBM-bandwidth bound — each token must stream the reachable KV through
+VMEM — so storing KV as fp8 halves the dominant traffic term, and the
+kernels below make that traffic the *only* traffic: no gathered
+contiguous copy, no dequantized bf16 intermediate ever lands in HBM.
 
-This is a FlashDecoding-style kernel specialized to the RL rollout decode
-shape (one new query token per sequence):
+Three kernels, one memory-layout contract:
 
-  q        (B, KVH, G, D)  bf16   G = query heads per KV head (GQA)
-  k_cache  (B, S, KVH, D)  fp8    + k_scale (per-layer scalar, recalibrated
-  v_cache  (B, S, KVH, D)  fp8      every RL step; paper fig 7)
-  lengths  (B, 1) int32            current sequence lengths (mask limit)
-  out      (B, KVH, G, D)  bf16
+`fp8_decode_attention` — FlashDecoding over a *contiguous* (B, S, KVH, D)
+    cache (the identity-table RL rollout shape).  Grid (B, KVH, S/BS);
+    the S axis is innermost so the online-softmax state (m, l, acc) for
+    one (batch, kv-head) stays in VMEM scratch across S blocks.
 
-Grid (B, KVH, S/BS); the S axis is innermost so the online-softmax state
-(m, l, acc) for one (batch, kv-head) stays in VMEM scratch across S blocks.
+`fp8_paged_decode_attention` — PagedAttention decode over a block *pool*
+    (N+1, BS, KVH, D) addressed through per-slot tables (vLLM layout).
+    The tables ride in as a scalar-prefetch operand together with the
+    per-slot live-block counts `nb[i] = ceil(context_len[i] / BS)`, so
+    the K/V BlockSpec index_maps translate (slot, logical block w) ->
+    physical pool row *clamped to the live region*:
 
-VMEM at BS=512, D=128, G=8: k/v tiles 512*128*1B = 64KiB each, acc 8*128*4B,
-q 8*128*2B — far below budget; larger BS amortizes grid overhead and is the
-hillclimb knob (§Perf).
+        row = tbl[i, min(w, nb[i] - 1)]
+
+    Grid (B, KVH, W) with W a static table-width bound — but iterations
+    past a slot's live region map to the same pool row as the last live
+    block, which the TPU pipeline recognizes (an unchanged block index
+    issues no new DMA), and their compute is skipped with `pl.when`.
+    Decode cost therefore scales with each slot's actual context, not
+    `max_seq_len`; one kernel launch serves the whole fused
+    continuous-batching decode step, ragged tails masked by `lengths`.
+    Table entries at or past `nb[i]` are NEVER used as indices — stale
+    or trash ids beyond the live region are provably unread.
+
+`fp8_paged_prefill_attention` — flash-style chunked-prefill attention:
+    for a prefill chunk of width C at positions [start, start+C), the
+    queries attend over everything reachable so far — the KV of earlier
+    chunks is read *directly from the paged pool* through the same
+    clamped scalar-prefetch translation (the chunk's own KV was
+    scattered into the pool just before, so intra-chunk attention also
+    reads pool bytes, exactly like the jnp gather path it replaces).
+    Grid (B, KVH, W); q block (1, C, 1, G, D) flattens to (C*G, D)
+    rows; causal masking is by absolute position (k_pos <= start + c),
+    and rows past `lengths` (ragged final chunk) attend to nothing.
+
+Scale-handling contract (all three): K/V payloads are E4M3 (or bf16,
+where dequant degenerates to a multiply by 1) with ONE pool-global f32
+scale per layer for K and one for V — the serving engine calibrates
+them at the first prefill and every block quantizes against the same
+globals, so the kernels dequantize in VMEM with a single scalar each
+(`k * k_scale`), never materializing a bf16 copy in HBM.
+
+VMEM at BS=512, D=128, G=8: k/v tiles 512*128*1B = 64KiB each, acc
+8*128*4B, q 8*128*2B — far below budget; larger BS amortizes grid
+overhead and is the hillclimb knob (§Perf).  The serving configs run
+these interpret-mode on CPU; compiled-TPU tile-alignment (C*G and D to
+the (8, 128) MXU tile) is the recorded ROADMAP follow-up.
 """
 from __future__ import annotations
 
@@ -32,6 +68,43 @@ from jax.experimental.pallas import tpu as pltpu
 
 DEFAULT_BS = 512
 _NEG_INF = -1e30
+
+
+def _deq(tile, scale):
+    """Dequantize an fp8 K/V tile in VMEM at bf16 operand precision (the
+    MXU's input width, and what the jnp fallback's dequantize-to-bf16
+    computes with), returned as f32 for the f32-accumulating matmuls."""
+    return (tile.astype(jnp.float32) * scale).astype(jnp.bfloat16) \
+        .astype(jnp.float32)
+
+
+def _clamped_kv_map(i, h, w, tbl, nb):
+    """Shared K/V index map of both paged kernels — THE clamping contract:
+    grid steps past slot i's live region re-map to its last live pool row
+    (an unchanged block index issues no new DMA on TPU), so table entries
+    at or past nb[i] are never used as indices."""
+    return (tbl[i, jnp.minimum(w, nb[i] - 1)], 0, h, 0)
+
+
+def _flash_update(q, k, v, valid, sm_scale, m_ref, l_ref, acc_ref):
+    """One online-softmax accumulator update over a K/V tile, shared by
+    the paged decode and prefill kernels (they differ only in how q and
+    the validity mask are built)."""
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * sm_scale                                              # (rows, BS)
+    scores = jnp.where(valid, scores, _NEG_INF)
+    m_prev = m_ref[...]
+    m_cur = jnp.max(scores, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new)
+    p = jnp.where(valid, p, 0.0)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
 
 
 def _decode_attn_kernel(
@@ -142,18 +215,29 @@ def fp8_decode_attention(
 
 
 # ---------------------------------------------------------------------------
-# Paged variant: KV lives in a block pool, indexed through per-sequence
-# block tables (vLLM PagedAttention).  The tables ride in as a
-# scalar-prefetch operand so the K/V BlockSpec index_maps can translate
-# (sequence, logical block) -> physical pool row before each DMA — the
-# gather never materializes a contiguous per-sequence copy in HBM.
+# Paged decode: KV lives in a block pool, indexed through per-sequence
+# block tables (vLLM PagedAttention).  Tables AND per-slot live-block
+# counts ride in as scalar-prefetch operands so the K/V BlockSpec
+# index_maps translate (sequence, logical block) -> physical pool row,
+# clamped to each slot's live region, before each DMA — the gather never
+# materializes a contiguous per-sequence copy in HBM and dead table
+# entries are never dereferenced.
 # ---------------------------------------------------------------------------
+
+
+def _live_block_counts(lengths: jax.Array, bs: int, n_w: int) -> jax.Array:
+    """nb[i] = clip(ceil(lengths[i] / bs), 1, n_w) — the number of leading
+    table entries holding live context (>= 1 so the clamped index map
+    `tbl[i, min(w, nb-1)]` is always in range, even for idle slots)."""
+    nb = (lengths.astype(jnp.int32) + bs - 1) // bs
+    return jnp.clip(nb, 1, n_w)
 
 
 def _paged_decode_attn_kernel(
     tbl_ref,      # scalar-prefetch (B, W) int32 physical block ids
+    nb_ref,       # scalar-prefetch (B,) int32 live block counts
     q_ref,        # (1, 1, G, D)
-    k_ref,        # (1, BS, 1, D) fp8 — pool row tbl[b, w]
+    k_ref,        # (1, BS, 1, D) fp8 — pool row tbl[b, min(w, nb-1)]
     v_ref,        # (1, BS, 1, D) fp8
     ks_ref,       # (1, 1) f32
     vs_ref,       # (1, 1) f32
@@ -167,6 +251,7 @@ def _paged_decode_attn_kernel(
     n_w: int,
     sm_scale: float,
 ):
+    i = pl.program_id(0)
     w = pl.program_id(2)
 
     @pl.when(w == 0)
@@ -175,31 +260,19 @@ def _paged_decode_attn_kernel(
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[0, 0].astype(jnp.float32)                       # (G, D)
-    k = k_ref[0, :, 0, :].astype(jnp.float32) * ks_ref[0, 0]  # (BS, D)
-    v = v_ref[0, :, 0, :].astype(jnp.float32) * vs_ref[0, 0]  # (BS, D)
-
-    scores = jax.lax.dot_general(
-        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-    ) * sm_scale                                              # (G, BS)
-
-    # logical position of this block's tokens = w * bs + offset; trash-block
-    # reads (unmapped table entries) sit past `lengths` and mask to -inf
-    pos = w * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
-    valid = pos < len_ref[0, 0]
-    scores = jnp.where(valid, scores, _NEG_INF)
-
-    m_prev = m_ref[...]
-    m_cur = jnp.max(scores, axis=1, keepdims=True)
-    m_new = jnp.maximum(m_prev, m_cur)
-    alpha = jnp.exp(m_prev - m_new)
-    p = jnp.exp(scores - m_new)
-    p = jnp.where(valid, p, 0.0)
-    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
-    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
-        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
-    )
-    m_ref[...] = m_new
+    # Grid steps past this slot's live region re-map to the last live pool
+    # row (no fresh DMA) and contribute nothing: skip their compute.
+    @pl.when(w < nb_ref[i])
+    def _update():
+        q = q_ref[0, 0].astype(jnp.float32)                       # (G, D)
+        k = _deq(k_ref[0, :, 0, :], ks_ref[0, 0])                 # (BS, D)
+        v = _deq(v_ref[0, :, 0, :], vs_ref[0, 0])                 # (BS, D)
+        # logical position of this block's tokens = w * bs + offset; the
+        # ragged tail of the last live block sits past `lengths` and
+        # masks to -inf
+        pos = w * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+        valid = pos < len_ref[0, 0]
+        _flash_update(q, k, v, valid, sm_scale, m_ref, l_ref, acc_ref)
 
     @pl.when(w == n_w - 1)
     def _done():
@@ -215,8 +288,8 @@ def fp8_paged_decode_attention(
     v_pool: jax.Array,        # (N, BS, KVH, D)
     k_scale: jax.Array,       # () or (1,) f32
     v_scale: jax.Array,       # () or (1,) f32
-    block_tables: jax.Array,  # (B, W) int32 PHYSICAL pool rows (pre-mapped:
-                              # unmapped entries must point at a zero block)
+    block_tables: jax.Array,  # (B, W) int32 PHYSICAL pool rows; entries at
+                              # or past ceil(lengths/BS) are never read
     lengths: jax.Array,       # (B,) int32
     *,
     sm_scale: float | None = None,
@@ -235,21 +308,21 @@ def fp8_paged_decode_attention(
     ks = jnp.asarray(k_scale, jnp.float32).reshape(1, 1)
     vs = jnp.asarray(v_scale, jnp.float32).reshape(1, 1)
     lengths2 = lengths.astype(jnp.int32).reshape(b, 1)
+    nb = _live_block_counts(lengths, bs, n_w)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2,
         grid=(b, kvh, n_w),
         in_specs=[
-            pl.BlockSpec((1, 1, g, d), lambda i, h, w, tbl: (i, h, 0, 0)),
-            pl.BlockSpec((1, bs, 1, d),
-                         lambda i, h, w, tbl: (tbl[i, w], 0, h, 0)),
-            pl.BlockSpec((1, bs, 1, d),
-                         lambda i, h, w, tbl: (tbl[i, w], 0, h, 0)),
-            pl.BlockSpec((1, 1), lambda i, h, w, tbl: (0, 0)),
-            pl.BlockSpec((1, 1), lambda i, h, w, tbl: (0, 0)),
-            pl.BlockSpec((1, 1), lambda i, h, w, tbl: (i, 0)),
+            pl.BlockSpec((1, 1, g, d), lambda i, h, w, tbl, nb: (i, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, d), _clamped_kv_map),
+            pl.BlockSpec((1, bs, 1, d), _clamped_kv_map),
+            pl.BlockSpec((1, 1), lambda i, h, w, tbl, nb: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, h, w, tbl, nb: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, h, w, tbl, nb: (i, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, g, d), lambda i, h, w, tbl: (i, h, 0, 0)),
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda i, h, w, tbl, nb: (i, h, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((g, 1), jnp.float32),
             pltpu.VMEM((g, 1), jnp.float32),
@@ -262,4 +335,129 @@ def fp8_paged_decode_attention(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, kvh, g, d), q.dtype),
         interpret=interpret,
-    )(block_tables.astype(jnp.int32), q, k_pool, v_pool, ks, vs, lengths2)
+    )(block_tables.astype(jnp.int32), nb, q, k_pool, v_pool, ks, vs, lengths2)
+
+
+# ---------------------------------------------------------------------------
+# Paged chunked-prefill: a C-token prompt chunk attends over everything
+# reachable so far, reading prior-context (and its own, just-scattered)
+# K/V straight from the pool through the clamped scalar-prefetch
+# translation — the jnp path's gathered contiguous copy never exists.
+# ---------------------------------------------------------------------------
+
+
+def _paged_prefill_attn_kernel(
+    tbl_ref,      # scalar-prefetch (B, W) int32 physical block ids
+    nb_ref,       # scalar-prefetch (B,) int32 live block counts
+    q_ref,        # (1, C, 1, G, D)
+    k_ref,        # (1, BS, 1, D) fp8 — pool row tbl[b, min(w, nb-1)]
+    v_ref,        # (1, BS, 1, D) fp8
+    ks_ref,       # (1, 1) f32
+    vs_ref,       # (1, 1) f32
+    start_ref,    # (1, 1) int32 chunk start position
+    len_ref,      # (1, 1) int32 total valid tokens after the chunk
+    o_ref,        # (1, C, 1, G, D)
+    m_ref,        # scratch (C*G, 1) f32
+    l_ref,        # scratch (C*G, 1) f32
+    acc_ref,      # scratch (C*G, D) f32
+    *,
+    bs: int,
+    n_w: int,
+    c: int,
+    g: int,
+    sm_scale: float,
+):
+    i = pl.program_id(0)
+    w = pl.program_id(2)
+
+    @pl.when(w == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(w < nb_ref[i])
+    def _update():
+        d = acc_ref.shape[-1]
+        q = q_ref[0, :, 0, :, :].astype(jnp.float32).reshape(c * g, d)
+        k = _deq(k_ref[0, :, 0, :], ks_ref[0, 0])                 # (BS, D)
+        v = _deq(v_ref[0, :, 0, :], vs_ref[0, 0])
+        # row r of the flattened (C*G) query block is chunk position r//G;
+        # causal masking is by ABSOLUTE position (earlier chunks included),
+        # and rows past `lengths` (ragged final chunk) attend to nothing
+        q_pos = start_ref[0, 0] + \
+            jax.lax.broadcasted_iota(jnp.int32, (c * g, bs), 0) // g
+        k_pos = w * bs + jax.lax.broadcasted_iota(jnp.int32, (c * g, bs), 1)
+        valid = jnp.logical_and(k_pos <= q_pos, q_pos < len_ref[0, 0])
+        _flash_update(q, k, v, valid, sm_scale, m_ref, l_ref, acc_ref)
+
+    @pl.when(w == n_w - 1)
+    def _done():
+        d = acc_ref.shape[-1]
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)    # (C*G, D)
+        o_ref[0, :, 0, :, :] = out.reshape(c, g, d).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("sm_scale", "interpret"))
+def fp8_paged_prefill_attention(
+    q: jax.Array,             # (B, C, KVH, G, D) bf16 roped chunk queries
+    k_pool: jax.Array,        # (N, BS, KVH, D) fp8 (or bf16)
+    v_pool: jax.Array,        # (N, BS, KVH, D)
+    k_scale: jax.Array,       # () or (1,) f32
+    v_scale: jax.Array,       # () or (1,) f32
+    block_tables: jax.Array,  # (B, W) int32 PHYSICAL pool rows; entries at
+                              # or past the live region are never read
+    start: jax.Array,         # (B,) int32 chunk start positions
+    lengths: jax.Array,       # (B,) int32 total valid tokens AFTER the chunk
+    *,
+    sm_scale: float | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    b, c, kvh, g, d = q.shape
+    n, bs, kvh2, d2 = k_pool.shape
+    b2, n_w = block_tables.shape
+    assert (kvh, d, b) == (kvh2, d2, b2), (q.shape, k_pool.shape,
+                                           block_tables.shape)
+    if sm_scale is None:
+        sm_scale = 1.0 / (d ** 0.5)
+
+    kernel = functools.partial(_paged_prefill_attn_kernel, bs=bs, n_w=n_w,
+                               c=c, g=g, sm_scale=sm_scale)
+    ks = jnp.asarray(k_scale, jnp.float32).reshape(1, 1)
+    vs = jnp.asarray(v_scale, jnp.float32).reshape(1, 1)
+    start2 = start.astype(jnp.int32).reshape(b, 1)
+    lengths2 = lengths.astype(jnp.int32).reshape(b, 1)
+    # reachable context for the chunk: its last query row sits at position
+    # min(start + C, lengths) - 1, so live blocks cover min(start+C, len)
+    ctx = jnp.minimum(start.astype(jnp.int32) + c, lengths.astype(jnp.int32))
+    nb = _live_block_counts(ctx, bs, n_w)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, kvh, n_w),
+        in_specs=[
+            pl.BlockSpec((1, c, 1, g, d),
+                         lambda i, h, w, tbl, nb: (i, 0, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, d), _clamped_kv_map),
+            pl.BlockSpec((1, bs, 1, d), _clamped_kv_map),
+            pl.BlockSpec((1, 1), lambda i, h, w, tbl, nb: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, h, w, tbl, nb: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, h, w, tbl, nb: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, h, w, tbl, nb: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, c, 1, g, d),
+                               lambda i, h, w, tbl, nb: (i, 0, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((c * g, 1), jnp.float32),
+            pltpu.VMEM((c * g, 1), jnp.float32),
+            pltpu.VMEM((c * g, d), jnp.float32),
+        ],
+    )
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, c, kvh, g, d), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), nb, q, k_pool, v_pool, ks, vs,
+      start2, lengths2)

@@ -102,15 +102,32 @@ def fp8_matmul(x_q: QuantizedTensor, w_q: QuantizedTensor,
 
 def fp8_paged_decode_attention(q, k_pool, v_pool, k_scale, v_scale,
                                block_tables, lengths):
-    """PagedAttention decode over an fp8 block pool.
+    """PagedAttention decode over an fp8 block pool, length-clamped.
 
     `block_tables` must already hold *physical* pool rows (the models layer
-    maps unmapped -1 entries to the trash block before calling in).  The
-    pool's block size is the kernel's S tile, so no padding is needed —
-    blocks are tile-sized by construction.
+    maps unmapped -1 entries to the trash block before calling in); entries
+    at or past each slot's `ceil(lengths / block_size)` live blocks are
+    never dereferenced.  The pool's block size is the kernel's S tile, so
+    no padding is needed — blocks are tile-sized by construction.
     """
     return _attn.fp8_paged_decode_attention(
         q, k_pool, v_pool, k_scale, v_scale, block_tables, lengths,
+        interpret=_interpret())
+
+
+def fp8_paged_prefill_attention(q, k_pool, v_pool, k_scale, v_scale,
+                                block_tables, start, lengths):
+    """Chunked-prefill attention over an fp8 block pool.
+
+    q (B, C, KVH, G, D) are the chunk's roped queries at absolute
+    positions [start, start+C); the chunk's own K/V must already be
+    scattered into the pool (the kernel reads intra-chunk context from
+    pool bytes, exactly like the jnp gather path).  Same physical-table
+    contract as the paged decode kernel; entries past the reachable
+    context `ceil(min(start+C, lengths) / block_size)` are never read.
+    """
+    return _attn.fp8_paged_prefill_attention(
+        q, k_pool, v_pool, k_scale, v_scale, block_tables, start, lengths,
         interpret=_interpret())
 
 

@@ -98,3 +98,36 @@ def fp8_paged_decode_attention_ref(q, k_pool, v_pool, k_scale, v_scale,
     v_cache = v_pool[block_tables].reshape(b, w * bs, kvh, d)
     return fp8_decode_attention_ref(q, k_cache, v_cache, k_scale, v_scale,
                                     lengths, sm_scale=sm_scale)
+
+
+def fp8_paged_prefill_attention_ref(q, k_pool, v_pool, k_scale, v_scale,
+                                    block_tables, start, lengths,
+                                    sm_scale=None):
+    """Paged chunked-prefill attention oracle.
+
+    q (B,C,KVH,G,D) roped chunk queries at absolute positions
+    [start, start+C); pools (N,BS,KVH,D); block_tables (B,W) physical
+    rows.  Causal masking by absolute position; ragged rows at or past
+    `lengths` attend to nothing and output exact zeros (matching the
+    kernel — the caller never reads them).
+    """
+    b, c, kvh, g, d = q.shape
+    w, bs = block_tables.shape[1], k_pool.shape[1]
+    if sm_scale is None:
+        sm_scale = 1.0 / (d ** 0.5)
+    kf = k_pool[block_tables].reshape(b, w * bs, kvh, d).astype(jnp.float32) \
+        * jnp.asarray(k_scale, jnp.float32)
+    vf = v_pool[block_tables].reshape(b, w * bs, kvh, d).astype(jnp.float32) \
+        * jnp.asarray(v_scale, jnp.float32)
+    qf = q.astype(jnp.float32)
+    scores = jnp.einsum("bchgd,bshd->bhgcs", qf, kf) * sm_scale
+    q_pos = start[:, None] + jnp.arange(c)[None, :]               # (B, C)
+    k_pos = jnp.arange(w * bs)[None, None, :]                     # (1, 1, S')
+    valid = jnp.logical_and(k_pos <= q_pos[:, :, None],
+                            q_pos[:, :, None] < lengths[:, None, None])
+    mask = valid[:, None, None, :, :]                             # (B,1,1,C,S')
+    scores = jnp.where(mask, scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    p = jnp.where(mask.any(axis=-1, keepdims=True), p, 0.0)       # dead rows
+    out = jnp.einsum("bhgcs,bshd->bchgd", p, vf)
+    return out.astype(q.dtype)

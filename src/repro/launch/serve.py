@@ -57,7 +57,14 @@ def main(argv=None):
                     help="max prefill tokens scheduled per engine step")
     ap.add_argument("--decode-kernel", choices=("gather", "paged"),
                     default="gather",
-                    help="paged: Pallas fp8_paged_decode_attention "
+                    help="legacy spelling of --kernel-config decode")
+    ap.add_argument("--kernel-config",
+                    choices=("off", "decode", "prefill", "all"),
+                    default=None,
+                    help="Pallas attention hot path: decode routes the "
+                         "fused decode through fp8_paged_decode_attention, "
+                         "prefill routes chunked-prefill chunks through "
+                         "fp8_paged_prefill_attention, all does both "
                          "(interpret on CPU, compiled on TPU)")
     ap.add_argument("--src-pad", type=int, default=8,
                     help="enc-dec: source-frame capacity per slot "
@@ -73,6 +80,9 @@ def main(argv=None):
     args = ap.parse_args(argv)
     if args.src_pad < 1:
         ap.error("--src-pad must be >= 1 (frames per enc-dec request)")
+    if args.kernel_config is not None and args.decode_kernel != "gather":
+        ap.error("--decode-kernel and --kernel-config are mutually "
+                 "exclusive (use --kernel-config decode)")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -99,6 +109,7 @@ def main(argv=None):
                         prefill_chunk=args.prefill_chunk,
                         step_budget=step_budget,
                         decode_kernel=args.decode_kernel,
+                        kernel_config=args.kernel_config,
                         max_src_len=args.src_pad)
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):

@@ -105,6 +105,18 @@ def _paged_physical(cache: PagedKVCache, block_tables: jax.Array) -> jax.Array:
     return jnp.where(block_tables < 0, trash, block_tables)
 
 
+def _live_blocks(context_lengths, w: int, bs: int) -> int:
+    """Static count of leading table entries that can hold live context:
+    `ceil(max(context_lengths) / bs)` when the lengths are concrete (the
+    serving engine's eager hot loop — decode then stops paying
+    `max_seq_len` bytes per step), the full width `w` under tracing
+    (jit: shapes must stay static, e.g. the rollout while-loop)."""
+    if isinstance(context_lengths, jax.core.Tracer):
+        return w
+    m = int(jnp.max(context_lengths)) if context_lengths.size else 0
+    return max(1, min(w, -(-m // bs)))
+
+
 def paged_write(cache: PagedKVCache, block_tables: jax.Array,
                 positions: jax.Array, valid: jax.Array,
                 kq: jax.Array, vq: jax.Array) -> PagedKVCache:
@@ -438,12 +450,19 @@ def attention_prefill_chunk(
     lengths: jax.Array,          # (B,) total valid tokens AFTER this chunk
     block_tables: jax.Array,     # (B, W)
     use_rope: bool = True,
+    use_kernel: bool = False,
 ):
     """Chunked-prefill attention: write C prompt tokens at positions
-    [start, start+C) through the block table, then attend each of them over
-    everything reachable so far — the KV of earlier chunks is *gathered
-    back from the pool* (the same table-gather decode uses), so a prompt of
-    any length streams through a fixed-width chunk trace.
+    [start, start+C) through the block table, then attend each of them
+    over everything reachable so far.  With `use_kernel` the Pallas
+    `fp8_paged_prefill_attention` reads prior-context K/V directly from
+    the pool via scalar-prefetched block tables (in-kernel dequant with
+    the pool-global scales); the jnp fallback gathers a contiguous copy
+    back from the pool (the same table-gather decode uses), sliced to
+    the live leading blocks so neither path pays `max_seq_len` bytes.
+    Either way a prompt of any length streams through a fixed-width
+    chunk trace, and the pool bytes read are bit-identical to what a
+    one-shot prefill would have written, so the logits agree.
 
     Positions at or past `lengths` (ragged final chunk) scatter to the
     trash block and their outputs are garbage the caller never reads.
@@ -460,22 +479,32 @@ def attention_prefill_chunk(
     valid = positions < lengths[:, None]
     cache = paged_write(cache, block_tables, positions, valid, kq, vq)
 
-    # gather the whole reachable prefix (earlier chunks included) and mask
-    # causally by absolute position — bit-identical bytes to what a
-    # one-shot prefill would have written, so the logits agree
     w, bs = block_tables.shape[1], cache.block_size
-    phys = _paged_physical(cache, block_tables)
-    k_raw = cache.k[phys].reshape(b, w * bs, cache.k.shape[2], cfg.d_head)
-    v_raw = cache.v[phys].reshape(b, w * bs, cache.v.shape[2], cfg.d_head)
-    if cache.quantized:
-        k_all = dequantize_per_tensor(k_raw, cache.k_scale, x.dtype)
-        v_all = dequantize_per_tensor(v_raw, cache.v_scale, x.dtype)
+    kvh, dh = cache.k.shape[2], cfg.d_head
+    # the chunk's last query reaches at most min(start + C, lengths)
+    # context tokens — table entries past that are never live
+    w_live = _live_blocks(jnp.minimum(start + c, lengths), w, bs)
+    phys = _paged_physical(cache, block_tables)[:, :w_live]
+    if use_kernel:
+        from repro.kernels import ops
+        g = cfg.n_heads // kvh
+        out = ops.fp8_paged_prefill_attention(
+            q.reshape(b, c, kvh, g, dh).astype(jnp.bfloat16),
+            cache.k, cache.v, cache.k_scale, cache.v_scale,
+            phys, start, lengths,
+        ).reshape(b, c, cfg.n_heads * dh).astype(x.dtype)
     else:
-        k_all, v_all = k_raw, v_raw
-    k_pos = jnp.arange(w * bs)[None, None, :]                   # (1, 1, S')
-    mask = jnp.logical_and(k_pos <= positions[:, :, None],
-                           k_pos < lengths[:, None, None])      # (B, C, S')
-    out = _sdpa(q, k_all, v_all, mask, precision, cfg)
+        k_raw = cache.k[phys].reshape(b, w_live * bs, kvh, dh)
+        v_raw = cache.v[phys].reshape(b, w_live * bs, kvh, dh)
+        if cache.quantized:
+            k_all = dequantize_per_tensor(k_raw, cache.k_scale, x.dtype)
+            v_all = dequantize_per_tensor(v_raw, cache.v_scale, x.dtype)
+        else:
+            k_all, v_all = k_raw, v_raw
+        k_pos = jnp.arange(w_live * bs)[None, None, :]          # (1, 1, S')
+        mask = jnp.logical_and(k_pos <= positions[:, :, None],
+                               k_pos < lengths[:, None, None])  # (B, C, S')
+        out = _sdpa(q, k_all, v_all, mask, precision, cfg)
     return linear(out, params["wo"], precision=precision), cache
 
 
@@ -553,14 +582,20 @@ def _paged_attention_over_table(
 ):
     """Attend one query token over the K/V reachable through `block_tables`.
 
-    The gathered view is (B, W*BS, KVH, D) in *logical* order — block j of
-    a sequence covers positions [j*BS, (j+1)*BS) — so the standard length
-    mask applies unchanged.  Invalid table entries read the trash block and
-    are masked by `new_lengths`.
+    Only the leading `ceil(max(new_lengths) / BS)` table entries are ever
+    dereferenced (`_live_blocks`) — both paths stop paying `max_seq_len`
+    bytes per decode step, and stale table entries past the live region
+    are provably unread.  The gathered view is (B, W_live*BS, KVH, D) in
+    *logical* order — block j of a sequence covers positions
+    [j*BS, (j+1)*BS) — so the standard length mask applies unchanged.
+    Invalid table entries read the trash block and are masked by
+    `new_lengths`.
     """
     b, _, h, dh = q.shape
     kvh = cache.k.shape[2]
-    phys = _paged_physical(cache, block_tables)                  # (B, W)
+    w, bs = block_tables.shape[1], cache.block_size
+    w_live = _live_blocks(new_lengths, w, bs)
+    phys = _paged_physical(cache, block_tables)[:, :w_live]      # (B, W_live)
     if use_kernel:
         from repro.kernels import ops
         g = h // kvh
@@ -570,14 +605,14 @@ def _paged_attention_over_table(
             new_lengths,
         ).reshape(b, 1, h * dh).astype(x.dtype)
     else:
-        w, bs = block_tables.shape[1], cache.block_size
-        k_raw = cache.k[phys].reshape(b, w * bs, kvh, dh)
-        v_raw = cache.v[phys].reshape(b, w * bs, kvh, dh)
+        k_raw = cache.k[phys].reshape(b, w_live * bs, kvh, dh)
+        v_raw = cache.v[phys].reshape(b, w_live * bs, kvh, dh)
         k_all = dequantize_per_tensor(k_raw, cache.k_scale, x.dtype) \
             if cache.quantized else k_raw
         v_all = dequantize_per_tensor(v_raw, cache.v_scale, x.dtype) \
             if cache.quantized else v_raw
-        mask = (jnp.arange(w * bs)[None] < new_lengths[:, None])[:, None, :]
+        mask = (jnp.arange(w_live * bs)[None] <
+                new_lengths[:, None])[:, None, :]
         out = _sdpa(q, k_all, v_all, mask, precision, cfg)
     return linear(out, params["wo"], precision=precision), cache
 

@@ -92,6 +92,7 @@ def apply_slot_full(
     use_rope=True,
     block_tables=None,             # (B, W) when kv_cache is paged
     chunk_start=None,              # (B,) -> chunked prefill of [start, start+C)
+    use_kernel=False,              # chunk attention through the Pallas kernel
 ):
     """Returns (x, aux_dict, new_kv_cache, new_ssm_state)."""
     aux = {}
@@ -105,7 +106,7 @@ def apply_slot_full(
             h, new_kv = attn_mod.attention_prefill_chunk(
                 xn, p, cfg, kv_cache, precision, start=chunk_start,
                 lengths=lengths, block_tables=block_tables,
-                use_rope=use_rope)
+                use_rope=use_rope, use_kernel=use_kernel)
         elif kv_cache is not None:
             h, new_kv = attn_mod.attention_prefill(
                 xn, p, cfg, kv_cache, precision, lengths=lengths,

@@ -426,15 +426,21 @@ def prefill_chunk(
     cache: dict,
     cfg,
     precision: PrecisionConfig,
+    *,
+    use_kernel: bool = False,
 ):
     """Process one prompt chunk of a *paged* cache (continuous-batching
     chunked prefill): scatter the chunk's KV at positions
     [start, start+chunk_lengths) and return logits at the chunk's last
     valid position.
 
-    Attention gathers earlier chunks back from the pool through the block
-    table, so a prompt of any length streams through one fixed-width (C)
-    trace instead of one fixed-width-`prompt_pad` trace per admission.
+    Attention reads earlier chunks back from the pool through the block
+    table — `use_kernel=True` routes it through the Pallas
+    `fp8_paged_prefill_attention` (scalar-prefetched tables, in-kernel
+    dequant; interpret-mode on CPU, compiled on TPU), otherwise a jnp
+    gather — so a prompt of any length streams through one fixed-width
+    (C) trace instead of one fixed-width-`prompt_pad` trace per
+    admission.
     SSM slots carry their recurrent state chunk-to-chunk (padded positions
     in a ragged final chunk are state no-ops — see `ssm_forward`), so
     hybrid and attention-free models stream through this path too;
@@ -463,6 +469,7 @@ def prefill_chunk(
                 lengths=new_lengths, kv_cache=sc.get("kv"),
                 ssm_state=sc.get("ssm"), want_ssm_state=True,
                 block_tables=block_tables, chunk_start=start,
+                use_kernel=use_kernel,
             )
             nc = {}
             if new_kv is not None:

@@ -7,5 +7,14 @@ from repro.roofline.analysis import (
     collective_bytes,
     model_flops_for_cell,
 )
+from repro.roofline.kv_bytes import (
+    DECODE_MODES,
+    KVGeometry,
+    decode_hbm_bytes,
+    prefill_chunk_hbm_bytes,
+    trace_decode_bytes,
+)
 __all__ = ["analyze", "collective_bytes", "model_flops_for_cell",
-           "RooflineTerms", "PEAK_FLOPS", "HBM_BW", "ICI_BW"]
+           "RooflineTerms", "PEAK_FLOPS", "HBM_BW", "ICI_BW",
+           "KVGeometry", "DECODE_MODES", "decode_hbm_bytes",
+           "prefill_chunk_hbm_bytes", "trace_decode_bytes"]

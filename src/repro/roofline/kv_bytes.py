@@ -1,0 +1,133 @@
+"""Analytic HBM bytes-moved model for the serving attention hot path.
+
+The container is CPU-only, so the paged-kernel perf claim is gated
+*analytically*: serving decode (and chunked-prefill context reads) are
+HBM-bandwidth bound — FLOPs per token are trivial next to streaming the
+reachable KV — so modeled bytes moved divided by `analysis.HBM_BW` IS
+the roofline step-time term, and ratios of bytes between mechanisms are
+ratios of step time on real hardware.
+
+Four decode mechanisms over the same logical KV (all costs are per
+sequence, per decode step, across attention layers; the one-token q/out
+traffic is negligible and excluded):
+
+    paged-clamped   the overhauled Pallas kernel: scalar-prefetched
+                    tables clamped to ceil(context/BS) live blocks, K/V
+                    streamed through VMEM once at payload width.  Cost
+                    scales with the slot's actual context.
+    paged-full      the pre-overhaul kernel: every grid step DMAs a
+                    fresh block, so the whole padded table width is
+                    streamed regardless of context.
+    gather          the jnp fallback (post live-slice fix): pool rows
+                    are gathered into a contiguous copy (payload-width
+                    write + read-back) and, when quantized, dequantized
+                    into a bf16 copy (write + read) before attention
+                    reads it — every materialized intermediate is
+                    counted as one write + one read; XLA fusion may do
+                    better, the kernel needs none of them.
+    contiguous      the non-paged FlashDecoding kernel over a dense
+                    (B, S_max) cache: payload-width stream of the whole
+                    allocated sequence capacity.
+
+Chunked prefill reads the same pool through the same mechanisms; the
+chunk's reachable context is min(start + C, lengths).
+
+`analysis.py` derives the same quantities empirically from compiled-HLO
+`cost_analysis` on the dry-run configs; this module is the closed-form
+counterpart the benchmarks can evaluate per scheduler step on a real
+continuous-batching trace (`benchmarks/kernel_hotpath.py` gates the
+clamped-vs-full ratio; `benchmarks/continuous_batching.py` reports the
+trace's bytes alongside its token-unit clock).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+DECODE_MODES = ("paged-clamped", "paged-full", "gather", "contiguous")
+
+
+@dataclasses.dataclass(frozen=True)
+class KVGeometry:
+    """Shape/byte facts of one serving engine's paged KV layout."""
+
+    n_kv_heads: int
+    d_head: int
+    block_size: int        # tokens per pool block
+    table_width: int       # W table entries per sequence
+    kv_elem_bytes: int     # 1 = fp8 payload, 2 = bf16
+    n_attn_layers: int = 1
+
+    @property
+    def token_payload_bytes(self) -> int:
+        """K+V payload bytes one token occupies in ONE attention layer."""
+        return 2 * self.n_kv_heads * self.d_head * self.kv_elem_bytes
+
+    @property
+    def token_bf16_bytes(self) -> int:
+        """K+V bytes of one token's dequantized bf16 working copy."""
+        return 2 * self.n_kv_heads * self.d_head * 2
+
+    def live_blocks(self, context_len: int) -> int:
+        """ceil(context / BS) clamped to [1, W] — mirrors the kernel's
+        scalar-prefetched `nb` and the jnp fallback's `_live_blocks`."""
+        nb = -(-max(int(context_len), 1) // self.block_size)
+        return max(1, min(self.table_width, nb))
+
+    @classmethod
+    def from_engine(cls, eng) -> "KVGeometry":
+        """A `ServingEngine`'s paged-KV layout (duck-typed — reads only
+        host attributes), so benchmarks evaluate the bytes model on
+        exactly the layout the engine served."""
+        cfg = eng.cfg
+        return cls(
+            n_kv_heads=cfg.n_kv_heads, d_head=cfg.d_head,
+            block_size=eng.block_size,
+            table_width=eng.cache["block_tables"].shape[1]
+            if eng.has_paged_kv else 1,
+            kv_elem_bytes=1 if eng.precision.kv_quantized else 2,
+            n_attn_layers=sum(cfg.is_attn_layer(i)
+                              for i in range(cfg.n_layers)))
+
+
+def decode_hbm_bytes(geo: KVGeometry, context_len: int,
+                     mode: str = "paged-clamped") -> int:
+    """Modeled HBM bytes one sequence's decode step moves for KV reads."""
+    assert mode in DECODE_MODES, (mode, DECODE_MODES)
+    bs = geo.block_size
+    if mode == "paged-clamped":
+        tokens = geo.live_blocks(context_len) * bs
+        per_token = geo.token_payload_bytes
+    elif mode == "paged-full":
+        tokens = geo.table_width * bs
+        per_token = geo.token_payload_bytes
+    elif mode == "contiguous":
+        tokens = geo.table_width * bs      # S_max capacity, dense layout
+        per_token = geo.token_payload_bytes
+    else:                                  # "gather" (live-sliced jnp)
+        tokens = geo.live_blocks(context_len) * bs
+        # pool read + contiguous copy write + copy read, at payload width
+        per_token = 3 * geo.token_payload_bytes
+        if geo.kv_elem_bytes < 2:
+            # quantized pool: the bf16 dequant copy is written once and
+            # read once by the attention einsum
+            per_token += 2 * geo.token_bf16_bytes
+    return tokens * per_token * geo.n_attn_layers
+
+
+def prefill_chunk_hbm_bytes(geo: KVGeometry, start: int, chunk: int,
+                            total_len: int,
+                            mode: str = "paged-clamped") -> int:
+    """Modeled HBM bytes one chunked-prefill trace moves reading context
+    from the pool (the chunk's own KV write is common to every mode and
+    excluded).  Reachable context = min(start + chunk, total_len)."""
+    ctx = min(start + chunk, total_len)
+    return decode_hbm_bytes(geo, ctx, mode)
+
+
+def trace_decode_bytes(geo: KVGeometry, contexts,
+                       mode: str = "paged-clamped") -> int:
+    """Total modeled decode bytes over a trace's per-step slot contexts
+    (one entry per (step, decode slot) with that slot's context length) —
+    evaluating the cost model at the benchmark's actual length
+    distribution instead of a synthetic one."""
+    return sum(decode_hbm_bytes(geo, c, mode) for c in contexts)

@@ -1,3 +1,4 @@
+from repro.kernels import KernelConfig
 from repro.serving.block_manager import BlockManager, NoFreeBlocksError
 from repro.serving.engine import (
     Request,
@@ -16,4 +17,4 @@ from repro.serving.scheduler import (
 __all__ = ["ServingEngine", "ServeReport", "Request", "kv_bytes_per_token",
            "request_state_bytes", "BlockManager", "NoFreeBlocksError",
            "Scheduler", "ScheduleDecision", "StepBudget",
-           "EVICTION_POLICIES"]
+           "EVICTION_POLICIES", "KernelConfig"]

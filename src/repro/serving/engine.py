@@ -37,12 +37,20 @@ Prefill — one-shot or chunked
     mid-prefill slots have their table rows masked to the trash block so
     the batch-wide KV write cannot touch real (possibly shared) blocks.
 
-Decode
-    One fused `decode_step` over every decode-ready slot per step;
-    `decode_kernel="paged"` routes attention through the Pallas
-    `fp8_paged_decode_attention` kernel (scalar-prefetch block tables;
-    interpret-mode on CPU, compiled on TPU) instead of the jnp
-    table-gather path.
+Kernel hot path (`kernel_config`)
+    One `KernelConfig` (string shorthands "off" / "decode" / "prefill" /
+    "all") decides which attention mechanisms serve the hot path.
+    Decode: one fused `decode_step` over every decode-ready slot per
+    step — with the kernel on, one `fp8_paged_decode_attention` launch
+    serves the whole batch, scalar-prefetched block tables clamped to
+    each slot's live blocks (cost scales with actual context, not
+    `max_seq_len`).  Prefill: chunked-prefill chunks run through
+    `fp8_paged_prefill_attention`, reading prior-context K/V straight
+    from the pool instead of materializing a gathered copy.  Both are
+    interpret-mode on CPU, compiled on TPU; the jnp fallbacks remain
+    the "off" baseline and slice their gathers to the same live blocks.
+    (`decode_kernel="paged"` is the legacy spelling of
+    `kernel_config="decode"`.)
 
 Prefix sharing (refcount + content hash + copy-on-write)
     Admission dedups full-block prompt prefixes against the
@@ -103,6 +111,7 @@ import numpy as np
 from repro.core.precision import PrecisionConfig
 from repro.core.sampling import sample
 from repro.data import tasks
+from repro.kernels import KernelConfig
 from repro.models import blocks as blocks_mod
 from repro.models import ssm as ssm_mod
 from repro.models import decode_step, init_cache, prefill, prefill_chunk
@@ -213,10 +222,21 @@ class ServingEngine:
                  prefill_chunk: Optional[int] = None,
                  step_budget: Optional[StepBudget] = None,
                  decode_kernel: str = "gather",
+                 kernel_config=None,
                  eos_id: Optional[int] = tasks.EOS,
                  max_src_len: int = 8):
         assert admission in ("reserve", "ondemand"), admission
         assert decode_kernel in ("gather", "paged"), decode_kernel
+        if kernel_config is None:
+            kernel_config = KernelConfig(decode=(decode_kernel == "paged"))
+        else:
+            assert decode_kernel == "gather", (
+                "pass either decode_kernel (legacy) or kernel_config, "
+                "not both")
+            kernel_config = KernelConfig.parse(kernel_config)
+        assert not (kernel_config.any and cfg.attention_free), (
+            "attention kernels have nothing to serve on an attention-free "
+            "model; leave kernel_config off")
         assert prefill_chunk is None or not cfg.is_encdec, (
             "enc-dec requests prefill one-shot (the encoder pass over "
             "frames is not chunkable); leave prefill_chunk unset")
@@ -228,7 +248,8 @@ class ServingEngine:
         self.max_seq_len = max_seq_len
         self.temperature = temperature
         self.admission = admission
-        self.use_kernel = decode_kernel == "paged"
+        self.kernels = kernel_config
+        self.use_kernel = kernel_config.decode   # legacy alias (decode path)
         self.eos_id = eos_id           # None = decode max_new tokens always
         self.src_pad = max_src_len     # enc-dec frames capacity per slot
         self.key = jax.random.key(seed)
@@ -573,7 +594,7 @@ class ServingEngine:
         logits, new_cache = prefill_chunk(
             self.params, jnp.asarray(chunk)[None, :],
             jnp.array([act.start], jnp.int32), jnp.array([n], jnp.int32),
-            view, self.cfg, prec)
+            view, self.cfg, prec, use_kernel=self.kernels.prefill)
         self._merge_view(new_cache, act.slot)
         self.cache["lengths"] = self.cache["lengths"].at[act.slot].set(
             act.end)
@@ -769,7 +790,7 @@ class ServingEngine:
         toks = jnp.asarray(self.pending_tok)
         logits, self.cache, _ = decode_step(
             self.params, toks, self.cache, self.cfg, self.precision,
-            use_kernel=self.use_kernel)
+            use_kernel=self.kernels.decode)
         if masked:
             idx = jnp.asarray(masked)
             if self.has_paged_kv:

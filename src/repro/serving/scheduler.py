@@ -17,9 +17,13 @@ Chunked prefill
     chunks and schedules one chunk per slot per step, bounded by
     `StepBudget.prefill_tokens`; the chunk trace
     (`models.prefill_chunk`) writes KV through the block table and
-    gathers earlier chunks back from the pool, so decode for other slots
-    proceeds *between* chunks (piggybacked prefill) and a prompt of any
-    length streams through one fixed-width trace.  When the prefix index
+    reads earlier chunks back from the pool — through the Pallas
+    `fp8_paged_prefill_attention` kernel when the engine's
+    `kernel_config` enables it, a jnp gather otherwise; the planned
+    `Prefill`/decode actions are mechanism-agnostic and the engine picks
+    the path at execute time — so decode for other slots proceeds
+    *between* chunks (piggybacked prefill) and a prompt of any length
+    streams through one fixed-width trace.  When the prefix index
     already holds leading full blocks of the prompt, chunking starts at
     the shared boundary — shared prefix compute is skipped outright
     (attention-only models; recurrent state cannot be skipped).

@@ -114,3 +114,92 @@ def test_repeat_impl_matches_naive():
     with attention_impl("repeat"):
         got = np.asarray(_sdpa(q, k, v, mask, None, _Cfg))
     np.testing.assert_allclose(got, ref, rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# paged decode fallback: the table gather reads only live leading blocks
+# ---------------------------------------------------------------------------
+
+
+class _PagedCfg(_Cfg):
+    d_model = 64
+    qk_norm = False
+    rope_theta = 1e4
+
+
+def _paged_setup(precision, seed=7):
+    from repro.core.quant import quantize_per_tensor
+    from repro.models.attention import (
+        init_attn_params, init_paged_kv_cache, paged_write)
+    from repro.models.common import KeyGen
+    cfg = _PagedCfg()
+    kg = KeyGen(jax.random.key(seed))
+    params = init_attn_params(kg, cfg)
+    cache = init_paged_kv_cache(8, 4, cfg.n_kv_heads, cfg.d_head, precision)
+    # poison row 7: huge K/V values a stale read could not hide behind
+    big = jnp.float32(448 * cache.k_scale if cache.quantized else 448)
+    cache = cache._replace(k=cache.k.at[7].set(big.astype(cache.k.dtype)),
+                           v=cache.v.at[7].set(big.astype(cache.v.dtype)))
+    # two sequences, contexts 5 and 9, live blocks 2 and 3 of a W=6 table
+    lengths = jnp.array([5, 9], jnp.int32)
+    tbl = jnp.array([[0, 1, -1, -1, -1, -1],
+                     [2, 3, 4, -1, -1, -1]], jnp.int32)
+    kv = jax.random.normal(jax.random.key(seed + 1),
+                           (2, 12, cfg.n_kv_heads, cfg.d_head), jnp.float32)
+    kq = kv if not cache.quantized else \
+        quantize_per_tensor(kv, cache.k_scale, cache.k.dtype)
+    vq = -kv if not cache.quantized else \
+        quantize_per_tensor(-kv, cache.v_scale, cache.v.dtype)
+    pos = jnp.broadcast_to(jnp.arange(12)[None], (2, 12))
+    valid = pos < lengths[:, None]
+    cache = paged_write(cache, tbl, pos, valid,
+                        kq.astype(cache.k.dtype), vq.astype(cache.v.dtype))
+    x = jax.random.normal(jax.random.key(seed + 2), (2, 1, cfg.d_model),
+                          jnp.bfloat16)
+    return cfg, params, cache, tbl, lengths, x
+
+
+@pytest.mark.parametrize("precision", [None, "fp8"])
+@pytest.mark.parametrize("use_kernel", [False, True],
+                         ids=["gather", "kernel"])
+def test_paged_decode_ignores_stale_table_tail(precision, use_kernel):
+    """`_paged_attention_over_table` slices the gather to
+    ceil(max(context)/block_size) leading entries, so table entries past
+    the live region — stale ids from a previous occupant, trash, garbage
+    — are provably never read: pointing them at a poisoned block must
+    not change one bit of output.  (Before the live-slice fix the jnp
+    fallback gathered the full `max_seq_len`-wide table and relied on
+    masking; this pins the new contract for both paths.)"""
+    from repro.core import BF16_ROLLOUT, FP8_KV_ONLY_ROLLOUT
+    from repro.models.attention import attention_decode
+    prec = FP8_KV_ONLY_ROLLOUT if precision else BF16_ROLLOUT
+    prec = prec.replace(calculate_kv_scales=False)
+    cfg, params, cache, tbl, lengths, x = _paged_setup(prec)
+    outs = {}
+    for tail in ("trash", "stale"):
+        t = np.asarray(tbl).copy()
+        if tail == "stale":
+            t[t < 0] = 7                      # point dead entries at poison
+        out, _ = attention_decode(
+            x, params, cfg, cache, lengths, prec, use_rope=False,
+            use_kernel=use_kernel, block_tables=jnp.asarray(t))
+        outs[tail] = np.asarray(out, np.float32)
+    np.testing.assert_array_equal(outs["stale"], outs["trash"])
+
+
+def test_paged_decode_live_slice_matches_under_jit():
+    """Under jit the lengths are tracers and `_live_blocks` must fall
+    back to the full table width — same numbers, static shapes."""
+    from repro.core import BF16_ROLLOUT
+    from repro.models.attention import attention_decode
+    prec = BF16_ROLLOUT
+    cfg, params, cache, tbl, lengths, x = _paged_setup(prec)
+
+    def step(x, cache, lengths, tbl):
+        out, _ = attention_decode(x, params, cfg, cache, lengths, prec,
+                                  use_rope=False, block_tables=tbl)
+        return out
+
+    eager = np.asarray(step(x, cache, lengths, tbl), np.float32)
+    jitted = np.asarray(jax.jit(step)(x, cache, lengths, tbl), np.float32)
+    np.testing.assert_allclose(jitted, eager, rtol=2e-5, atol=2e-5)

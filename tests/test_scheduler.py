@@ -1,9 +1,12 @@
 """Continuous-batching scheduler tests: chunked prefill, eviction-policy
 registry, decision cost accounting, the paged-kernel decode path, and a
-hypothesis property over random arrival/length/policy/layer-pattern traces
-(pure attention and attn+ssm hybrid) asserting the scheduler invariants
-(no request lost or duplicated, the block budget is never exceeded,
-completed tokens are bit-exact vs a no-preemption oracle).
+hypothesis property over random arrival/length/policy/layer-pattern/
+kernel-config traces (pure attention and attn+ssm hybrid; jnp fallback,
+paged decode kernel, and the full decode+prefill kernel hot path)
+asserting the scheduler invariants (no request lost or duplicated, the
+block budget is never exceeded, completed tokens are bit-exact vs a
+no-preemption oracle running the SAME numerics path — preemption and
+chunking never change hot-path tokens).
 """
 import jax
 import jax.numpy as jnp
@@ -17,6 +20,7 @@ from repro.models import decode_step, init_cache, init_params, prefill
 from repro.rl import sync_policy_weights
 from repro.serving import (
     EVICTION_POLICIES,
+    KernelConfig,
     ServingEngine,
     StepBudget,
     kv_bytes_per_token,
@@ -280,13 +284,22 @@ def test_engine_paged_kernel_decode_end_to_end(setup):
 _ORACLE_CACHE = {}
 
 
-def _oracle_tokens(pattern, cfg, params, prompt, max_new):
+def _oracle_tokens(pattern, cfg, params, prompt, max_new, chunk=None,
+                   kernel="off"):
     """No-preemption single-request reference run (greedy decode depends
-    only on the prompt, so this is the bit-exact ground truth)."""
-    key = (pattern, prompt.tobytes(), max_new)
+    only on the prompt, so this is the bit-exact ground truth).
+
+    The oracle mirrors the numerics path under test: same kernel_config,
+    and — when the prefill kernel is active — the same chunk width (the
+    jnp chunked path is bit-exact vs one-shot, so only the kernel needs
+    the chunking mirrored).  Scheduling pressure must never change
+    tokens *given the same mechanism*."""
+    chunk_eff = chunk if KernelConfig.parse(kernel).prefill else None
+    key = (pattern, prompt.tobytes(), max_new, chunk_eff, kernel)
     if key not in _ORACLE_CACHE:
         eng = ServingEngine(params, cfg, BF16_ROLLOUT, max_slots=1,
-                            max_seq_len=32)
+                            max_seq_len=32, prefill_chunk=chunk_eff,
+                            kernel_config=kernel)
         eng.submit(prompt, max_new=max_new, rid=0)
         rep = eng.run(max_steps=200)
         assert len(rep.completed) == 1
@@ -322,8 +335,9 @@ def test_scheduler_invariants_random_traces(zoo):
         chunk=st.sampled_from([None, 3]),
         budget_blocks=st.integers(5, 10),
         pattern=st.sampled_from(["attn", "hybrid"]),
+        kernel=st.sampled_from(["off", "decode", "all"]),
     )
-    def run(reqs, policy, admission, chunk, budget_blocks, pattern):
+    def run(reqs, policy, admission, chunk, budget_blocks, pattern, kernel):
         cfg, params = zoo[pattern]
         per = kv_bytes_per_token(cfg, BF16_ROLLOUT)
         # KV pressure drives the preemptions; the per-slot recurrent
@@ -333,7 +347,7 @@ def test_scheduler_invariants_random_traces(zoo):
         eng = ServingEngine(
             params, cfg, BF16_ROLLOUT, max_slots=3, max_seq_len=32,
             kv_budget_bytes=budget, admission=admission,
-            eviction=policy, prefill_chunk=chunk)
+            eviction=policy, prefill_chunk=chunk, kernel_config=kernel)
         submitted = {}
         by_arrival = sorted(enumerate(reqs), key=lambda kv: kv[1][2])
         idx = 0
@@ -362,9 +376,10 @@ def test_scheduler_invariants_random_traces(zoo):
         for r in eng.done:
             pi, max_new = submitted[r.rid]
             assert list(r.generated) == _oracle_tokens(
-                pattern, cfg, params, canonical[pi], max_new), \
+                pattern, cfg, params, canonical[pi], max_new,
+                chunk=chunk, kernel=kernel), \
                 f"rid {r.rid} diverged (policy={policy}, chunk={chunk}, " \
-                f"pattern={pattern})"
+                f"pattern={pattern}, kernel={kernel})"
         assert eng.block_mgr.blocks_in_use == 0
 
     run()

@@ -19,6 +19,7 @@ MODULES = [
     ("prefix_sharing", "GRPO prefix-block sharing (refcount + CoW)"),
     ("continuous_batching", "Scheduler: chunked-prefill TTFT + eviction"),
     ("kernel_hotpath", "Pallas hot path: trace parity + bytes-moved gate"),
+    ("spec_decode", "Speculative decoding: acceptance + bit-exact + bytes"),
     ("hybrid_serving", "SSM/enc-dec swap-resume + fp8 hybrid capacity"),
     ("weight_sync", "§2.1.2 weight-sync cost + quant error"),
     ("router_precision", "Fig 6 router precision mismatch-KL"),

@@ -1,17 +1,53 @@
 """Shared token sampler for every decode loop in the stack.
 
 The rollout engine (`rl/rollout.py`), the serving engine
-(`serving/engine.py`) and any future speculative/beam path all sample the
-next token from the same logits contract: f32 logits, temperature 0 means
-greedy argmax, temperature > 0 means (optionally top-k truncated)
-categorical sampling.  Keeping one implementation guarantees the rollout
-and serving paths stay bit-identical for the same logits/key — the
-train-inference-consistency story of the paper extends to the sampler.
+(`serving/engine.py`) and the speculative verify path
+(`serving/spec_decode.py`) all sample the next token from the same
+logits contract: f32 logits, temperature 0 means greedy argmax,
+temperature > 0 means (optionally top-k truncated) categorical sampling.
+Keeping one implementation guarantees the rollout and serving paths stay
+bit-identical for the same logits/key — the train-inference-consistency
+story of the paper extends to the sampler.
+
+`sampling_logits` is the single definition of the truncated sampling
+distribution: `sample` draws from it and `rejection_sample` verifies
+against it, so the q the drafter is scored under and the p the verifier
+enforces can never disagree about support or normalization — the
+precondition for speculative decoding being distribution-exact.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+_NEG_INF = -1e30
+
+
+def _top_k_mask(scaled: jax.Array, k: int) -> jax.Array:
+    """Boolean mask keeping EXACTLY `k` entries of the last axis.
+
+    Ties at the k-th value break deterministically toward the lower
+    index (jax.lax.top_k's tie order), so the truncated support is
+    always exactly k tokens — a `scaled < thresh` comparison would keep
+    *every* token tied with the k-th logit, silently widening the
+    support and flattening the renormalized distribution.
+    """
+    idx = jax.lax.top_k(scaled, k)[1]                        # (..., k)
+    return jnp.any(jax.nn.one_hot(idx, scaled.shape[-1], dtype=jnp.bool_),
+                   axis=-2)
+
+
+def sampling_logits(logits: jax.Array, temperature: float,
+                    top_k: int = 0) -> jax.Array:
+    """The (temperature-scaled, top-k-truncated) logits that define the
+    sampling distribution for temperature > 0.  softmax of the result IS
+    the distribution `sample` draws from — rejection sampling must score
+    draft tokens against exactly this."""
+    assert temperature > 0.0, "greedy sampling has no distribution to scale"
+    scaled = logits.astype(jnp.float32) / temperature
+    if top_k > 0:
+        scaled = jnp.where(_top_k_mask(scaled, top_k), scaled, _NEG_INF)
+    return scaled
 
 
 def sample(logits: jax.Array, key, temperature: float, top_k: int = 0,
@@ -31,13 +67,87 @@ def sample(logits: jax.Array, key, temperature: float, top_k: int = 0,
     if temperature <= 0.0:
         tok = jnp.argmax(logits, axis=-1)
     else:
-        scaled = logits / temperature
-        if top_k > 0:
-            thresh = jax.lax.top_k(scaled, top_k)[0][..., -1:]
-            scaled = jnp.where(scaled < thresh, -1e30, scaled)
-        logits = scaled
+        logits = sampling_logits(logits, temperature, top_k)
         tok = jax.random.categorical(key, logits, axis=-1)
     if not want_logp:
         return tok, None
     logp = jax.nn.log_softmax(logits, -1)
     return tok, jnp.take_along_axis(logp, tok[..., None], -1)[..., 0]
+
+
+def rejection_sample(target_logits: jax.Array, draft_tokens, key,
+                     temperature: float, top_k: int = 0):
+    """Modified rejection sampling for speculative decoding with a
+    deterministic (one-hot q) drafter — Leviathan et al. specialized to
+    q(x) = 1[x == draft_i].
+
+    target_logits : (K+1, V) f32 — row i is the target model's logits at
+        draft position i (row 0 follows the committed pending token, row i
+        follows draft token i-1), i.e. the per-position target logprobs
+        threaded out of the verify pass.
+    draft_tokens  : (K,) proposed token ids.
+
+    Returns (tokens, n_accepted, logps): `tokens` is a python list of
+    n_accepted+1 ids — the accepted draft prefix plus ONE more token (the
+    corrected resample on the first rejection, or the bonus token drawn
+    from the last row when every draft survives).  `logps` gives each
+    emitted token's log-probability under the target sampling
+    distribution (untempered softmax for greedy — the `sample`
+    convention).
+
+    Output-distribution exactness (per position, one-hot q):
+        P(out = d) = min(1, p(d)/1) = p(d)                    (accept)
+        P(out = x) = (1 - p(d)) * p(x)/(1 - p(d)) = p(x)      (x != d)
+    so accepted-plus-resampled tokens are distributed *identically* to
+    sampling from the target distribution directly; at temperature 0 the
+    accept test collapses to `draft_i == argmax(row_i)` and the output is
+    bit-exact vs non-speculative greedy decode.
+    """
+    k = len(draft_tokens)
+    target_logits = jnp.asarray(target_logits, jnp.float32)
+    assert target_logits.ndim == 2 and target_logits.shape[0] >= k + 1, \
+        (target_logits.shape, k)
+
+    if temperature <= 0.0:
+        greedy = jnp.argmax(target_logits[:k + 1], axis=-1)
+        logp_all = jax.nn.log_softmax(target_logits[:k + 1], -1)
+        tokens, n_accepted = [], 0
+        for i in range(k):
+            g = int(greedy[i])
+            if g != int(draft_tokens[i]):
+                tokens.append(g)                  # corrected token
+                break
+            tokens.append(g)                      # accepted draft
+            n_accepted += 1
+        else:
+            tokens.append(int(greedy[k]))         # bonus token
+        logps = [float(logp_all[i, t]) for i, t in enumerate(tokens)]
+        return tokens, n_accepted, logps
+
+    logits_s = sampling_logits(target_logits[:k + 1], temperature, top_k)
+    logp = jax.nn.log_softmax(logits_s, -1)
+    probs = jnp.exp(logp)
+    keys = jax.random.split(key, 2 * k + 1)
+    tokens, n_accepted = [], 0
+    for i in range(k):
+        d = int(draft_tokens[i])
+        p_d = float(probs[i, d])
+        # one-hot q: accept with min(1, p/q) = p(d)
+        if float(jax.random.uniform(keys[2 * i])) < p_d:
+            tokens.append(d)
+            n_accepted += 1
+            continue
+        # resample from the normalized residual max(p - q, 0): p with the
+        # rejected draft token removed (categorical renormalizes)
+        residual = probs[i].at[d].set(0.0)
+        tok = int(jax.random.categorical(keys[2 * i + 1],
+                                         jnp.log(residual)))
+        tokens.append(tok)
+        break
+    else:
+        # every draft accepted: the bonus token comes from the last row's
+        # target distribution — the same categorical `sample` would draw
+        tokens.append(int(jax.random.categorical(keys[2 * k],
+                                                 logits_s[k])))
+    logps = [float(logp[i, t]) for i, t in enumerate(tokens)]
+    return tokens, n_accepted, logps

@@ -26,6 +26,7 @@ from repro.rl import sync_policy_weights
 from repro.serving import (
     EVICTION_POLICIES,
     ServingEngine,
+    SpecConfig,
     StepBudget,
     kv_bytes_per_token,
     request_state_bytes,
@@ -66,6 +67,11 @@ def main(argv=None):
                          "prefill routes chunked-prefill chunks through "
                          "fp8_paged_prefill_attention, all does both "
                          "(interpret on CPU, compiled on TPU)")
+    ap.add_argument("--spec-k", type=int, default=None,
+                    help="speculative decoding: draft up to K tokens per "
+                         "verify via the n-gram prompt-lookup proposer "
+                         "(attention-only decoders; greedy stays "
+                         "bit-exact vs non-speculative decode)")
     ap.add_argument("--src-pad", type=int, default=8,
                     help="enc-dec: source-frame capacity per slot "
                          "(requests carry up to this many frames)")
@@ -110,7 +116,9 @@ def main(argv=None):
                         step_budget=step_budget,
                         decode_kernel=args.decode_kernel,
                         kernel_config=args.kernel_config,
-                        max_src_len=args.src_pad)
+                        max_src_len=args.src_pad,
+                        spec=SpecConfig(num_draft_tokens=args.spec_k)
+                        if args.spec_k else None)
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):
         prob = tasks.sample_problem(rng)
@@ -139,6 +147,10 @@ def main(argv=None):
         "emitted_tokens": report.emitted_tokens,
         "mean_occupancy": round(report.mean_occupancy, 4),
         "useful_token_rate": round(report.useful_token_rate, 4),
+        "spec_steps": report.spec_steps,
+        "accepted_tokens": report.accepted_tokens,
+        "spec_tokens_per_step": round(report.spec_tokens_per_step, 3),
+        "stalled": report.stalled,
         "budget_tokens": report.budget_tokens,
         "kv_bytes_per_token": kv_bytes_per_token(cfg, precision),
         "state_bytes_per_request": state_bytes,

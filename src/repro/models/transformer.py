@@ -428,11 +428,16 @@ def prefill_chunk(
     precision: PrecisionConfig,
     *,
     use_kernel: bool = False,
+    want_all_logits: bool = False,
 ):
     """Process one prompt chunk of a *paged* cache (continuous-batching
     chunked prefill): scatter the chunk's KV at positions
     [start, start+chunk_lengths) and return logits at the chunk's last
-    valid position.
+    valid position — or, with `want_all_logits=True`, at EVERY chunk
+    position (B, C, V).  The all-logits form is the speculative-decoding
+    scorer: the verify pass feeds [pending, draft_1..draft_k] as one
+    chunk and needs the target distribution at each of the k+1 positions
+    to run rejection sampling (`core.sampling.rejection_sample`).
 
     Attention reads earlier chunks back from the pool through the block
     table — `use_kernel=True` routes it through the Pallas
@@ -482,6 +487,8 @@ def prefill_chunk(
     x, ys = _scan(body, x, (params["blocks"], cache["slots"]))
     cache = dict(cache, slots=ys["caches"], lengths=new_lengths)
 
+    if want_all_logits:
+        return _unembed(params, x, cfg, precision), cache     # (B, C, V)
     idx = jnp.clip(chunk_lengths - 1, 0, c - 1)
     x_last = x[jnp.arange(b), idx]                            # (B, D)
     logits = _unembed(params, x_last, cfg, precision)

@@ -13,8 +13,10 @@ from repro.roofline.kv_bytes import (
     decode_hbm_bytes,
     prefill_chunk_hbm_bytes,
     trace_decode_bytes,
+    verify_hbm_bytes,
 )
 __all__ = ["analyze", "collective_bytes", "model_flops_for_cell",
            "RooflineTerms", "PEAK_FLOPS", "HBM_BW", "ICI_BW",
            "KVGeometry", "DECODE_MODES", "decode_hbm_bytes",
-           "prefill_chunk_hbm_bytes", "trace_decode_bytes"]
+           "prefill_chunk_hbm_bytes", "trace_decode_bytes",
+           "verify_hbm_bytes"]

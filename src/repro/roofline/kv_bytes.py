@@ -124,6 +124,21 @@ def prefill_chunk_hbm_bytes(geo: KVGeometry, start: int, chunk: int,
     return decode_hbm_bytes(geo, ctx, mode)
 
 
+def verify_hbm_bytes(geo: KVGeometry, context_len: int, num_drafts: int,
+                     mode: str = "paged-clamped") -> int:
+    """Modeled HBM bytes one speculative-decoding verify trace moves: the
+    [pending, draft_1..draft_k] chunk starts at `context_len` valid rows
+    and streams its reachable context (context + k + 1 rows, block-
+    clamped) from the pool once — the same stream one decode step of
+    equal context pays, widened by the draft rows.  A verify that
+    accepts r drafts replaces r+1 decode steps' pool streams;
+    `benchmarks/spec_decode.py` gates tokens-per-modeled-byte on exactly
+    this comparison, so speculation must win at equal modeled bytes, not
+    by under-counting the verify pass."""
+    return prefill_chunk_hbm_bytes(geo, context_len, num_drafts + 1,
+                                   context_len + num_drafts + 1, mode)
+
+
 def trace_decode_bytes(geo: KVGeometry, contexts,
                        mode: str = "paged-clamped") -> int:
     """Total modeled decode bytes over a trace's per-step slot contexts

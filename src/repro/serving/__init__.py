@@ -9,12 +9,16 @@ from repro.serving.engine import (
 )
 from repro.serving.scheduler import (
     EVICTION_POLICIES,
+    Draft,
     ScheduleDecision,
     Scheduler,
     StepBudget,
+    Verify,
 )
+from repro.serving.spec_decode import NGramProposer, SpecConfig
 
 __all__ = ["ServingEngine", "ServeReport", "Request", "kv_bytes_per_token",
            "request_state_bytes", "BlockManager", "NoFreeBlocksError",
            "Scheduler", "ScheduleDecision", "StepBudget",
-           "EVICTION_POLICIES", "KernelConfig"]
+           "EVICTION_POLICIES", "KernelConfig",
+           "SpecConfig", "NGramProposer", "Draft", "Verify"]

@@ -109,7 +109,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.precision import PrecisionConfig
-from repro.core.sampling import sample
+from repro.core.sampling import rejection_sample, sample
 from repro.data import tasks
 from repro.kernels import KernelConfig
 from repro.models import blocks as blocks_mod
@@ -120,13 +120,16 @@ from repro.serving.block_manager import BlockManager
 from repro.serving.scheduler import (
     Admit,
     Cow,
+    Draft,
     Grow,
     Prefill,
     ScheduleDecision,
     Scheduler,
     StepBudget,
     SwapOut,
+    Verify,
 )
+from repro.serving.spec_decode import SpecConfig
 
 
 def kv_bytes_per_token(cfg, precision: PrecisionConfig) -> int:
@@ -203,6 +206,15 @@ class ServeReport:
     prefix_hit_blocks: int = 0     # block allocations avoided by sharing
     cow_copies: int = 0            # shared blocks privatized before a write
     prefill_chunks: int = 0        # chunked-prefill traces executed
+    spec_steps: int = 0            # speculative verify traces executed
+    draft_tokens: int = 0          # tokens proposed across all verifies
+    accepted_tokens: int = 0       # draft tokens accepted by rejection
+    # True when run() stopped WITHOUT finishing the submitted work — the
+    # schedule went empty (capacity-stuck: nothing admissible, nothing
+    # running) or the runaway guard tripped.  A partial report used to be
+    # indistinguishable from success; callers must check this before
+    # trusting `completed`.
+    stalled: bool = False
 
     @property
     def useful_token_rate(self) -> float:
@@ -210,12 +222,21 @@ class ServeReport:
         tokens/s on fixed-step-time hardware."""
         return self.emitted_tokens / max(self.steps, 1)
 
+    @property
+    def spec_tokens_per_step(self) -> float:
+        """Tokens emitted per speculative verify step: accepted drafts
+        plus the corrected/bonus token every verify also yields.  > 1 by
+        construction when any verify ran; > 2 means speculation beats
+        plain decode 2x on the slots it covered."""
+        return (self.accepted_tokens + self.spec_steps) / \
+            max(self.spec_steps, 1)
+
 
 class ServingEngine:
     def __init__(self, params, cfg, precision: PrecisionConfig, *,
                  max_slots: int = 8, max_seq_len: int = 64,
                  kv_budget_bytes: Optional[int] = None,
-                 temperature: float = 0.0, seed: int = 0,
+                 temperature: float = 0.0, top_k: int = 0, seed: int = 0,
                  prompt_pad: int = 16, block_size: int = 4,
                  admission: str = "reserve", prefix_sharing: bool = True,
                  eviction: str = "youngest",
@@ -224,7 +245,9 @@ class ServingEngine:
                  decode_kernel: str = "gather",
                  kernel_config=None,
                  eos_id: Optional[int] = tasks.EOS,
-                 max_src_len: int = 8):
+                 max_src_len: int = 8,
+                 spec: Optional[SpecConfig] = None,
+                 proposer=None):
         assert admission in ("reserve", "ondemand"), admission
         assert decode_kernel in ("gather", "paged"), decode_kernel
         if kernel_config is None:
@@ -247,6 +270,12 @@ class ServingEngine:
         self.max_slots = max_slots
         self.max_seq_len = max_seq_len
         self.temperature = temperature
+        # top_k rides along with temperature to every sample() call —
+        # serving must draw from the SAME truncated distribution as the
+        # rollout sampler (and as the speculative verifier) for identical
+        # sampler settings, or the one-sampler bit-identical contract in
+        # core/sampling.py breaks
+        self.top_k = top_k
         self.admission = admission
         self.kernels = kernel_config
         self.use_kernel = kernel_config.decode   # legacy alias (decode path)
@@ -255,7 +284,23 @@ class ServingEngine:
         self.key = jax.random.key(seed)
         self.scheduler = Scheduler(eviction=eviction,
                                    prefill_chunk=prefill_chunk,
-                                   budget=step_budget)
+                                   budget=step_budget,
+                                   spec=spec, proposer=proposer)
+        # Speculation is sound only where the verify chunk's state is
+        # FULLY rewindable by a length truncation: pure causal attention
+        # over the paged pool.  SSM recurrence advances in place during
+        # the chunk (no rewind), cross/multimodal prefills don't stream
+        # through prefill_chunk at all.
+        self._spec_ok = (
+            not cfg.attention_free and not cfg.is_encdec
+            and cfg.frontend is None
+            and all(s.mixer == "attn" and not s.cross
+                    for s in blocks_mod.layer_pattern(cfg)))
+        if spec is not None and not self._spec_ok:
+            raise ValueError(
+                "speculative decoding needs an attention-only decoder "
+                "(paged KV is the only state the rewind contract can "
+                "truncate); this config has SSM/cross/multimodal state")
         # shared-prefix compute skip is sound only when prefix KV is the
         # whole carried state: pure causal attention, no recurrent/cross
         # state, no multimodal prefix
@@ -311,7 +356,8 @@ class ServingEngine:
         self.stats = dict(preemptions=0, wasted_tokens=0, emitted=0,
                           steps=0, occupancy=0.0, swap_outs=0, swap_ins=0,
                           peak_blocks=0, prefix_hits=0, cow_copies=0,
-                          prefill_chunks=0)
+                          prefill_chunks=0, spec_steps=0, draft_tokens=0,
+                          accepted_tokens=0)
 
     # ------------------------------------------------------------------
     def submit(self, prompt_ids, max_new: int, rid: Optional[int] = None,
@@ -530,6 +576,7 @@ class ServingEngine:
         scheduler's bookkeeping already assumed it: a victim's rows are
         copied to host before any later-ordered action can overwrite
         them); the fused decode over `decode_slots` runs last."""
+        n_verify = 0
         for act in decision.actions:
             if isinstance(act, SwapOut):
                 self._exec_swap_out(act)
@@ -542,12 +589,24 @@ class ServingEngine:
                 self._set_table_row(act.slot, act.block_ids)
             elif isinstance(act, Prefill):
                 self._exec_prefill(act)
+            elif isinstance(act, Draft):
+                self._exec_draft(act)
+            elif isinstance(act, Verify):
+                self._exec_verify(act)
+                n_verify += 1
             else:                              # pragma: no cover
                 raise TypeError(f"unknown action {act!r}")
         self.stats["peak_blocks"] = max(self.stats["peak_blocks"],
                                         self.block_mgr.blocks_in_use)
         if decision.decode_slots:
             self._exec_decode(decision.decode_slots)
+        elif n_verify:
+            # a verify-only step is still one serving step (the unit the
+            # throughput proxy divides by) — counting it free would let
+            # speculation fake its accepted-tokens/step win
+            self.stats["steps"] += 1
+        if n_verify:
+            self.stats["occupancy"] += n_verify / self.max_slots
 
     def step(self) -> ScheduleDecision:
         """One scheduler+engine step (the unit external drivers — the
@@ -604,7 +663,7 @@ class ServingEngine:
         if act.last:
             self.block_mgr.register_prefix(req.rid, req.prompt)
             self.key, k = jax.random.split(self.key)
-            tok = sample(logits[0], k, self.temperature,
+            tok = sample(logits[0], k, self.temperature, self.top_k,
                          want_logp=False)[0]
             self.pending_tok[act.slot] = tok
             req.generated = [int(tok)]
@@ -645,7 +704,8 @@ class ServingEngine:
         self._scales_calibrated = True
         self.block_mgr.register_prefix(req.rid, req.prompt)
         self.key, k = jax.random.split(self.key)
-        tok = sample(logits[0], k, self.temperature, want_logp=False)[0]
+        tok = sample(logits[0], k, self.temperature, self.top_k,
+                     want_logp=False)[0]
         self.pending_tok[slot] = tok
         self.slot_req[slot] = req
         req.generated = [int(tok)]
@@ -772,6 +832,75 @@ class ServingEngine:
             slots[name] = merged
         self.cache = dict(self.cache, slots=slots)
 
+    # -- speculative decoding ------------------------------------------------
+    def _exec_draft(self, act: Draft):
+        """The ordered record of the proposal.  The n-gram proposer ran
+        host-side at plan time, so this only accounts the drafts; a
+        draft-model proposer would do its device work here (ordered
+        before the Verify that consumes its tokens)."""
+        assert self.slot_req[act.slot] is act.req, (
+            "draft for a slot whose occupant changed — the scheduler "
+            "must cancel Draft/Verify when it preempts the slot")
+        self.stats["draft_tokens"] += len(act.tokens)
+
+    def _exec_verify(self, act: Verify):
+        """Score pending-token + drafts in one `prefill_chunk` trace,
+        rejection-sample, and rewind.
+
+        The chunk is [pending, d_1..d_k] at positions [T, T+k] (T =
+        `cached_tokens`): row 0's logits are bit-identical to what a
+        plain decode step of the pending token would produce (same RoPE
+        positions, same quantize/scatter path, masked-out gather columns
+        contribute exact zeros), and row i scores draft i's successor.
+        After `rejection_sample` accepts r drafts, the KV rewind is a
+        host-side truncation: `lengths[slot]` and `cached_tokens` drop
+        to T+1+r, stale rows beyond are never read (every attention path
+        masks by length; paged kernels also clamp to `_live_blocks`) and
+        the next write overwrites them in place.
+        """
+        req, slot = act.req, act.slot
+        assert self.slot_req[slot] is req, (
+            "verify for a slot whose occupant changed — the scheduler "
+            "must cancel Draft/Verify when it preempts the slot")
+        assert req.cached_tokens == act.start, (req.cached_tokens, act)
+        k = len(act.tokens)
+        chunk = np.full((act.width,), tasks.PAD, np.int32)
+        chunk[0] = self.pending_tok[slot]
+        chunk[1:1 + k] = act.tokens
+        prec = self.precision
+        if self._scales_calibrated and prec.kv_quantized:
+            prec = prec.replace(calculate_kv_scales=False)
+        view = self._slot_view(slot)
+        logits, new_cache = prefill_chunk(
+            self.params, jnp.asarray(chunk)[None, :],
+            jnp.array([act.start], jnp.int32),
+            jnp.array([k + 1], jnp.int32),
+            view, self.cfg, prec, use_kernel=self.kernels.prefill,
+            want_all_logits=True)
+        self._merge_view(new_cache, slot)
+        self.key, sub = jax.random.split(self.key)
+        toks, n_acc, _ = rejection_sample(
+            logits[0, :k + 1], act.tokens, sub, self.temperature,
+            self.top_k)
+        # KV rewind: keep the pending token's row + the accepted prefix
+        new_len = act.start + 1 + n_acc
+        self.cache["lengths"] = self.cache["lengths"].at[slot].set(new_len)
+        req.cached_tokens = new_len
+        self.stats["spec_steps"] += 1
+        self.stats["accepted_tokens"] += n_acc
+        # commit emitted tokens in order; EOS / max_new truncation scans
+        # them exactly like successive decode steps would have
+        for tok in toks:
+            self.stats["emitted"] += 1
+            req.generated.append(tok)
+            self.pending_tok[slot] = tok
+            if tok == self.eos_id or len(req.generated) >= req.max_new:
+                self.done.append(req)
+                self.slot_req[slot] = None
+                self.block_mgr.free(req.rid)
+                self._clear_slot(slot)
+                break
+
     # -- decode --------------------------------------------------------------
     def _exec_decode(self, decode_slots: List[int]):
         """One fused decode step over `decode_slots`.  Mid-prefill slots
@@ -787,6 +916,7 @@ class ServingEngine:
             saved = self.cache["block_tables"]
             self.cache["block_tables"] = saved.at[jnp.asarray(masked)].set(-1)
         old_slots = self.cache["slots"]
+        saved_lengths = self.cache["lengths"]
         toks = jnp.asarray(self.pending_tok)
         logits, self.cache, _ = decode_step(
             self.params, toks, self.cache, self.cfg, self.precision,
@@ -800,9 +930,17 @@ class ServingEngine:
                 ssm=lambda name, st: jax.tree.map(
                     lambda new, old: new.at[:, idx].set(old[:, idx]),
                     st, old_slots[name]["ssm"]))
+            # decode_step bumps EVERY row's length; masked slots didn't
+            # decode, so restore theirs.  Mid-prefill slots would have
+            # overwritten the bogus +1 at their next chunk anyway, but a
+            # speculating slot is length-authoritative after its rewind —
+            # a stray +1 would un-truncate a rejected KV row.
+            self.cache["lengths"] = \
+                self.cache["lengths"].at[idx].set(saved_lengths[idx])
         self.key, k = jax.random.split(self.key)
         next_toks = np.asarray(
-            sample(logits, k, self.temperature, want_logp=False)[0])
+            sample(logits, k, self.temperature, self.top_k,
+                   want_logp=False)[0])
         self.stats["steps"] += 1
         self.stats["occupancy"] += len(decode_slots) / self.max_slots
         for i in decode_slots:
@@ -824,13 +962,22 @@ class ServingEngine:
         # bounds decode steps, the old contract), so keep a generous
         # runaway guard for capacity-stuck chunk loops
         guard = 16 * max_steps + 256
+        stalled = False
         while (self.queue or any(r is not None for r in self.slot_req)) \
                 and self.stats["steps"] < max_steps and guard > 0:
             guard -= 1
             decision = self.scheduler.step(self)
             if decision.is_empty:
+                # nothing schedulable but work remains: capacity-stuck
+                # (e.g. a request that can never be admitted) — surface
+                # it instead of returning a partial report that looks
+                # like success
+                stalled = True
                 break
             self.execute(decision)
+        if guard <= 0 and (self.queue
+                           or any(r is not None for r in self.slot_req)):
+            stalled = True          # runaway guard tripped mid-work
         steps = max(self.stats["steps"], 1)
         return ServeReport(
             completed=self.done,
@@ -846,4 +993,8 @@ class ServingEngine:
             prefix_hit_blocks=self.stats["prefix_hits"],
             cow_copies=self.stats["cow_copies"],
             prefill_chunks=self.stats["prefill_chunks"],
+            spec_steps=self.stats["spec_steps"],
+            draft_tokens=self.stats["draft_tokens"],
+            accepted_tokens=self.stats["accepted_tokens"],
+            stalled=stalled,
         )

@@ -40,6 +40,21 @@ Eviction policies (registry)
                       frees little — its prompt blocks stay resident for
                       the group — so victim choice by rid wastes swaps.
 
+Speculative decoding (`spec=SpecConfig(...)`)
+    A decode-ready slot can spend its step on Draft + Verify instead of
+    one fused-decode token: the proposer guesses k tokens from the
+    request's own history (`serving.spec_decode`), and the engine scores
+    pending-token + drafts in ONE `prefill_chunk` trace, rejection-
+    samples, and rewinds the KV length past the rejected tail.  The
+    scheduler plans speculation *opportunistically*: verify widths count
+    against `StepBudget.prefill_tokens` alongside prefill chunks, the
+    verify write range is grown/privatized up front (ordered Grow/Cow
+    before the Verify), and speculation never evicts anyone — when
+    blocks or budget are tight the slot falls back to plain decode.  A
+    victim preempted mid-plan has its Draft/Verify cancelled exactly
+    like a planned chunk, so a swapped request resumes from its pending
+    token bit-exact.
+
 A `ScheduleDecision` is an *ordered* action log: the engine executes
 actions in plan order, which makes plan-time bookkeeping (free a victim's
 blocks, hand them to a growing request) consistent with execute-time
@@ -52,6 +67,8 @@ import dataclasses
 from typing import Callable, Dict, List, Optional
 
 from repro.serving.block_manager import NoFreeBlocksError
+from repro.serving.spec_decode import NGramProposer, SpecConfig, \
+    _check_proposer
 
 # ---------------------------------------------------------------------------
 # decision = ordered action log + decode set + cost accounting
@@ -65,7 +82,10 @@ class StepBudget:
     prefill_tokens : max padded prefill tokens traced per step (None =
                      unlimited).  At least one chunk is always scheduled
                      when prefill work is pending, so a small budget
-                     throttles rather than deadlocks.
+                     throttles rather than deadlocks.  Speculative
+                     verify widths draw from the SAME pool (both are
+                     multi-token traces) — prefill chunks are planned
+                     first, so speculation only spends the leftover.
     new_blocks     : max fresh block allocations *for admission* per step
                      (None = unlimited).  Growth/CoW of already-running
                      requests is never budget-blocked — the decode write
@@ -118,29 +138,63 @@ class Prefill:
     oneshot: bool                # legacy batch-1 full-prompt prefill
 
 
+@dataclasses.dataclass
+class Draft:
+    """Propose draft tokens for a decode-ready slot.  The n-gram
+    proposer is host-side, so `tokens` is already filled at plan time
+    and execution only records stats — but the action stays first-class
+    and ordered so a draft-*model* proposer (device work, pool reads)
+    slots in here without touching the plan shape."""
+
+    slot: int
+    req: object
+    tokens: List[int]            # proposed draft ids (len k >= 1)
+
+
+@dataclasses.dataclass
+class Verify:
+    """Score pending-token + drafts through one `prefill_chunk` trace,
+    rejection-sample, and rewind the KV length past the rejected tail
+    (the KV-rewind contract documented in `serving.spec_decode`).
+    Always ordered after the Grow/Cow that map and privatize its write
+    range [start, start+len(tokens)]."""
+
+    slot: int
+    req: object
+    tokens: List[int]            # draft ids (k of them)
+    start: int                   # cached_tokens at plan time (row of the
+    #                              pending token's KV write)
+    width: int                   # padded trace width (cost accounting)
+
+
 Action = object
 
 
 @dataclasses.dataclass
 class ScheduleDecision:
     """One step's plan.  `actions` execute strictly in order; the fused
-    decode over `decode_slots` runs last."""
+    decode over `decode_slots` runs last.  Slots with a planned Verify
+    never appear in `decode_slots` — the verify trace IS their step."""
 
     actions: List[Action] = dataclasses.field(default_factory=list)
     decode_slots: List[int] = dataclasses.field(default_factory=list)
     prefill_tokens: int = 0      # padded widths scheduled this step
     swap_tokens: int = 0         # KV rows moved host<->device this step
+    verify_tokens: int = 0       # padded speculative verify widths
 
     @property
     def cost_tokens(self) -> int:
         """Engine-work cost proxy in token units: tokens traced this step
-        (padded prefill widths + one per decode slot) plus KV rows moved
-        over the host link by preemption (swap-out saves + swap-in
-        restores).  The continuous-batching benchmark advances its
-        arrival clock by this — which is what makes eviction waste
-        visible: a policy that swaps sharers back and forth pays here."""
-        return self.prefill_tokens + len(self.decode_slots) + \
-            self.swap_tokens
+        (padded prefill widths + speculative verify widths + one per
+        decode slot) plus KV rows moved over the host link by preemption
+        (swap-out saves + swap-in restores).  The continuous-batching
+        benchmark advances its arrival clock by this — which is what
+        makes eviction waste visible: a policy that swaps sharers back
+        and forth pays here.  Verify widths are priced at full padded
+        width even when fewer drafts are accepted, so speculation has to
+        EARN its win in accepted tokens, not hide cost."""
+        return self.prefill_tokens + self.verify_tokens + \
+            len(self.decode_slots) + self.swap_tokens
 
     @property
     def is_empty(self) -> bool:
@@ -201,13 +255,21 @@ class Scheduler:
 
     def __init__(self, *, eviction: str = "youngest",
                  prefill_chunk: Optional[int] = None,
-                 budget: Optional[StepBudget] = None):
+                 budget: Optional[StepBudget] = None,
+                 spec: Optional[SpecConfig] = None,
+                 proposer=None):
         assert eviction in EVICTION_POLICIES, (
             f"unknown eviction policy {eviction!r}; "
             f"registered: {sorted(EVICTION_POLICIES)}")
         self.eviction = eviction
         self.prefill_chunk = prefill_chunk   # None = legacy batch-1 prefill
         self.budget = budget or StepBudget()
+        self.spec = spec                     # None = speculation off
+        if proposer is None and spec is not None:
+            proposer = NGramProposer(spec)
+        if proposer is not None:
+            _check_proposer(proposer)
+        self.proposer = proposer
         self._tick = 0
 
     # -- victim selection ---------------------------------------------------
@@ -219,19 +281,36 @@ class Scheduler:
         return EVICTION_POLICIES[self.eviction](eng, slots)
 
     def _plan_swap_out(self, eng, decision: ScheduleDecision, slot: int,
-                       planned: Dict[int, Prefill]):
+                       planned: Dict[int, Prefill],
+                       spec_planned: Optional[Dict[int, Verify]] = None):
         """Preempt `slot` at plan time: bookkeeping now (free + requeue),
         device copy when the engine reaches the action.  A chunk already
         planned for the victim this step is cancelled and rolled back —
         its writes must never land in blocks that were just handed to
-        someone else."""
+        someone else.  A planned Draft/Verify is cancelled the same way:
+        the victim keeps its pending token and resumes with a plain
+        decode (or a fresh speculation) bit-exact after swap-in."""
         req = eng.slot_req[slot]
         chunk = planned.pop(slot, None)
         if chunk is not None:
             decision.actions.remove(chunk)
             decision.prefill_tokens -= chunk.width
             req.prefilled = chunk.start
-        ids = eng.block_mgr.blocks_of(req.rid)
+        if spec_planned is not None:
+            verify = spec_planned.pop(slot, None)
+            if verify is not None:
+                decision.actions = [
+                    a for a in decision.actions
+                    if not (isinstance(a, (Draft, Verify))
+                            and a.slot == slot)]
+                decision.verify_tokens -= verify.width
+        # Save only the blocks that hold valid rows: a speculating slot
+        # can own blocks past `cached_tokens` (grown for a verify that
+        # was then rewound or cancelled), and re-admission only reserves
+        # blocks for the tokens actually retained — an untrimmed host
+        # copy would not fit the restore target (and is pure swap waste).
+        ids = eng.block_mgr.blocks_of(req.rid)[
+            :eng.block_mgr.blocks_for_tokens(req.cached_tokens)]
         # `cached_tokens` is the host-authoritative count of valid KV rows
         # (kept in lockstep by engine.execute); for a slot admitted earlier
         # THIS step it already covers exactly the rows whose content is
@@ -269,14 +348,17 @@ class Scheduler:
             shared = eng.block_mgr.lookup_prefix(req.prompt)
             need = max(eng._reserve_blocks(req) - len(shared), 0)
             # evictor-cached hits are revived (refcount 0 -> 1): they leave
-            # the reclaimable pool exactly like a fresh allocation would
+            # the reclaimable pool exactly like a fresh allocation would,
+            # so they count against the per-step block throttle the same
+            # way — a GRPO burst whose prefixes all sit in the evictor
+            # cache must still admit gradually, not all at once
             revive = sum(1 for b in shared if eng.block_mgr.refcount(b) == 0)
             # the request's constant slot state (SSM h/conv, cross KV)
             # counts against the byte budget like `state_blocks` more
             # fresh blocks — an enc-dec/hybrid model must not over-admit
             # on its per-token KV cost alone
             if self.budget.new_blocks is not None and \
-                    fresh_blocks[0] + need + eng.state_blocks > \
+                    fresh_blocks[0] + need + revive + eng.state_blocks > \
                     self.budget.new_blocks and fresh_blocks[0] > 0:
                 return              # block budget spent: admit next step
             if not eng.block_mgr.can_allocate(
@@ -284,7 +366,7 @@ class Scheduler:
                     limit_blocks=eng._effective_blocks - eng.state_blocks):
                 return              # capacity-bound: stay queued
             eng.queue.pop(0)
-            fresh_blocks[0] += need + eng.state_blocks
+            fresh_blocks[0] += need + revive + eng.state_blocks
             if shared:
                 eng.block_mgr.acquire(req.rid, shared)
                 eng.stats["prefix_hits"] += len(shared)
@@ -373,22 +455,83 @@ class Scheduler:
             req.prefilled = end
             req.last_used = self._tick
 
+    # -- speculative decoding ----------------------------------------------
+    def _plan_spec(self, eng, decision: ScheduleDecision,
+                   planned: Dict[int, Prefill],
+                   spec_planned: Dict[int, Verify]):
+        """Plan Draft + Verify for decode-ready slots (opportunistic).
+
+        Per slot, in ordered-action terms: Grow maps the verify write
+        range [T, T+k] (reserve mode already covers it), Cow privatizes
+        every shared block the range touches, then Draft and Verify are
+        appended — so the engine's in-order execution writes the verify
+        chunk only into mapped, private blocks.  Speculation never
+        preempts: if blocks or the prefill-token budget are unavailable,
+        the slot simply takes a plain decode step instead (no Draft/
+        Verify planned), which guarantees speculation composes with —
+        and can only add to — the non-speculative schedule.
+        """
+        if self.spec is None or not getattr(eng, "_spec_ok", False):
+            return
+        cap = self.budget.prefill_tokens
+        width = self.spec.num_draft_tokens + 1
+        for slot in self._decode_ready(eng):
+            req = eng.slot_req[slot]
+            if req is None or slot in planned:
+                continue             # prompt finishes only this step
+            # emitted <= k+1 per verify; clamp so the request can never
+            # exceed max_new (and KV rows stay within its reservation)
+            k_cap = min(self.spec.num_draft_tokens,
+                        req.max_new - len(req.generated) - 1)
+            if k_cap <= 0:
+                continue
+            if cap is not None and decision.prefill_tokens + \
+                    decision.verify_tokens + width > cap:
+                continue             # budget spent: plain decode this step
+            draft = [int(t) for t in self.proposer.propose(req, k_cap)]
+            draft = draft[:k_cap]
+            if not draft:
+                continue             # nothing to guess: plain decode
+            tokens_after = req.cached_tokens + len(draft) + 1
+            need = eng.block_mgr.blocks_for_tokens(tokens_after) - \
+                len(eng.block_mgr.blocks_of(req.rid))
+            if need > 0:
+                if not eng.block_mgr.can_allocate(
+                        need, limit_blocks=eng._effective_blocks):
+                    continue         # tight pool: never evict to speculate
+                eng.block_mgr.allocate(
+                    req.rid, need, limit_blocks=eng._effective_blocks)
+                decision.actions.append(
+                    Grow(slot, eng.block_mgr.blocks_of(req.rid)))
+            if not self._cow_range(eng, decision, slot, req,
+                                   req.cached_tokens,
+                                   req.cached_tokens + len(draft)):
+                continue             # no room to privatize: plain decode
+            decision.actions.append(Draft(slot, req, draft))
+            verify = Verify(slot, req, draft, req.cached_tokens, width)
+            decision.actions.append(verify)
+            decision.verify_tokens += width
+            spec_planned[slot] = verify
+            req.last_used = self._tick
+
     # -- growth / copy-on-write --------------------------------------------
     def _decode_ready(self, eng) -> List[int]:
         return [i for i, r in enumerate(eng.slot_req)
                 if r is not None and r.prefilled >= len(r.prompt)]
 
     def _plan_growth(self, eng, decision: ScheduleDecision,
-                     planned: Dict[int, Prefill]):
+                     planned: Dict[int, Prefill],
+                     spec_planned: Dict[int, Verify]):
         """ondemand mode: every decode-ready slot needs the next token's KV
         row mapped; allocate on block boundaries, evicting by policy when
-        the pool is exhausted."""
+        the pool is exhausted.  Speculating slots were already grown to
+        their full verify range by `_plan_spec`."""
         if eng.cfg.attention_free:
             return                  # no per-token KV rows to map
         for slot in sorted(self._decode_ready(eng),
                            key=lambda i: eng.slot_req[i].rid):
             req = eng.slot_req[slot]
-            if req is None:
+            if req is None or slot in spec_planned:
                 continue
             while eng.slot_req[slot] is req:
                 length = max(req.cached_tokens, req.prefilled)
@@ -408,16 +551,44 @@ class Scheduler:
                     raise RuntimeError(
                         "KV pool smaller than a single request; raise "
                         "kv_budget_bytes or block_size")
-                self._plan_swap_out(eng, decision, victim, planned)
+                self._plan_swap_out(eng, decision, victim, planned,
+                                    spec_planned)
+
+    def _cow_range(self, eng, decision: ScheduleDecision, slot: int, req,
+                   lo_tok: int, hi_tok: int) -> bool:
+        """Privatize every shared block rows [lo_tok, hi_tok] land in,
+        WITHOUT evicting (used by `_plan_spec`).  Returns False when the
+        pool can't supply a copy target; already-planned Cows stay (a
+        privatized block is correct either way — plain decode reaches it
+        a few steps later)."""
+        for j in range(lo_tok // eng.block_size,
+                       hi_tok // eng.block_size + 1):
+            ids = eng.block_mgr.blocks_of(req.rid)
+            if j >= len(ids) or not eng.block_mgr.is_shared(ids[j]):
+                continue
+            try:
+                res = eng.block_mgr.cow(
+                    req.rid, j, limit_blocks=eng._effective_blocks)
+            except NoFreeBlocksError:
+                return False
+            if res is not None:
+                old, new = res
+                decision.actions.append(
+                    Cow(slot, old, new, eng.block_mgr.blocks_of(req.rid)))
+                eng.stats["cow_copies"] += 1
+        return True
 
     def _plan_cow(self, eng, decision: ScheduleDecision,
-                  planned: Dict[int, Prefill]):
+                  planned: Dict[int, Prefill],
+                  spec_planned: Dict[int, Verify]):
         """Privatize any shared block the next decode write would land in
-        (the scatter would corrupt every other holder)."""
+        (the scatter would corrupt every other holder).  Speculating
+        slots already privatized their whole verify write range in
+        `_plan_spec` (ordered before their Verify)."""
         for slot in self._decode_ready(eng):
             req = eng.slot_req[slot]
-            if req is None:          # evicted by an earlier slot's CoW
-                continue
+            if req is None or slot in spec_planned:
+                continue             # evicted by an earlier slot's CoW
             ids = eng.block_mgr.blocks_of(req.rid)
             j = max(req.cached_tokens, req.prefilled) // eng.block_size
             if j >= len(ids) or not eng.block_mgr.is_shared(ids[j]):
@@ -431,7 +602,8 @@ class Scheduler:
                     victim = self._select_victim(eng, exclude=(slot,))
                     if victim is None:
                         raise
-                    self._plan_swap_out(eng, decision, victim, planned)
+                    self._plan_swap_out(eng, decision, victim, planned,
+                                        spec_planned)
             if res is None:          # an eviction above dropped the refcount
                 continue
             old, new = res
@@ -442,11 +614,13 @@ class Scheduler:
     # -- one step -----------------------------------------------------------
     def step(self, eng, *, admit_only: bool = False) -> ScheduleDecision:
         """Plan one engine step.  Order mirrors the pre-scheduler loop:
-        budget preemption, admission, prefill chunks, then (ondemand)
-        growth + a second admission pass, CoW, and the decode set."""
+        budget preemption, admission, prefill chunks, then speculation
+        planning, (ondemand) growth + a second admission pass, CoW, and
+        the decode set (decode-ready slots minus speculating ones)."""
         self._tick += 1
         decision = ScheduleDecision()
         planned: Dict[int, Prefill] = {}
+        spec_planned: Dict[int, Verify] = {}
         fresh_blocks = [0]
 
         # over the (possibly shrunk) budget: evict by policy until legal
@@ -454,20 +628,22 @@ class Scheduler:
             victim = self._select_victim(eng)
             if victim is None:
                 break
-            self._plan_swap_out(eng, decision, victim, planned)
+            self._plan_swap_out(eng, decision, victim, planned, spec_planned)
 
         self._plan_admissions(eng, decision, fresh_blocks)
         self._plan_prefills(eng, decision, planned)
         if admit_only:
             return decision
 
+        self._plan_spec(eng, decision, planned, spec_planned)
         if eng.admission == "ondemand":
-            self._plan_growth(eng, decision, planned)
+            self._plan_growth(eng, decision, planned, spec_planned)
             self._plan_admissions(eng, decision, fresh_blocks)
             self._plan_prefills(eng, decision, planned)
-        self._plan_cow(eng, decision, planned)
+        self._plan_cow(eng, decision, planned, spec_planned)
 
-        decision.decode_slots = self._decode_ready(eng)
+        decision.decode_slots = [i for i in self._decode_ready(eng)
+                                 if i not in spec_planned]
         for i in decision.decode_slots:
             eng.slot_req[i].last_used = self._tick
         return decision

@@ -463,11 +463,11 @@ def test_preemption_never_evicts_shared_blocks(setup):
     sched = eng.scheduler
     orig_plan_swap_out = sched._plan_swap_out
 
-    def checked_plan_swap_out(e, decision, slot, planned):
+    def checked_plan_swap_out(e, decision, slot, planned, *args, **kw):
         req = e.slot_req[slot]
         shared = [b for b in e.block_mgr.blocks_of(req.rid)
                   if e.block_mgr.is_shared(b)]
-        orig_plan_swap_out(e, decision, slot, planned)
+        orig_plan_swap_out(e, decision, slot, planned, *args, **kw)
         for b in shared:                          # still held by someone else
             assert e.block_mgr.refcount(b) >= 1
             assert b not in e.block_mgr._free

@@ -1,12 +1,13 @@
 """Continuous-batching scheduler tests: chunked prefill, eviction-policy
 registry, decision cost accounting, the paged-kernel decode path, and a
 hypothesis property over random arrival/length/policy/layer-pattern/
-kernel-config traces (pure attention and attn+ssm hybrid; jnp fallback,
-paged decode kernel, and the full decode+prefill kernel hot path)
-asserting the scheduler invariants (no request lost or duplicated, the
-block budget is never exceeded, completed tokens are bit-exact vs a
-no-preemption oracle running the SAME numerics path — preemption and
-chunking never change hot-path tokens).
+kernel-config/speculation traces (pure attention and attn+ssm hybrid;
+jnp fallback, paged decode kernel, and the full decode+prefill kernel
+hot path; speculative decoding on or off) asserting the scheduler
+invariants (no request lost or duplicated, the block budget is never
+exceeded, completed tokens are bit-exact vs a NON-SPECULATIVE
+no-preemption oracle running the same numerics path — preemption,
+chunking and speculation never change hot-path tokens).
 """
 import jax
 import jax.numpy as jnp
@@ -22,6 +23,7 @@ from repro.serving import (
     EVICTION_POLICIES,
     KernelConfig,
     ServingEngine,
+    SpecConfig,
     StepBudget,
     kv_bytes_per_token,
     request_state_bytes,
@@ -227,6 +229,36 @@ def test_cow_eviction_mid_loop_skips_evicted_slot(setup):
     assert got[0] == got[1]                       # same prompt, greedy
 
 
+def test_revived_blocks_count_against_admission_throttle(setup):
+    """Evictor-cache revivals are real allocations: a prompt whose prefix
+    blocks sit in the evictor cache must spend the `StepBudget.new_blocks`
+    admission throttle on them like fresh blocks (regression: `revive`
+    was omitted from the budget check AND the running `fresh_blocks`
+    count, so cache-warm admissions bypassed the throttle entirely)."""
+    cfg, params = setup
+    from repro.serving.scheduler import Admit
+    prompt = _prompt(5, 8)                       # 2 full blocks of 4
+    eng = ServingEngine(params, cfg, BF16_ROLLOUT, max_slots=4,
+                        max_seq_len=32, eos_id=None,
+                        step_budget=StepBudget(new_blocks=4))
+    eng.submit(prompt, max_new=8, rid=0)         # reserve = 4 blocks
+    rep = eng.run(max_steps=60)
+    assert len(rep.completed) == 1
+    assert eng.block_mgr.blocks_in_use == 0
+    # rid 0's two full prompt blocks now sit in the evictor cache; the
+    # next same-prompt admission revives them (2) + allocates fresh (2),
+    # spending the whole 4-block budget — the second admission must wait
+    eng.submit(prompt, max_new=8, rid=1)
+    eng.submit(prompt, max_new=8, rid=2)
+    d = eng.scheduler.step(eng)
+    admits = [a for a in d.actions if isinstance(a, Admit)]
+    assert len(admits) == 1, \
+        "revived blocks must spend the admission block budget"
+    eng.execute(d)
+    eng.run(max_steps=120)
+    assert {r.rid for r in eng.done} == {0, 1, 2}
+
+
 # ---------------------------------------------------------------------------
 # paged Pallas kernel on the serving decode path (interpret-mode parity)
 # ---------------------------------------------------------------------------
@@ -336,18 +368,26 @@ def test_scheduler_invariants_random_traces(zoo):
         budget_blocks=st.integers(5, 10),
         pattern=st.sampled_from(["attn", "hybrid"]),
         kernel=st.sampled_from(["off", "decode", "all"]),
+        spec_on=st.booleans(),
     )
-    def run(reqs, policy, admission, chunk, budget_blocks, pattern, kernel):
+    def run(reqs, policy, admission, chunk, budget_blocks, pattern, kernel,
+            spec_on):
         cfg, params = zoo[pattern]
         per = kv_bytes_per_token(cfg, BF16_ROLLOUT)
         # KV pressure drives the preemptions; the per-slot recurrent
         # state (hybrid) always fits so admission cannot deadlock
         budget = per * 4 * budget_blocks + \
             3 * request_state_bytes(cfg, BF16_ROLLOUT)
+        # speculation is opportunistic and must compose with everything
+        # drawn above without changing a single greedy token (attention-
+        # only models only: SSM state cannot be rewound)
+        spec = SpecConfig(num_draft_tokens=3) \
+            if spec_on and pattern == "attn" else None
         eng = ServingEngine(
             params, cfg, BF16_ROLLOUT, max_slots=3, max_seq_len=32,
             kv_budget_bytes=budget, admission=admission,
-            eviction=policy, prefill_chunk=chunk, kernel_config=kernel)
+            eviction=policy, prefill_chunk=chunk, kernel_config=kernel,
+            spec=spec)
         submitted = {}
         by_arrival = sorted(enumerate(reqs), key=lambda kv: kv[1][2])
         idx = 0

@@ -1,0 +1,354 @@
+"""Speculative decoding: proposer, rejection sampler, and the serving
+engine's Draft/Verify path.
+
+Three layers of exactness guarantees, cheapest first:
+
+  * `rejection_sample` in isolation — greedy output equals the argmax
+    chain token-for-token, and at temperature > 0 the emitted-token
+    distribution is statistically indistinguishable (chi-square) from
+    sampling the target distribution directly, per position.
+  * the sampler plumbing the engine shares with the rollout path —
+    top-k truncation keeps EXACTLY k tokens (ties broken by index), and
+    `top_k` actually reaches every serving `sample()` call (the
+    silently-dropped-kwarg regression).
+  * the engine end-to-end — greedy completions with speculation on are
+    bit-exact vs the non-speculative engine, including under forced
+    mid-run preemption (the KV-rewind + swap-trim contract), and a
+    capacity-stuck trace reports `stalled` instead of fake success.
+"""
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import tiny_serving_config as _cfg
+from repro.core import BF16_ROLLOUT, FP8_KV_ONLY_ROLLOUT
+from repro.core.sampling import rejection_sample, sample, sampling_logits
+from repro.data import tasks
+from repro.models import init_params
+from repro.rl import SamplerConfig, generate, sync_policy_weights
+from repro.serving import (
+    NGramProposer,
+    ServingEngine,
+    SpecConfig,
+    kv_bytes_per_token,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = _cfg()
+    params = init_params(cfg, jax.random.key(0))
+    return cfg, params
+
+
+def _req(prompt, generated=()):
+    """Duck-typed stand-in for serving.Request (the proposer reads only
+    .prompt and .generated)."""
+    return types.SimpleNamespace(prompt=list(prompt),
+                                 generated=list(generated))
+
+
+def _spec_prompts(n, seed=0, pattern_len=4, repeats=3):
+    """Repetitive-suffix prompts the n-gram proposer locks onto."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n):
+        pat = rng.integers(4, 19, size=pattern_len)
+        out.append(np.concatenate(
+            [[tasks.BOS], np.tile(pat, repeats)]).astype(np.int32))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# n-gram proposer
+# ---------------------------------------------------------------------------
+
+def test_ngram_proposer_continues_repeated_pattern():
+    p = NGramProposer(SpecConfig(num_draft_tokens=3))
+    # suffix [5,6,7] recurs at the start: continuation follows it
+    assert p.propose(_req([1, 5, 6, 7, 5, 6, 7]), 3) == [5, 6, 7]
+
+
+def test_ngram_proposer_self_extends_constant_run():
+    # greedy decode's degenerate case: a constant-token run.  The only
+    # match overlaps the suffix end and yields 1 token per lookup; the
+    # self-extending re-match must still fill all k drafts.
+    p = NGramProposer(SpecConfig(num_draft_tokens=4))
+    assert p.propose(_req([1, 9], [9, 9]), 4) == [9, 9, 9, 9]
+
+
+def test_ngram_proposer_extends_through_cycle():
+    p = NGramProposer(SpecConfig(num_draft_tokens=5))
+    # context ends mid-cycle [4,5,6]; drafts keep cycling
+    assert p.propose(_req([1, 4, 5, 6], [4, 5, 6]), 5) == [4, 5, 6, 4, 5]
+
+
+def test_ngram_proposer_no_match_returns_empty():
+    p = NGramProposer(SpecConfig())
+    assert p.propose(_req([1, 2, 3, 4, 5]), 4) == []
+
+
+# ---------------------------------------------------------------------------
+# rejection sampling: greedy = argmax chain, bit-exact
+# ---------------------------------------------------------------------------
+
+def test_rejection_sample_greedy_matches_argmax_chain():
+    rng = np.random.default_rng(0)
+    for trial in range(25):
+        k = int(rng.integers(1, 5))
+        logits = rng.normal(size=(k + 1, 12)).astype(np.float32)
+        drafts = rng.integers(0, 12, size=k)
+        greedy = logits.argmax(-1)
+        # expected: accepted argmax prefix + corrected token on first
+        # mismatch, or the bonus token when every draft matches
+        exp, exp_acc = [], 0
+        for i in range(k):
+            exp.append(int(greedy[i]))
+            if int(drafts[i]) != int(greedy[i]):
+                break
+            exp_acc += 1
+        else:
+            exp.append(int(greedy[k]))
+        toks, n_acc, logps = rejection_sample(
+            jnp.asarray(logits), list(drafts), jax.random.key(trial), 0.0)
+        assert (toks, n_acc) == (exp, exp_acc)
+        # logps follow the untempered-softmax greedy convention of sample()
+        ref = jax.nn.log_softmax(jnp.asarray(logits), -1)
+        for i, t in enumerate(toks):
+            assert logps[i] == pytest.approx(float(ref[i, t]))
+
+
+# ---------------------------------------------------------------------------
+# rejection sampling: statistical exactness at temperature > 0
+# ---------------------------------------------------------------------------
+
+def _chi2(counts, probs, n):
+    """Pearson chi-square of `counts` against expected n*probs (over the
+    support only)."""
+    stat = 0.0
+    for t, p in enumerate(probs):
+        if p > 1e-9:
+            stat += (counts.get(t, 0) - n * p) ** 2 / (n * p)
+    return stat
+
+
+def test_rejection_sample_output_distribution_matches_target():
+    """The emitted-token distribution at every position equals sampling
+    the target distribution directly (the Leviathan one-hot-q identity:
+    p(d) + (1-p(d)) * p(x)/(1-p(d)) = p(x)) — accept/reject/resample
+    must leave NO statistical fingerprint.  Position i is compared
+    conditionally on reaching it (draft prefix accepted)."""
+    temperature, top_k, v, n = 0.7, 5, 12, 1500
+    rng = np.random.default_rng(7)
+    logits = jnp.asarray(rng.normal(size=(3, v)), jnp.float32)
+    probs = np.asarray(
+        jax.nn.softmax(sampling_logits(logits, temperature, top_k), -1))
+    # draft 0 = mode of row 0 (often accepted -> position 1 well sampled);
+    # draft 1 = a mid-probability token (exercises both branches)
+    d0 = int(probs[0].argmax())
+    d1 = int(np.argsort(probs[1])[-3])
+    pos_counts = [{}, {}]
+    reached = [0, 0]
+    for s in range(n):
+        toks, n_acc, _ = rejection_sample(
+            logits, [d0, d1], jax.random.key(s), temperature, top_k)
+        for i in range(min(len(toks), 2)):
+            pos_counts[i][toks[i]] = pos_counts[i].get(toks[i], 0) + 1
+            reached[i] += 1
+        # support respected: only top-k tokens can ever be emitted
+        for i, t in enumerate(toks):
+            assert probs[i, t] > 0.0
+    # position 0 is unconditional; position 1 is conditioned on accepting
+    # d0, which leaves the row-1 target distribution untouched
+    for i in range(2):
+        assert reached[i] > 400
+        stat = _chi2(pos_counts[i], probs[i], reached[i])
+        # df = top_k - 1 = 4; chi2_{0.999}(4) = 18.5 — loose enough to
+        # be seed-stable, tight enough to catch a biased sampler
+        assert stat < 18.5, (i, stat, pos_counts[i])
+
+
+def test_rejection_sample_rejects_unlikely_drafts():
+    """A draft token OUTSIDE the top-k support is always rejected and
+    never emitted at its position."""
+    temperature, top_k, v = 0.7, 3, 10
+    logits = jnp.asarray(np.linspace(3.0, 0.0, v)[None, :].repeat(2, 0),
+                         jnp.float32)
+    dead = v - 1          # lowest logit: truncated out of the support
+    for s in range(40):
+        toks, n_acc, _ = rejection_sample(
+            logits, [dead], jax.random.key(s), temperature, top_k)
+        assert n_acc == 0 and toks[0] != dead and toks[0] < top_k
+
+
+# ---------------------------------------------------------------------------
+# top-k truncation: exactly k survivors (satellite: tie handling)
+# ---------------------------------------------------------------------------
+
+def test_top_k_keeps_exactly_k_under_ties():
+    # three tokens tied at the k-th logit: `scaled < thresh` kept them
+    # all; the fixed mask must keep exactly k, lower index first
+    logits = jnp.array([3.0, 2.0, 2.0, 2.0, 1.0])
+    out = np.asarray(sampling_logits(logits, 1.0, top_k=2))
+    kept = np.flatnonzero(out > -1e29)
+    np.testing.assert_array_equal(kept, [0, 1])
+    p = np.asarray(jax.nn.softmax(jnp.asarray(out)))
+    assert p[kept].sum() == pytest.approx(1.0)
+
+
+def test_top_k_exact_support_property():
+    """Over random heavily-tied logits: the truncated support always has
+    exactly k tokens, matches the deterministic (-value, index) order,
+    renormalizes to 1, and sampling never leaves it."""
+    rng = np.random.default_rng(3)
+    v = 8
+    for trial in range(30):
+        k = int(rng.integers(1, v + 1))
+        logits = jnp.asarray(rng.integers(0, 3, size=v), jnp.float32)
+        out = np.asarray(sampling_logits(logits, 1.0, top_k=k))
+        kept = np.flatnonzero(out > -1e29)
+        assert len(kept) == k, (trial, k, kept)
+        order = sorted(range(v), key=lambda i: (-float(logits[i]), i))
+        assert sorted(kept) == sorted(order[:k])
+        assert np.asarray(jax.nn.softmax(jnp.asarray(out)))[kept].sum() \
+            == pytest.approx(1.0)
+        tok, _ = sample(logits, jax.random.key(trial), 1.0, top_k=k)
+        assert int(tok) in kept
+
+
+# ---------------------------------------------------------------------------
+# top_k threading (satellite: serving dropped the kwarg)
+# ---------------------------------------------------------------------------
+
+def test_serving_threads_top_k_to_sampler(setup):
+    """temperature=1, top_k=1 IS greedy (top-1 truncation leaves only
+    the argmax).  The pre-fix engine dropped `top_k` at all three
+    sample() call sites, so this ran full-softmax sampling instead."""
+    cfg, params = setup
+    prompts = _spec_prompts(3, seed=2)
+    outs = {}
+    for name, kw in (("greedy", dict(temperature=0.0)),
+                     ("top1", dict(temperature=1.0, top_k=1))):
+        eng = ServingEngine(params, cfg, BF16_ROLLOUT, max_slots=4,
+                            max_seq_len=32, prefill_chunk=4, eos_id=None,
+                            **kw)
+        for i, p in enumerate(prompts):
+            eng.submit(p, max_new=6, rid=i)
+        rep = eng.run(max_steps=200)
+        assert len(rep.completed) == len(prompts) and not rep.stalled
+        outs[name] = {r.rid: list(r.generated) for r in rep.completed}
+    assert outs["top1"] == outs["greedy"]
+
+
+def test_rollout_vs_serving_top_k_parity(setup):
+    """Rollout and serving share one sampler contract: with identical
+    sampler settings (here top_k=1, where the truncated distribution is
+    deterministic) both engines emit the same tokens for the same
+    prompt."""
+    cfg, params = setup
+    prompt = np.array([tasks.BOS, 5, 6, 7, 8], np.int32)
+    t = generate(params, jnp.asarray(prompt)[None, :],
+                 jnp.array([len(prompt)]), jax.random.key(0), cfg,
+                 BF16_ROLLOUT,
+                 SamplerConfig(max_new_tokens=6, temperature=1.0, top_k=1))
+    n = int(t.response_lengths[0])
+    roll_toks = [int(x) for x in np.asarray(t.response_tokens)[0, :n]]
+
+    eng = ServingEngine(params, cfg, BF16_ROLLOUT, max_slots=2,
+                        max_seq_len=32, temperature=1.0, top_k=1)
+    eng.submit(prompt, max_new=6, rid=0)
+    rep = eng.run(max_steps=100)
+    assert list(rep.completed[0].generated) == roll_toks
+
+
+# ---------------------------------------------------------------------------
+# engine end-to-end: speculation is bit-exact and actually speculates
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("precision", [BF16_ROLLOUT, FP8_KV_ONLY_ROLLOUT],
+                         ids=["bf16", "fp8"])
+def test_spec_decode_greedy_bit_exact_vs_plain(setup, precision):
+    cfg, params = setup
+    params_r = params
+    if precision.kv_quantized:
+        params_r, _ = sync_policy_weights(params, precision)
+    prompts = _spec_prompts(3, seed=0)
+    outs = {}
+    for spec in (None, SpecConfig(num_draft_tokens=4)):
+        eng = ServingEngine(params_r, cfg, precision, max_slots=4,
+                            max_seq_len=48, prefill_chunk=4, eos_id=None,
+                            spec=spec)
+        for i, p in enumerate(prompts):
+            eng.submit(p, max_new=8, rid=i)
+        rep = eng.run(max_steps=300)
+        assert len(rep.completed) == len(prompts) and not rep.stalled
+        outs[spec is not None] = \
+            {r.rid: list(r.generated) for r in rep.completed}
+        if spec is not None:
+            # the repetitive trace must actually speculate, and win
+            assert rep.spec_steps > 0 and rep.accepted_tokens > 0
+            assert rep.spec_tokens_per_step > 1.0
+        assert eng.block_mgr.blocks_in_use == 0
+    assert outs[True] == outs[False]
+
+
+def test_spec_decode_rewind_survives_forced_preemption(setup):
+    """Preempting slots that have speculated (rewound verifies leave
+    them owning blocks past cached_tokens) must swap out, resume, and
+    finish bit-exact — the swap snapshot is trimmed to the rewound
+    length and re-admission restores the exact pending position."""
+    cfg, params = setup
+    prompts = _spec_prompts(4, seed=1)
+
+    def serve(shrink):
+        eng = ServingEngine(params, cfg, BF16_ROLLOUT, max_slots=4,
+                            max_seq_len=48, prefill_chunk=4, eos_id=None,
+                            admission="ondemand",
+                            spec=SpecConfig(num_draft_tokens=4))
+        for i, p in enumerate(prompts):
+            eng.submit(p, max_new=10, rid=i)
+        if shrink:
+            # let speculation start, then halve the budget mid-flight so
+            # actively-speculating slots get evicted
+            for _ in range(40):
+                eng.step()
+                if eng.stats["spec_steps"] >= 1:
+                    break
+            assert eng.stats["spec_steps"] >= 1
+            # 12 blocks: enough for any single request (6 blocks + spec
+            # growth) but nowhere near 4 concurrent ones
+            eng.budget_tokens = 12 * eng.block_mgr.block_size
+        rep = eng.run(max_steps=400)
+        assert len(rep.completed) == len(prompts) and not rep.stalled
+        assert eng.block_mgr.blocks_in_use == 0
+        return rep
+
+    ref = serve(shrink=False)
+    rep = serve(shrink=True)
+    assert rep.preemptions >= 1          # the shrink actually bit
+    assert rep.spec_steps >= 1
+    assert {r.rid: list(r.generated) for r in rep.completed} == \
+        {r.rid: list(r.generated) for r in ref.completed}
+
+
+# ---------------------------------------------------------------------------
+# stalled reporting (satellite: partial report looked like success)
+# ---------------------------------------------------------------------------
+
+def test_run_surfaces_capacity_stuck_as_stalled(setup):
+    cfg, params = setup
+    per = kv_bytes_per_token(cfg, BF16_ROLLOUT)
+    # one block of budget: reserve admission can never place the request
+    eng = ServingEngine(params, cfg, BF16_ROLLOUT, max_slots=2,
+                        max_seq_len=32, kv_budget_bytes=per * 4)
+    eng.submit(np.array([tasks.BOS, 5, 6, 7, 8, 9, 10, 11], np.int32),
+               max_new=8, rid=0)
+    rep = eng.run(max_steps=50)
+    assert rep.stalled
+    assert len(rep.completed) == 0
+    assert len(eng.queue) == 1           # the request is still waiting

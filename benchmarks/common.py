@@ -1,6 +1,33 @@
-"""Shared benchmark utilities."""
+"""Shared benchmark utilities + the CI bench-trend baseline harness.
+
+`benchmarks/baselines.json` pins a headline metric set per benchmark:
+
+    {
+      "<benchmark>": {
+        "<dotted.metric.path>": {
+          "value": 2.0,        # the committed number
+          "tol": 0.15,         # relative tolerance band
+          "direction": "higher"  # which way is better
+        }
+      }
+    }
+
+Every gated benchmark accepts ``--baseline benchmarks/baselines.json``
+and fails (exit 1) when a metric regresses beyond its band; CI also runs
+the aggregate pass over all uploaded ``bench-*.json`` artifacts:
+
+    python -m benchmarks.common --baseline benchmarks/baselines.json \\
+        bench-*.json
+
+which writes a trend table to ``$GITHUB_STEP_SUMMARY`` when set.  A
+legitimate improvement that moves a number outside its band must update
+``baselines.json`` in the same PR — that is the trend memory.
+"""
 from __future__ import annotations
 
+import json
+import os
+import sys
 import time
 
 import jax
@@ -21,3 +48,169 @@ def time_call(fn, *args, warmup: int = 1, iters: int = 3):
 
 def csv_row(name: str, us_per_call: float, derived: str) -> str:
     return f"{name},{us_per_call:.1f},{derived}"
+
+
+# ---------------------------------------------------------------------------
+# baseline comparison
+# ---------------------------------------------------------------------------
+
+def bench_name_from_path(path: str) -> str:
+    """bench-kernel-hotpath.json -> kernel_hotpath (artifact file names
+    use either hyphens or underscores; baselines.json keys use the
+    module name)."""
+    base = os.path.basename(path)
+    if base.endswith(".json"):
+        base = base[: -len(".json")]
+    if base.startswith("bench-"):
+        base = base[len("bench-"):]
+    return base.replace("-", "_")
+
+
+def lookup_metric(results: dict, dotted: str):
+    """Resolve 'a.b.c' into nested dicts; returns None when absent."""
+    node = results
+    for part in dotted.split("."):
+        if not isinstance(node, dict) or part not in node:
+            return None
+        node = node[part]
+    return node if isinstance(node, (int, float)) \
+        and not isinstance(node, bool) else None
+
+
+def compare_metrics(bench: str, results: dict, baselines: dict) -> list:
+    """Rows of {bench, metric, baseline, current, delta, status}.
+
+    status: ok | improved | REGRESSED | MISSING.  A baseline metric
+    whose path vanished from the results is MISSING (red): a benchmark
+    silently dropping its headline metric is exactly the drift this
+    harness exists to catch.
+    """
+    rows = []
+    spec = baselines.get(bench)
+    if spec is None:
+        rows.append(dict(bench=bench, metric="-", baseline=None,
+                         current=None, delta=0.0, status="MISSING",
+                         note=f"no baselines entry for '{bench}' — add "
+                              "one to benchmarks/baselines.json"))
+        return rows
+    for metric, band in spec.items():
+        base, tol = float(band["value"]), float(band.get("tol", 0.1))
+        direction = band.get("direction", "higher")
+        cur = lookup_metric(results, metric)
+        if cur is None:
+            rows.append(dict(bench=bench, metric=metric, baseline=base,
+                             current=None, delta=0.0, status="MISSING",
+                             note="metric path absent from results"))
+            continue
+        cur = float(cur)
+        delta = (cur - base) / base if base else 0.0
+        if direction == "higher":
+            regressed, improved = cur < base * (1 - tol), delta > 0
+        else:
+            regressed, improved = cur > base * (1 + tol), delta < 0
+        status = "REGRESSED" if regressed else (
+            "improved" if improved else "ok")
+        rows.append(dict(bench=bench, metric=metric, baseline=base,
+                         current=cur, delta=delta, status=status, note=""))
+    return rows
+
+
+def render_table(rows: list) -> str:
+    """GitHub-flavored markdown trend table."""
+    out = ["| benchmark | metric | baseline | current | delta | status |",
+           "|---|---|---|---|---|---|"]
+    for r in rows:
+        cur = "—" if r["current"] is None else f"{r['current']:.4g}"
+        base = "—" if r["baseline"] is None else f"{r['baseline']:.4g}"
+        mark = {"REGRESSED": "❌", "MISSING": "❌",
+                "improved": "📈"}.get(r["status"], "✅")
+        note = f" ({r['note']})" if r.get("note") else ""
+        out.append(f"| {r['bench']} | {r['metric']} | {base} | {cur} "
+                   f"| {r['delta']:+.1%} | {mark} {r['status']}{note} |")
+    return "\n".join(out)
+
+
+def check_baselines(bench: str, results: dict, baseline_path: str,
+                    *, exit_on_fail: bool = True) -> list:
+    """Single-benchmark entry point (the shared --baseline flag): print
+    the trend rows, exit 1 on regression/missing."""
+    with open(baseline_path) as f:
+        baselines = json.load(f)
+    rows = compare_metrics(bench, results, baselines)
+    print(render_table(rows))
+    bad = [r for r in rows if r["status"] in ("REGRESSED", "MISSING")]
+    if bad and exit_on_fail:
+        print(f"# {len(bad)} baseline check(s) failed for {bench}",
+              file=sys.stderr)
+        raise SystemExit(1)
+    return rows
+
+
+def bench_cli(bench: str, main_fn) -> None:
+    """Standard benchmark CLI: --quick / --json / --check / --baseline.
+
+    Every gated benchmark's ``__main__`` goes through here so the flag
+    surface stays uniform (the CI drift-guard test keys on it).
+    `main_fn(quick=..., json_path=..., run_check=...)` must return its
+    JSON-shaped results dict — the same structure ``--json`` writes —
+    for --baseline to resolve dotted metric paths against.
+    """
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller workload (what benchmarks.run uses)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write machine-readable results as JSON")
+    ap.add_argument("--check", action="store_true",
+                    help="assert this benchmark's CI gates")
+    ap.add_argument("--baseline", metavar="PATH",
+                    help="compare headline metrics against the committed "
+                         "baselines (exit 1 beyond tolerance)")
+    args = ap.parse_args()
+    results = main_fn(quick=args.quick, json_path=args.json,
+                      run_check=args.check)
+    if args.baseline:
+        if results is None:
+            raise SystemExit(
+                f"{bench}.main() returned no results to baseline-check")
+        check_baselines(bench, results, args.baseline)
+
+
+def main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(
+        description="Compare bench-*.json results against the committed "
+                    "baselines (the CI bench-trend gate)")
+    ap.add_argument("--baseline", required=True,
+                    help="path to benchmarks/baselines.json")
+    ap.add_argument("results", nargs="+",
+                    help="bench-*.json files to compare")
+    args = ap.parse_args(argv)
+    with open(args.baseline) as f:
+        baselines = json.load(f)
+    rows = []
+    for path in args.results:
+        with open(path) as f:
+            results = json.load(f)
+        rows += compare_metrics(bench_name_from_path(path), results,
+                                baselines)
+    table = render_table(rows)
+    print(table)
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as f:
+            f.write("## Benchmark trend vs baselines\n\n")
+            f.write(table + "\n")
+    bad = [r for r in rows if r["status"] in ("REGRESSED", "MISSING")]
+    if bad:
+        print(f"# {len(bad)} baseline check(s) failed "
+              f"(regression beyond tolerance or missing metric); if a "
+              f"legitimate improvement moved a number, update "
+              f"{args.baseline} in this PR", file=sys.stderr)
+        return 1
+    print(f"# all {len(rows)} baseline checks green")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

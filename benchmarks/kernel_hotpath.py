@@ -338,16 +338,12 @@ def main(quick: bool = False, json_path=None, run_check: bool = False):
         check(results)
         print("# kernel hot-path invariants hold (per-step parity on a "
               "preemption trace; clamped decode <= 0.6x whole-table bytes)")
+    return results
 
 
 if __name__ == "__main__":
-    import argparse
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--quick", action="store_true",
-                    help="smaller trace (what benchmarks.run uses)")
-    ap.add_argument("--json", metavar="PATH",
-                    help="write the results as JSON")
-    ap.add_argument("--check", action="store_true",
-                    help="assert parity + bytes-moved gates (CI)")
-    args = ap.parse_args()
-    main(quick=args.quick, json_path=args.json, run_check=args.check)
+    try:                               # repo-root module mode
+        from benchmarks.common import bench_cli
+    except ImportError:                # script mode (CI bench-smoke)
+        from common import bench_cli
+    bench_cli("kernel_hotpath", main)

@@ -103,16 +103,12 @@ def main(quick: bool = False, json_path=None, run_check: bool = False):
         check(reports)
         print("# fp8-kv capacity invariants hold "
               "(2x tokens, no preemptions, rate >= bf16)")
+    return _json_dict(reports)
 
 
 if __name__ == "__main__":
-    import argparse
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--quick", action="store_true",
-                    help="smaller workload (what benchmarks.run uses)")
-    ap.add_argument("--json", metavar="PATH",
-                    help="write the engine reports as JSON")
-    ap.add_argument("--check", action="store_true",
-                    help="assert the FP8-vs-BF16 capacity invariants (CI)")
-    args = ap.parse_args()
-    main(quick=args.quick, json_path=args.json, run_check=args.check)
+    try:                               # repo-root module mode
+        from benchmarks.common import bench_cli
+    except ImportError:                # script mode (CI bench-smoke)
+        from common import bench_cli
+    bench_cli("kv_capacity", main)

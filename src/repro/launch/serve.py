@@ -22,10 +22,11 @@ from repro.configs import get_config
 from repro.data import tasks
 from repro.launch.train import PRECISIONS
 from repro.models import init_params
-from repro.rl import sync_policy_weights
+from repro.rl import WeightSyncer, sync_policy_weights
 from repro.serving import (
     EVICTION_POLICIES,
     ServingEngine,
+    ServingFrontend,
     SpecConfig,
     StepBudget,
     kv_bytes_per_token,
@@ -82,6 +83,16 @@ def main(argv=None):
                          "free archs whose KV usage is zero")
     ap.add_argument("--shrink-frac", type=float, default=0.5,
                     help="fraction of the budget kept after --shrink-at")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="data-parallel engine replicas behind the "
+                         "streaming front-end (1 = the classic "
+                         "single-engine path)")
+    ap.add_argument("--update-every", type=int, default=None,
+                    help="hot-swap a fresh FP8 weight version into every "
+                         "replica each N front-end steps (simulates the "
+                         "RL trainer's weight pushes; in-flight requests "
+                         "keep running, their tokens carry the version "
+                         "live at each decode step)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.src_pad < 1:
@@ -106,30 +117,80 @@ def main(argv=None):
             + args.slots * state_bytes
     step_budget = StepBudget(prefill_tokens=args.prefill_budget) \
         if args.prefill_budget else None
-    eng = ServingEngine(rollout_params, cfg, precision,
-                        max_slots=args.slots, max_seq_len=64,
-                        kv_budget_bytes=budget, seed=args.seed,
-                        block_size=args.block_size,
-                        admission=args.admission,
-                        eviction=args.eviction,
-                        prefill_chunk=args.prefill_chunk,
-                        step_budget=step_budget,
-                        decode_kernel=args.decode_kernel,
-                        kernel_config=args.kernel_config,
-                        max_src_len=args.src_pad,
-                        spec=SpecConfig(num_draft_tokens=args.spec_k)
-                        if args.spec_k else None)
-    rng = np.random.default_rng(args.seed)
-    for i in range(args.requests):
-        prob = tasks.sample_problem(rng)
-        frames = None
-        if cfg.is_encdec:
-            # synthetic frame embeddings stand in for the audio frontend
-            n = int(rng.integers(min(3, args.src_pad), args.src_pad + 1))
-            frames = tasks.random_frames(args.seed * 1000 + i, n,
-                                         cfg.d_model)
-        eng.submit(prob.prompt_ids, max_new=args.max_new, rid=i,
-                   frames=frames)
+    fleet = args.replicas > 1 or args.update_every is not None
+    if args.replicas < 1:
+        ap.error("--replicas must be >= 1")
+    if fleet and args.shrink_at is not None:
+        ap.error("--shrink-at applies to the single-engine path only")
+
+    def mk_engine(i: int) -> ServingEngine:
+        return ServingEngine(rollout_params, cfg, precision,
+                             max_slots=args.slots, max_seq_len=64,
+                             kv_budget_bytes=budget, seed=args.seed + i,
+                             block_size=args.block_size,
+                             admission=args.admission,
+                             eviction=args.eviction,
+                             prefill_chunk=args.prefill_chunk,
+                             step_budget=step_budget,
+                             decode_kernel=args.decode_kernel,
+                             kernel_config=args.kernel_config,
+                             max_src_len=args.src_pad,
+                             spec=SpecConfig(num_draft_tokens=args.spec_k)
+                             if args.spec_k else None)
+
+    def submit_all(target):
+        rng = np.random.default_rng(args.seed)
+        for i in range(args.requests):
+            prob = tasks.sample_problem(rng)
+            frames = None
+            if cfg.is_encdec:
+                # synthetic frame embeddings stand in for the audio frontend
+                n = int(rng.integers(min(3, args.src_pad),
+                                     args.src_pad + 1))
+                frames = tasks.random_frames(args.seed * 1000 + i, n,
+                                             cfg.d_model)
+            target.submit(prob.prompt_ids, max_new=args.max_new, rid=i,
+                          frames=frames)
+
+    if fleet:
+        frontend = ServingFrontend([mk_engine(i)
+                                    for i in range(args.replicas)])
+        submit_all(frontend)
+        syncer = WeightSyncer(precision)
+        perturb = jax.random.split(jax.random.key(args.seed + 7), 1)[0]
+        steps = 0
+        while frontend.has_work() and steps < 1000:
+            if args.update_every and steps and \
+                    steps % args.update_every == 0:
+                # the RL reality: the trainer's policy moved, requantize
+                # and push.  A small parameter nudge stands in for the
+                # gradient step.
+                perturb, sub = jax.random.split(perturb)
+                params = jax.tree.map(
+                    lambda x: x * (1.0 + 1e-3) if hasattr(x, "dtype")
+                    else x, params)
+                frontend.update_weights(syncer.push(params))
+            frontend.step()
+            steps += 1
+        report = frontend.run(max_steps=1000)  # drain + final accounting
+        versions = sorted({v for o in report.outputs
+                           for v in o.output.versions})
+        print(json.dumps({
+            "replicas": args.replicas,
+            "completed": len(report.outputs),
+            "steps": report.steps,
+            "clock_tokens": report.clock_tokens,
+            "emitted_tokens": report.emitted_tokens,
+            "tokens_per_clock": round(report.tokens_per_clock, 4),
+            "weight_version": report.weight_version,
+            "versions_seen": versions,
+            "stalled": report.stalled,
+            "sync_ms": round(sync_stats.get("sync_ms", 0.0), 2),
+        }, indent=2))
+        return
+
+    eng = mk_engine(0)
+    submit_all(eng)
     if args.shrink_at is not None:
         full = eng.budget_tokens
         for _ in range(args.shrink_at):

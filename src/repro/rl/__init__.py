@@ -6,6 +6,8 @@ from repro.rl.correction import (
     mis_mask,
     mismatch_kl,
     tis_weights,
+    versioned_correction_weights,
+    versioned_mismatch_stats,
 )
 from repro.rl.loss import LossConfig, dapo_token_loss
 from repro.rl.rollout import (
@@ -16,12 +18,19 @@ from repro.rl.rollout import (
     packed_sequences,
 )
 from repro.rl.trainer import RLConfig, RLTrainer
-from repro.rl.weight_sync import sync_policy_weights, weight_quant_error
+from repro.rl.weight_sync import (
+    VersionedWeights,
+    WeightSyncer,
+    sync_policy_weights,
+    weight_quant_error,
+)
 
 __all__ = [
     "correction_weights", "importance_weights", "tis_weights", "mis_mask",
-    "mismatch_kl", "group_advantages", "dynamic_sampling_mask", "LossConfig",
-    "dapo_token_loss", "SamplerConfig", "Trajectory", "generate",
-    "packed_sequences", "gather_response_logps", "RLConfig", "RLTrainer",
-    "sync_policy_weights", "weight_quant_error",
+    "mismatch_kl", "versioned_correction_weights",
+    "versioned_mismatch_stats", "group_advantages", "dynamic_sampling_mask",
+    "LossConfig", "dapo_token_loss", "SamplerConfig", "Trajectory",
+    "generate", "packed_sequences", "gather_response_logps", "RLConfig",
+    "RLTrainer", "sync_policy_weights", "weight_quant_error",
+    "VersionedWeights", "WeightSyncer",
 ]

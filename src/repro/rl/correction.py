@@ -11,6 +11,16 @@ MIS:  token masked unless w in [low, high]
 `mismatch_kl` is the paper's monitoring metric D_KL(pi^FP8 || pi_theta),
 estimated on sampled tokens.  We report both the k1 estimator (unbiased,
 sign-noisy) and the k3 estimator (non-negative, low-variance) and plot k3.
+
+Live-updating fleet: when weights are hot-swapped mid-rollout, one
+response's tokens are sampled from SEVERAL rollout policies (one per
+weight version).  `versioned_correction_weights` corrects per token
+against the version that actually sampled it — raw ratios are
+self-normalized *within* each version group (the AIS move: each version
+is its own proposal distribution, so each gets its own normalizer)
+before the configured TIS clip / MIS band is applied.  With a single
+version it degenerates to the plain `correction_weights` path (up to
+the optional normalization).
 """
 from __future__ import annotations
 
@@ -59,6 +69,67 @@ def correction_weights(
     return jax.lax.stop_gradient(w)
 
 
+def versioned_correction_weights(
+    logp_train: jax.Array,
+    logp_rollout: jax.Array,
+    token_versions: jax.Array,
+    mask: jax.Array,
+    precision: PrecisionConfig,
+    *,
+    num_versions: int,
+    normalize: bool = True,
+) -> jax.Array:
+    """Version-aware token-level TIS/MIS for rollouts spanning hot-swaps.
+
+    Each token's raw ratio w = pi_theta / pi^FP8_{v(t)} already uses the
+    right denominator (the engine records `logp_rollout` under the
+    weights live at that token's decode step), so the per-version work
+    is the *normalization*: with `normalize=True`, ratios are divided by
+    their masked mean within each version group, the self-normalized-IS
+    estimator applied per proposal distribution.  Tokens from a stale
+    version whose policy has drifted far (systematically large ratios)
+    are recentered instead of dominating the batch.  The configured
+    TIS clip / MIS band then applies to the normalized ratios.
+
+    `num_versions` must be static (one-hot width under jit): pass an
+    upper bound, e.g. `WeightSyncer.version + 1`.  `token_versions`
+    outside [0, num_versions) contribute nothing to any normalizer and
+    get weight from the raw ratio only.
+
+    Returns stop-gradient weights shaped like `logp_train`.
+    """
+    mode = precision.correction
+    if mode == RolloutCorrection.NONE:
+        return jnp.ones_like(logp_train)
+    w = importance_weights(logp_train, logp_rollout)
+    if normalize:
+        # (..., T, V) one-hot membership, zeroed outside the mask
+        onehot = (token_versions[..., None]
+                  == jnp.arange(num_versions)).astype(jnp.float32)
+        onehot = onehot * mask[..., None]
+        # masked mean ratio per version over ALL leading axes: the
+        # normalizer is a batch statistic, as in self-normalized IS
+        flat_oh = onehot.reshape(-1, num_versions)
+        flat_w = w.reshape(-1)
+        denom = jnp.maximum(flat_oh.sum(axis=0), 1.0)
+        mean_w = (flat_oh * flat_w[:, None]).sum(axis=0) / denom
+        # empty versions: normalizer 1 (leave ratios untouched)
+        mean_w = jnp.where(flat_oh.sum(axis=0) > 0.0, mean_w, 1.0)
+        norm = (onehot * mean_w).sum(axis=-1)
+        norm = jnp.where(norm > 0.0, norm, 1.0)
+        w = w / norm
+    if mode == RolloutCorrection.TIS:
+        w = jnp.minimum(w, precision.tis_clip)
+    elif mode == RolloutCorrection.MIS:
+        # same contract as `mis_mask`: keep-or-drop on the (normalized)
+        # ratio, weight 1 inside the band
+        w = jnp.logical_and(w >= precision.mis_low,
+                            w <= precision.mis_high).astype(jnp.float32)
+    else:  # pragma: no cover
+        raise ValueError(mode)
+    return jax.lax.stop_gradient(w)
+
+
 # ---------------------------------------------------------------------------
 # mismatch monitoring
 # ---------------------------------------------------------------------------
@@ -79,3 +150,27 @@ def mismatch_kl(logp_rollout: jax.Array, logp_train: jax.Array,
     return {"mismatch_kl_k1": k1, "mismatch_kl": k3,
             "is_weight_mean": (r * mask).sum() / n,
             "is_weight_max": jnp.max(r * mask)}
+
+
+def versioned_mismatch_stats(logp_rollout: jax.Array, logp_train: jax.Array,
+                             token_versions: jax.Array, mask: jax.Array,
+                             *, num_versions: int) -> dict:
+    """Per-weight-version mismatch monitoring for live-updated rollouts.
+
+    Returns arrays of shape (num_versions,): token counts, k3 KL, and
+    mean raw IS ratio per version.  Stale versions drifting from
+    pi_theta show up as a rising k3 tail — the signal that the update
+    cadence is too slow for the clip to absorb.
+    """
+    onehot = (token_versions[..., None]
+              == jnp.arange(num_versions)).astype(jnp.float32)
+    onehot = (onehot * mask[..., None]).reshape(-1, num_versions)
+    log_r = (logp_train - logp_rollout).reshape(-1)
+    r = jnp.exp(jnp.clip(log_r, -20.0, 20.0))
+    k3_tok = (r - 1.0) - log_r
+    n = jnp.maximum(onehot.sum(axis=0), 1.0)
+    return {
+        "tokens_per_version": onehot.sum(axis=0),
+        "mismatch_kl_per_version": (onehot * k3_tok[:, None]).sum(axis=0) / n,
+        "is_weight_mean_per_version": (onehot * r[:, None]).sum(axis=0) / n,
+    }

@@ -18,7 +18,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.precision import PrecisionConfig
-from repro.rl.correction import correction_weights, mismatch_kl
+from repro.rl.correction import (
+    correction_weights,
+    mismatch_kl,
+    versioned_correction_weights,
+)
 
 
 class LossConfig(NamedTuple):
@@ -37,6 +41,8 @@ def dapo_token_loss(
     precision: PrecisionConfig,
     cfg: LossConfig = LossConfig(),
     metrics_mask: jax.Array | None = None,   # (B, G) raw response mask
+    token_versions: jax.Array | None = None,  # (B, G) weight version per token
+    num_versions: int = 1,       # static one-hot width for versioned TIS
 ):
     logp_old = jax.lax.stop_gradient(logp_old)
     ratio = jnp.exp(logp_theta - logp_old)
@@ -45,7 +51,15 @@ def dapo_token_loss(
     clipped = jnp.clip(ratio, 1.0 - cfg.eps_low, 1.0 + cfg.eps_high) * adv
     pg = -jnp.minimum(unclipped, clipped)
 
-    w = correction_weights(logp_old, logp_rollout, precision)  # (B, G)
+    if token_versions is not None:
+        # live-updated fleet rollout: tokens may span weight versions, so
+        # correct each against the version that sampled it (AIS-style
+        # per-version self-normalization before the TIS clip / MIS band)
+        w = versioned_correction_weights(
+            logp_old, logp_rollout, token_versions, mask, precision,
+            num_versions=num_versions)
+    else:
+        w = correction_weights(logp_old, logp_rollout, precision)  # (B, G)
     n_tok = jnp.maximum(mask.sum(), 1.0)
     loss = (pg * w * mask).sum() / n_tok
 

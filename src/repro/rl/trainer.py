@@ -38,7 +38,14 @@ from repro.rl.rollout import (
     generate,
     packed_sequences,
 )
-from repro.rl.weight_sync import sync_policy_weights
+from repro.rl.weight_sync import WeightSyncer, sync_policy_weights
+
+# Static one-hot width for the fleet's versioned TIS (a jit shape): with
+# one weight push per train step every batch sees one or two versions, so
+# 4 slots is generous headroom.  Versions are rebased to the batch's
+# minimum before entering the loss, so the absolute version counter never
+# forces a recompile.
+_VERSION_SLOTS = 4
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,6 +63,14 @@ class RLConfig:
     dynamic_sampling: bool = True
     overlong_shaping: bool = False
     calibration: str = "inference"       # "inference" | "trainer"
+    # rollout backend: "batch" = jitted whole-batch sampler (rl/rollout.py),
+    # "fleet" = the live-updating serving fleet (serving/frontend.py) —
+    # N engine replicas, per-token weight-version attribution, versioned
+    # TIS in the loss
+    rollout_backend: str = "batch"
+    fleet_replicas: int = 2
+    fleet_max_slots: int = 8
+    fleet_block_size: int = 4
     ckpt_dir: Optional[str] = None
     ckpt_every: int = 50
     ckpt_keep: int = 2
@@ -82,6 +97,10 @@ class RLTrainer:
         self.ckpt = Checkpointer(rl.ckpt_dir, keep=rl.ckpt_keep) \
             if rl.ckpt_dir else None
         self.kv_scales = None            # trainer-side calibration state
+        assert rl.rollout_backend in ("batch", "fleet"), rl.rollout_backend
+        if rl.rollout_backend == "fleet":
+            self.syncer = WeightSyncer(self._rollout_precision())
+            self._fleet = None           # built at the first weight push
         self._update_fn = self._build_update()
 
     # ------------------------------------------------------------------
@@ -92,6 +111,7 @@ class RLTrainer:
 
     def _build_update(self):
         cfg, rl = self.cfg, self.rl
+        versioned = rl.rollout_backend == "fleet"
 
         def update_fn(params, opt_state, batch):
             def loss_fn(p):
@@ -107,6 +127,9 @@ class RLTrainer:
                     precision=rl.precision,
                     cfg=rl.loss,
                     metrics_mask=batch["response_mask"],
+                    token_versions=(batch["token_versions"]
+                                    if versioned else None),
+                    num_versions=_VERSION_SLOTS if versioned else 1,
                 )
                 if aux.get("moe"):
                     aux_losses = [v["aux_loss"].mean()
@@ -126,6 +149,81 @@ class RLTrainer:
         return jax.jit(update_fn)
 
     # ------------------------------------------------------------------
+    # fleet rollout backend
+    # ------------------------------------------------------------------
+    def _build_fleet(self, rollout_params, version: int):
+        """N engine replicas behind one streaming front-end.  Built once,
+        at the first weight push; later pushes hot-swap in place."""
+        from repro.serving import ServingEngine, ServingFrontend
+        rl = self.rl
+        max_seq = rl.max_prompt_len + rl.max_new_tokens
+        engines = [
+            ServingEngine(
+                rollout_params, self.cfg, self._rollout_precision(),
+                max_slots=rl.fleet_max_slots,
+                max_seq_len=max_seq,
+                temperature=rl.temperature,
+                seed=rl.seed + 100 + i,     # replicas sample independently
+                prompt_pad=max(16, rl.max_prompt_len),
+                block_size=rl.fleet_block_size,
+                want_logps=True,
+                weight_version=version,
+            )
+            for i in range(rl.fleet_replicas)
+        ]
+        return ServingFrontend(engines)
+
+    def _fleet_rollout(self, batch):
+        """GRPO group rollout through the fleet.  Submission order matches
+        the batch backend's np.repeat layout: sample s of prompt i is row
+        i * n_per_prompt + s, so rewards/advantages group identically."""
+        rl = self.rl
+        g = rl.max_new_tokens
+        rids = []
+        lengths_np = np.asarray(batch.lengths)
+        tokens_np = np.asarray(batch.tokens)
+        for i in range(len(lengths_np)):
+            ids = tokens_np[i, : lengths_np[i]]
+            for _ in range(rl.n_per_prompt):
+                rids.append(self._fleet.submit(ids, max_new=g))
+        report = self._fleet.run(max_steps=100_000)
+        if report.stalled:
+            raise RuntimeError(
+                "fleet rollout stalled — replica KV pools too small for "
+                "the prompt batch (raise fleet_max_slots or shrink "
+                "prompt_batch)")
+        by_rid = {o.rid: o for o in report.outputs}
+        b = len(rids)
+        resp = np.full((b, g), self.sampler.pad_id, np.int32)
+        mask = np.zeros((b, g), np.float32)
+        logps = np.zeros((b, g), np.float32)
+        versions = np.zeros((b, g), np.int32)
+        rlens = np.zeros((b,), np.int32)
+        for r, rid in enumerate(rids):
+            out = by_rid[rid].output
+            n = len(out.token_ids)
+            resp[r, :n] = out.token_ids
+            mask[r, :n] = 1.0
+            logps[r, :n] = out.logps
+            versions[r, :n] = out.versions
+            rlens[r] = n
+        traj = Trajectory(
+            prompt_tokens=jnp.asarray(
+                np.repeat(tokens_np, rl.n_per_prompt, axis=0)),
+            prompt_lengths=jnp.asarray(
+                np.repeat(lengths_np, rl.n_per_prompt)),
+            response_tokens=jnp.asarray(resp),
+            response_mask=jnp.asarray(mask),
+            rollout_logps=jnp.asarray(logps),
+            response_lengths=jnp.asarray(rlens),
+            routing=None, kv_scales=None)
+        # rebase absolute weight versions to the batch minimum so the
+        # loss's one-hot width (_VERSION_SLOTS) is a stable jit shape
+        base = int(versions[mask > 0].min()) if mask.any() else 0
+        rel = np.where(mask > 0, versions - base, 0).astype(np.int32)
+        return traj, jnp.asarray(rel)
+
+    # ------------------------------------------------------------------
     def train_step(self) -> dict:
         rl, cfg = self.rl, self.cfg
         t_start = time.perf_counter()
@@ -134,10 +232,22 @@ class RLTrainer:
         batch = self.pipeline.next_batch()
         problems = [p for p in batch.problems for _ in range(rl.n_per_prompt)]
 
-        # 2. weight sync (paper Fig 1 phase 2)
+        # 2. weight sync (paper Fig 1 phase 2).  The fleet backend pushes a
+        # version-stamped snapshot and hot-swaps it into every replica at a
+        # step boundary — in-flight requests (none here, but the same code
+        # path serves the async case) are not drained
         rollout_precision = self._rollout_precision()
-        rollout_params, sync_stats = sync_policy_weights(
-            self.params, rollout_precision)
+        token_versions = None
+        if rl.rollout_backend == "fleet":
+            vw = self.syncer.push(self.params)
+            sync_stats = vw.stats
+            if self._fleet is None:
+                self._fleet = self._build_fleet(vw.params, vw.version)
+            else:
+                self._fleet.update_weights(vw)
+        else:
+            rollout_params, sync_stats = sync_policy_weights(
+                self.params, rollout_precision)
 
         # 3. rollout on the FP8 engine — GRPO group sampling prefills each
         # prompt once and forks per-sample block tables, so the group's
@@ -146,18 +256,21 @@ class RLTrainer:
         # (static arg: recompiles at most once per distinct value)
         self.key, k_gen = jax.random.split(self.key)
         t_roll = time.perf_counter()
-        page_size = 8
-        traj = generate(
-            rollout_params, jnp.asarray(batch.tokens),
-            jnp.asarray(batch.lengths), k_gen,
-            cfg, rollout_precision, self.sampler,
-            want_routing=rl.precision.rollout_router_replay,
-            kv_scales=self.kv_scales,
-            page_size=page_size,
-            num_samples_per_prompt=rl.n_per_prompt,
-            shared_prefix_blocks=int(np.min(batch.lengths)) // page_size,
-        )
-        traj = jax.tree.map(lambda x: x, traj)  # materialize
+        if rl.rollout_backend == "fleet":
+            traj, token_versions = self._fleet_rollout(batch)
+        else:
+            page_size = 8
+            traj = generate(
+                rollout_params, jnp.asarray(batch.tokens),
+                jnp.asarray(batch.lengths), k_gen,
+                cfg, rollout_precision, self.sampler,
+                want_routing=rl.precision.rollout_router_replay,
+                kv_scales=self.kv_scales,
+                page_size=page_size,
+                num_samples_per_prompt=rl.n_per_prompt,
+                shared_prefix_blocks=int(np.min(batch.lengths)) // page_size,
+            )
+            traj = jax.tree.map(lambda x: x, traj)  # materialize
         rollout_s = time.perf_counter() - t_roll
         gen_tokens = float(traj.response_mask.sum())
 
@@ -183,6 +296,8 @@ class RLTrainer:
             "mask": mask,
             "response_mask": traj.response_mask,
         }
+        if token_versions is not None:
+            update_batch["token_versions"] = token_versions
         self.params, self.opt_state, stats = self._update_fn(
             self.params, self.opt_state, update_batch)
 

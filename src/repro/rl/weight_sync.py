@@ -8,9 +8,17 @@ paper (NCCL into vLLM) becomes GSPMD resharding of the quantized tree.
 
 `sync_policy_weights` also reports quantization telemetry used by the
 EXPERIMENTS.md weight-sync table.
+
+For the live-updating fleet, `WeightSyncer` wraps the same transform in
+a monotonic version counter: each `push()` requantizes the current train
+params and returns a `VersionedWeights` the serving front-end installs
+into every replica at a step boundary (`ServingFrontend.update_weights`).
+Tokens generated after the install carry the new version — the per-token
+attribution that version-aware TIS/MIS correction keys on.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import Tuple
 
@@ -41,6 +49,44 @@ def sync_policy_weights(
     stats = dict(count_quantized(rollout_params))
     stats["sync_ms"] = (time.perf_counter() - t0) * 1e3
     return rollout_params, stats
+
+
+@dataclasses.dataclass(frozen=True)
+class VersionedWeights:
+    """One requantized weight snapshot, stamped with the monotonic
+    version the fleet will attribute its tokens to."""
+
+    params: object
+    version: int
+    stats: dict
+
+
+class WeightSyncer:
+    """Version-stamped weight sync for the live-updating fleet.
+
+    Owns the monotonic version counter.  The fleet starts at version 0
+    (the checkpoint the engines were built from); every `push()` bumps
+    it and requantizes, so version k's tokens were sampled from the
+    weights of the k-th sync.  Versions never repeat or go backwards —
+    `ServingFrontend.update_weights` and `ServingEngine.install_weights`
+    both enforce monotonicity on their side too.
+    """
+
+    def __init__(self, precision: PrecisionConfig, *,
+                 rollout_shardings=None, start_version: int = 0):
+        self.precision = precision
+        self.rollout_shardings = rollout_shardings
+        self.version = start_version
+
+    def push(self, train_params) -> VersionedWeights:
+        """Requantize `train_params` and mint the next weight version."""
+        params, stats = sync_policy_weights(
+            train_params, self.precision,
+            rollout_shardings=self.rollout_shardings)
+        self.version += 1
+        stats["weight_version"] = self.version
+        return VersionedWeights(params=params, version=self.version,
+                                stats=stats)
 
 
 def weight_quant_error(train_params, rollout_params, top_n: int = 5) -> dict:

@@ -7,6 +7,13 @@ from repro.serving.engine import (
     kv_bytes_per_token,
     request_state_bytes,
 )
+from repro.serving.frontend import FleetReport, ServingFrontend
+from repro.serving.outputs import (
+    FINISH_LENGTH,
+    FINISH_STOP,
+    CompletionOutput,
+    RequestOutput,
+)
 from repro.serving.scheduler import (
     EVICTION_POLICIES,
     Draft,
@@ -21,4 +28,6 @@ __all__ = ["ServingEngine", "ServeReport", "Request", "kv_bytes_per_token",
            "request_state_bytes", "BlockManager", "NoFreeBlocksError",
            "Scheduler", "ScheduleDecision", "StepBudget",
            "EVICTION_POLICIES", "KernelConfig",
-           "SpecConfig", "NGramProposer", "Draft", "Verify"]
+           "SpecConfig", "NGramProposer", "Draft", "Verify",
+           "ServingFrontend", "FleetReport", "CompletionOutput",
+           "RequestOutput", "FINISH_STOP", "FINISH_LENGTH"]

@@ -176,6 +176,12 @@ class Request:
     max_new: int
     frames: Optional[np.ndarray] = None   # (S_src, D) enc-dec source frames
     generated: List[int] = dataclasses.field(default_factory=list)
+    # parallel to `generated`: the weight version live when each token was
+    # sampled (live-update attribution) and its rollout logprob under the
+    # sampling distribution (recorded only when the engine was built with
+    # want_logps=True — the pi^FP8 side of version-aware TIS/MIS)
+    token_versions: List[int] = dataclasses.field(default_factory=list)
+    token_logps: List[float] = dataclasses.field(default_factory=list)
     preemptions: int = 0
     wasted_tokens: int = 0       # tokens re-restored after preemption
     prefilled: int = 0           # prompt tokens whose KV is (being) computed
@@ -247,7 +253,9 @@ class ServingEngine:
                  eos_id: Optional[int] = tasks.EOS,
                  max_src_len: int = 8,
                  spec: Optional[SpecConfig] = None,
-                 proposer=None):
+                 proposer=None,
+                 want_logps: bool = False,
+                 weight_version: int = 0):
         assert admission in ("reserve", "ondemand"), admission
         assert decode_kernel in ("gather", "paged"), decode_kernel
         if kernel_config is None:
@@ -276,6 +284,16 @@ class ServingEngine:
         # sampler settings, or the one-sampler bit-identical contract in
         # core/sampling.py breaks
         self.top_k = top_k
+        # record per-token rollout logprobs on Request.token_logps (one
+        # vocab-wide log_softmax per sample call — off by default because
+        # pure serving discards them; the RL fleet path needs them for
+        # version-aware TIS/MIS)
+        self.want_logps = want_logps
+        # weight version currently serving (stamped onto every generated
+        # token); bumped by install_weights at step boundaries
+        self.weight_version = weight_version
+        self._staged_weights = None     # (params, version) for next step()
+        self._executing = False         # install_weights boundary guard
         self.admission = admission
         self.kernels = kernel_config
         self.use_kernel = kernel_config.decode   # legacy alias (decode path)
@@ -399,6 +417,45 @@ class ServingEngine:
         self._next_rid = max(self._next_rid, rid + 1)
         self.queue.append(Request(rid=rid, prompt=prompt, max_new=max_new,
                                   frames=frames))
+
+    # -- live weight updates ------------------------------------------------
+    def install_weights(self, params, version: int):
+        """In-place weight hot-swap at a step boundary — no draining.
+
+        Replaces the rollout params between `Scheduler.step()` boundaries:
+        in-flight requests keep their slots, blocks and pending tokens and
+        simply continue decoding under the new weights; every token they
+        emit from here on is stamped with `version`.  Their existing KV
+        stays as-written (computed under the old weights) — that mixture
+        is exactly the train-inference mismatch the per-token version
+        attribution + TIS/MIS correction accounts for.
+
+        KV-cache scales are NOT recalibrated: the pool already holds
+        bytes quantized at the locked scales, and re-deriving scales
+        mid-flight would silently re-interpret them.  The residual scale
+        staleness is part of the same per-token-corrected mismatch.
+        """
+        assert not self._executing, (
+            "install_weights must run between engine steps, never inside "
+            "execute() — a mid-step swap would split one trace across "
+            "two policies")
+        assert version >= self.weight_version, (
+            f"weight version must be monotonic: {version} < "
+            f"{self.weight_version}")
+        self.params = params
+        self.weight_version = version
+
+    def stage_weights(self, params, version: int):
+        """Queue a hot-swap to be installed at the next `step()` boundary
+        (the asynchronous spelling of `install_weights`: safe to call at
+        any time, including while a step is executing)."""
+        self._staged_weights = (params, version)
+
+    def _apply_staged_weights(self):
+        if self._staged_weights is not None:
+            params, version = self._staged_weights
+            self._staged_weights = None
+            self.install_weights(params, version)
 
     # -- accounting ---------------------------------------------------------
     @property
@@ -576,6 +633,13 @@ class ServingEngine:
         scheduler's bookkeeping already assumed it: a victim's rows are
         copied to host before any later-ordered action can overwrite
         them); the fused decode over `decode_slots` runs last."""
+        self._executing = True
+        try:
+            self._execute(decision)
+        finally:
+            self._executing = False
+
+    def _execute(self, decision: ScheduleDecision):
         n_verify = 0
         for act in decision.actions:
             if isinstance(act, SwapOut):
@@ -610,7 +674,10 @@ class ServingEngine:
 
     def step(self) -> ScheduleDecision:
         """One scheduler+engine step (the unit external drivers — the
-        continuous-batching benchmark, the property tests — advance by)."""
+        continuous-batching benchmark, the property tests — advance by).
+        Weights staged via `stage_weights` are installed here, before the
+        scheduler plans — the step-boundary swap hook."""
+        self._apply_staged_weights()
         decision = self.scheduler.step(self)
         if not decision.is_empty:
             self.execute(decision)
@@ -620,6 +687,13 @@ class ServingEngine:
         """Admission-only pass (tests drive this directly): plan and run
         admissions plus their prefill work, nothing else."""
         self.execute(self.scheduler.step(self, admit_only=True))
+
+    def _commit_first_token(self, req: Request, tok, logp):
+        """Record the token sampled off the final prefill logits: the
+        ONE place a request's generated/version/logp lists start."""
+        req.generated = [int(tok)]
+        req.token_versions = [self.weight_version]
+        req.token_logps = [float(logp)] if logp is not None else []
 
     # -- prefill -------------------------------------------------------------
     def _exec_admit(self, act: Admit):
@@ -663,10 +737,10 @@ class ServingEngine:
         if act.last:
             self.block_mgr.register_prefix(req.rid, req.prompt)
             self.key, k = jax.random.split(self.key)
-            tok = sample(logits[0], k, self.temperature, self.top_k,
-                         want_logp=False)[0]
+            tok, logp = sample(logits[0], k, self.temperature, self.top_k,
+                               want_logp=self.want_logps)
             self.pending_tok[act.slot] = tok
-            req.generated = [int(tok)]
+            self._commit_first_token(req, tok, logp)
 
     def _prefill_into(self, slot: int, req: Request, ids: List[int]):
         """Legacy one-shot prefill: the whole prompt through one fixed
@@ -704,11 +778,11 @@ class ServingEngine:
         self._scales_calibrated = True
         self.block_mgr.register_prefix(req.rid, req.prompt)
         self.key, k = jax.random.split(self.key)
-        tok = sample(logits[0], k, self.temperature, self.top_k,
-                     want_logp=False)[0]
+        tok, logp = sample(logits[0], k, self.temperature, self.top_k,
+                           want_logp=self.want_logps)
         self.pending_tok[slot] = tok
         self.slot_req[slot] = req
-        req.generated = [int(tok)]
+        self._commit_first_token(req, tok, logp)
         req.cached_tokens = p
 
     # -- preemption / swap ---------------------------------------------------
@@ -879,7 +953,7 @@ class ServingEngine:
             want_all_logits=True)
         self._merge_view(new_cache, slot)
         self.key, sub = jax.random.split(self.key)
-        toks, n_acc, _ = rejection_sample(
+        toks, n_acc, tok_logps = rejection_sample(
             logits[0, :k + 1], act.tokens, sub, self.temperature,
             self.top_k)
         # KV rewind: keep the pending token's row + the accepted prefix
@@ -890,9 +964,12 @@ class ServingEngine:
         self.stats["accepted_tokens"] += n_acc
         # commit emitted tokens in order; EOS / max_new truncation scans
         # them exactly like successive decode steps would have
-        for tok in toks:
+        for j, tok in enumerate(toks):
             self.stats["emitted"] += 1
             req.generated.append(tok)
+            req.token_versions.append(self.weight_version)
+            if self.want_logps:
+                req.token_logps.append(float(tok_logps[j]))
             self.pending_tok[slot] = tok
             if tok == self.eos_id or len(req.generated) >= req.max_new:
                 self.done.append(req)
@@ -938,9 +1015,12 @@ class ServingEngine:
             self.cache["lengths"] = \
                 self.cache["lengths"].at[idx].set(saved_lengths[idx])
         self.key, k = jax.random.split(self.key)
-        next_toks = np.asarray(
-            sample(logits, k, self.temperature, self.top_k,
-                   want_logp=False)[0])
+        next_toks, next_logps = sample(logits, k, self.temperature,
+                                       self.top_k,
+                                       want_logp=self.want_logps)
+        next_toks = np.asarray(next_toks)
+        if next_logps is not None:
+            next_logps = np.asarray(next_logps)
         self.stats["steps"] += 1
         self.stats["occupancy"] += len(decode_slots) / self.max_slots
         for i in decode_slots:
@@ -948,6 +1028,9 @@ class ServingEngine:
             tok = int(next_toks[i])
             self.stats["emitted"] += 1
             req.generated.append(tok)
+            req.token_versions.append(self.weight_version)
+            if next_logps is not None:
+                req.token_logps.append(float(next_logps[i]))
             req.cached_tokens += 1
             self.pending_tok[i] = tok
             if tok == self.eos_id or len(req.generated) >= req.max_new:
@@ -966,6 +1049,7 @@ class ServingEngine:
         while (self.queue or any(r is not None for r in self.slot_req)) \
                 and self.stats["steps"] < max_steps and guard > 0:
             guard -= 1
+            self._apply_staged_weights()
             decision = self.scheduler.step(self)
             if decision.is_empty:
                 # nothing schedulable but work remains: capacity-stuck

@@ -1,0 +1,244 @@
+"""Async serving fleet: a streaming front-end over N engine replicas.
+
+`ServingFrontend` owns a list of data-parallel `ServingEngine` replicas
+(same architecture, same precision, independent KV pools) and presents
+one vLLM-style surface:
+
+* `submit()` dispatches each request to the least-loaded replica
+  (round-robin among ties), returns the rid;
+* `step()` advances every replica one scheduler step and yields
+  incremental `RequestOutput`s (new tokens + per-token weight versions
+  + finish reasons) for every request that moved;
+* `update_weights()` hot-swaps a new FP8 weight version into every
+  replica **between** scheduler steps — in-flight requests keep running
+  and their subsequent tokens are stamped with the new version.
+
+The fleet clock is token-denominated: each front-end step costs the
+*max* over replicas of that replica's `ScheduleDecision.cost_tokens`
+(replicas run in parallel, so the step takes as long as its slowest
+member).  This is the same cost model the continuous-batching and
+spec-decode benchmarks use, which makes replica-scaling claims
+comparable against the single-engine baselines.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.outputs import (
+    FINISH_LENGTH,
+    FINISH_STOP,
+    CompletionOutput,
+    RequestOutput,
+)
+
+
+@dataclasses.dataclass
+class _Tracked:
+    replica: int
+    req: Request
+    reported: int = 0          # generated tokens already streamed out
+    finished: bool = False
+
+
+@dataclasses.dataclass
+class FleetReport:
+    """What `run()` hands back: fleet-level accounting plus the final
+    cumulative output per request (insertion order)."""
+
+    outputs: List[RequestOutput]
+    steps: int                 # front-end steps taken
+    clock_tokens: int          # token-unit wall clock (max-over-replicas)
+    emitted_tokens: int
+    weight_version: int        # latest version pushed to the fleet
+    stalled: bool
+    replica_stats: List[dict]  # per-replica engine stat snapshots
+
+    @property
+    def tokens_per_clock(self) -> float:
+        """Fleet throughput in the token-unit clock: emitted tokens per
+        unit of modeled step time.  With perfect scaling, doubling the
+        replicas doubles this on the same trace."""
+        return self.emitted_tokens / max(self.clock_tokens, 1)
+
+
+class ServingFrontend:
+    def __init__(self, engines: List[ServingEngine]):
+        if not engines:
+            raise ValueError("ServingFrontend needs at least one engine")
+        eos = {e.eos_id for e in engines}
+        if len(eos) != 1:
+            raise ValueError(f"replicas disagree on eos_id: {sorted(eos)}")
+        versions = {e.weight_version for e in engines}
+        if len(versions) != 1:
+            raise ValueError(
+                f"replicas disagree on weight version: {sorted(versions)} "
+                "— build the fleet from one synced checkpoint")
+        self.engines = engines
+        self.eos_id = engines[0].eos_id
+        self.weight_version = engines[0].weight_version
+        self._tracked: Dict[int, _Tracked] = {}
+        self._rr = 0               # round-robin cursor for load ties
+        self._next_rid = 0
+        self.steps = 0
+        self.clock_tokens = 0
+
+    # -- dispatch -----------------------------------------------------------
+    def _load(self, eng: ServingEngine) -> int:
+        """Replica load = queued requests + occupied slots.  KV is
+        replica-local, so a request never migrates after dispatch."""
+        return len(eng.queue) + sum(r is not None for r in eng.slot_req)
+
+    def submit(self, prompt_ids, max_new: int, rid: Optional[int] = None,
+               frames=None) -> int:
+        if rid is None:
+            rid = self._next_rid
+        if rid in self._tracked:
+            raise ValueError(f"duplicate rid {rid}")
+        self._next_rid = max(self._next_rid, rid + 1)
+        n = len(self.engines)
+        loads = [self._load(e) for e in self.engines]
+        best = min(loads)
+        # least-loaded replica; ties resolved round-robin so equal-load
+        # replicas share the stream instead of replica 0 soaking it up
+        for k in range(n):
+            i = (self._rr + k) % n
+            if loads[i] == best:
+                break
+        self._rr = (i + 1) % n
+        self.engines[i].submit(prompt_ids, max_new, rid=rid, frames=frames)
+        self._tracked[rid] = _Tracked(replica=i, req=self.engines[i].queue[-1])
+        return rid
+
+    # -- weight hot-swap ----------------------------------------------------
+    def update_weights(self, params, version: Optional[int] = None):
+        """Install a new weight version on every replica.
+
+        Accepts either `(params_pytree, version)` or a single
+        `rl.weight_sync.VersionedWeights`-shaped object (anything with
+        `.params` and `.version`).  The front-end only runs between
+        engine steps, so the install is immediate (`install_weights`);
+        in-flight requests are NOT drained — their next token simply
+        comes from the new weights and is stamped with the new version.
+        """
+        if version is None:
+            params, version = params.params, params.version
+        if version < self.weight_version:
+            raise ValueError(
+                f"weight version must be monotonic: got {version}, "
+                f"fleet is at {self.weight_version}")
+        for eng in self.engines:
+            eng.install_weights(params, version)
+        self.weight_version = version
+
+    # -- stepping -----------------------------------------------------------
+    def has_work(self) -> bool:
+        return any(eng.queue or any(r is not None for r in eng.slot_req)
+                   for eng in self.engines)
+
+    def step(self) -> List[RequestOutput]:
+        """Advance every replica one scheduler step; return the
+        incremental outputs (one per request that gained tokens or
+        finished this step), in rid order."""
+        step_cost = 0
+        for eng in self.engines:
+            if not (eng.queue or any(r is not None for r in eng.slot_req)):
+                continue
+            decision = eng.step()
+            step_cost = max(step_cost, decision.cost_tokens)
+        self.steps += 1
+        self.clock_tokens += step_cost
+        return self._drain_outputs()
+
+    def _finish_reason(self, req: Request) -> str:
+        if req.generated and req.generated[-1] == self.eos_id:
+            return FINISH_STOP
+        return FINISH_LENGTH
+
+    def _drain_outputs(self) -> List[RequestOutput]:
+        done_rids = [set(r.rid for r in eng.done) for eng in self.engines]
+        outs: List[RequestOutput] = []
+        for rid in sorted(self._tracked):
+            t = self._tracked[rid]
+            if t.finished:
+                continue
+            req = t.req
+            have = len(req.generated)
+            finished = rid in done_rids[t.replica]
+            if have == t.reported and not finished:
+                continue
+            logps = req.token_logps if req.token_logps else None
+            comp = CompletionOutput(
+                token_ids=list(req.generated),
+                versions=list(req.token_versions),
+                logps=list(logps) if logps is not None else None,
+                finish_reason=self._finish_reason(req) if finished else None,
+            )
+            outs.append(RequestOutput(
+                rid=rid,
+                replica=t.replica,
+                prompt_token_ids=[int(x) for x in req.prompt],
+                new_token_ids=list(req.generated[t.reported:]),
+                new_versions=list(req.token_versions[t.reported:]),
+                new_logps=(list(logps[t.reported:])
+                           if logps is not None else None),
+                output=comp,
+                finished=finished,
+            ))
+            t.reported = have
+            t.finished = finished
+        return outs
+
+    def _final_output(self, rid: int, t: _Tracked) -> RequestOutput:
+        """Cumulative (zero-delta) RequestOutput for a finished request."""
+        req = t.req
+        logps = req.token_logps if req.token_logps else None
+        comp = CompletionOutput(
+            token_ids=list(req.generated),
+            versions=list(req.token_versions),
+            logps=list(logps) if logps is not None else None,
+            finish_reason=self._finish_reason(req),
+        )
+        return RequestOutput(
+            rid=rid, replica=t.replica,
+            prompt_token_ids=[int(x) for x in req.prompt],
+            new_token_ids=[], new_versions=[], new_logps=None,
+            output=comp, finished=True)
+
+    def run(self, max_steps: int = 1000) -> FleetReport:
+        """Drive the fleet to completion (or stall), collecting the final
+        cumulative output of every submitted request."""
+        finals: Dict[int, RequestOutput] = {}
+        stalled = False
+        steps_left = max_steps
+        while self.has_work() and steps_left > 0:
+            steps_left -= 1
+            before = self.clock_tokens
+            for out in self.step():
+                if out.finished:
+                    finals[out.rid] = out
+            if self.clock_tokens == before and self.has_work():
+                # every replica with work planned an empty step:
+                # capacity-stuck, same contract as ServeReport.stalled
+                stalled = True
+                break
+        if steps_left <= 0 and self.has_work():
+            stalled = True
+        # backfill requests that finished before run() was entered (their
+        # finish was already streamed by an earlier step() call) so the
+        # report always carries one final output per completed request
+        for rid, t in self._tracked.items():
+            if t.finished and rid not in finals:
+                finals[rid] = self._final_output(rid, t)
+        emitted = sum(eng.stats["emitted"] for eng in self.engines)
+        return FleetReport(
+            outputs=[finals[r] for r in sorted(finals)],
+            steps=self.steps,
+            clock_tokens=self.clock_tokens,
+            emitted_tokens=emitted,
+            weight_version=self.weight_version,
+            stalled=stalled,
+            replica_stats=[dict(eng.stats) for eng in self.engines],
+        )

@@ -8,8 +8,23 @@ process; without eviction the CPU JIT eventually fails to materialize new
 dylib symbols.  Clearing jax caches per test module keeps the executable
 count bounded.
 """
+import os
+
 import jax
 import pytest
+
+try:
+    from hypothesis import settings
+
+    # CI runs the property suites with a fixed derandomized seed so a red
+    # build is reproducible from the printed blob; select with
+    # HYPOTHESIS_PROFILE=ci (the pytest job sets it).
+    settings.register_profile(
+        "ci", derandomize=True, print_blob=True, max_examples=50
+    )
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "default"))
+except ImportError:  # property suites skip themselves without hypothesis
+    pass
 
 
 @pytest.fixture(autouse=True, scope="module")

@@ -1,0 +1,210 @@
+"""CI manifest drift guards + the bench-trend baseline harness.
+
+Two failure modes this file exists to catch:
+
+1. **Silent gate drop.**  A benchmark grows a ``--check`` gate (it goes
+   through ``bench_cli``) but nobody wires it into the bench-smoke job —
+   so the gate exists and never runs.  The manifest test parses
+   ``.github/workflows/ci.yml`` and asserts every gated benchmark in
+   ``benchmarks.run.MODULES`` has a bench-smoke step that passes
+   ``--check`` and writes a JSON artifact the upload glob covers.
+
+2. **Silent trend drift.**  The baseline harness itself regresses — a
+   regressed metric reads green, or a vanished metric reads ok.  The
+   injected-regression tests feed ``compare_metrics`` doctored numbers
+   and assert red, then the shipped numbers and assert green.
+"""
+from __future__ import annotations
+
+import fnmatch
+import json
+import re
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO))
+
+from benchmarks import common, run  # noqa: E402
+
+yaml = pytest.importorskip("yaml", reason="manifest test parses ci.yml")
+
+CI_YML = REPO / ".github" / "workflows" / "ci.yml"
+
+
+def _workflow() -> dict:
+    with open(CI_YML) as f:
+        return yaml.safe_load(f)
+
+
+def _bench_smoke_steps() -> list:
+    return _workflow()["jobs"]["bench-smoke"]["steps"]
+
+
+def _gated_benchmarks() -> list:
+    """MODULES entries whose source goes through bench_cli — i.e. the
+    benchmarks that HAVE a --check gate to wire up."""
+    gated = []
+    for name, _desc in run.MODULES:
+        src = (REPO / "benchmarks" / f"{name}.py").read_text()
+        if "bench_cli(" in src:
+            gated.append(name)
+    return gated
+
+
+# ---------------------------------------------------------------------------
+# 1. manifest: every gate runs in CI, every artifact is uploaded
+# ---------------------------------------------------------------------------
+
+def test_every_gated_benchmark_has_a_checked_smoke_step():
+    gated = _gated_benchmarks()
+    assert len(gated) >= 8, f"gate inventory shrank: {gated}"
+    runs = [s.get("run", "") for s in _bench_smoke_steps() if "run" in s]
+    for name in gated:
+        matching = [r for r in runs if f"benchmarks/{name}.py" in r]
+        assert matching, (
+            f"benchmarks/{name}.py is gated (uses bench_cli) but the "
+            "bench-smoke job never runs it — its --check gate is dead")
+        assert any("--check" in r for r in matching), (
+            f"bench-smoke runs benchmarks/{name}.py without --check: "
+            "the invariants are never asserted")
+
+
+def test_every_smoke_json_is_covered_by_the_artifact_glob():
+    steps = _bench_smoke_steps()
+    uploads = [s for s in steps
+               if "upload-artifact" in str(s.get("uses", ""))]
+    assert uploads, "bench-smoke lost its artifact upload step"
+    glob = uploads[-1]["with"]["path"]
+    for step in steps:
+        for jpath in re.findall(r"--json\s+(\S+)", step.get("run", "")):
+            assert fnmatch.fnmatch(jpath, glob), (
+                f"{jpath} written by '{step.get('name')}' is not covered "
+                f"by the upload glob {glob!r} — the artifact vanishes")
+
+
+def test_bench_trend_step_runs_against_committed_baselines():
+    runs = [s.get("run", "") for s in _bench_smoke_steps()]
+    trend = [r for r in runs if "benchmarks.common" in r]
+    assert trend, "bench-smoke lost the aggregate bench-trend step"
+    assert "--baseline benchmarks/baselines.json" in trend[0].replace(
+        "\n", " ")
+
+
+def test_baselines_cover_every_smoke_artifact():
+    """A new gated benchmark must land with a baselines entry in the same
+    PR, or the aggregate trend pass goes red on MISSING."""
+    with open(REPO / "benchmarks" / "baselines.json") as f:
+        baselines = json.load(f)
+    for step in _bench_smoke_steps():
+        for jpath in re.findall(r"--json\s+(\S+)", step.get("run", "")):
+            bench = common.bench_name_from_path(jpath)
+            assert bench in baselines, (
+                f"bench-smoke writes {jpath} but baselines.json has no "
+                f"'{bench}' entry — the trend gate would fail on MISSING")
+            assert baselines[bench], f"'{bench}' baseline entry is empty"
+
+
+def test_lint_format_step_is_blocking():
+    steps = _workflow()["jobs"]["lint"]["steps"]
+    fmt = [s for s in steps if "format" in str(s.get("run", ""))]
+    assert fmt, "lint job lost the ruff format step"
+    assert not fmt[0].get("continue-on-error", False), (
+        "ruff format went advisory again — formatting drift accumulates")
+
+
+def test_pytest_matrix_and_hypothesis_profile():
+    job = _workflow()["jobs"]["pytest"]
+    versions = job["strategy"]["matrix"]["python-version"]
+    assert "3.13" in versions, f"3.13 dropped from the matrix: {versions}"
+    suite = [s for s in job["steps"]
+             if "pytest" in str(s.get("run", ""))][0]
+    assert suite.get("env", {}).get("HYPOTHESIS_PROFILE") == "ci", (
+        "the pytest job must pin HYPOTHESIS_PROFILE=ci so property-test "
+        "failures reproduce from the printed blob")
+
+
+# ---------------------------------------------------------------------------
+# 2. the baseline harness itself: red on regression, green on shipped
+# ---------------------------------------------------------------------------
+
+_BASELINES = {"demo": {
+    "scaling.x": {"value": 2.0, "tol": 0.15, "direction": "higher"},
+    "lat.p50": {"value": 10.0, "tol": 0.20, "direction": "lower"},
+}}
+
+
+def test_injected_regression_reads_red():
+    rows = common.compare_metrics(
+        "demo", {"scaling": {"x": 1.2}, "lat": {"p50": 10.0}}, _BASELINES)
+    by = {r["metric"]: r["status"] for r in rows}
+    assert by["scaling.x"] == "REGRESSED"
+    assert by["lat.p50"] == "ok"
+
+
+def test_lower_is_better_direction():
+    rows = common.compare_metrics(
+        "demo", {"scaling": {"x": 2.0}, "lat": {"p50": 14.0}}, _BASELINES)
+    by = {r["metric"]: r["status"] for r in rows}
+    assert by["lat.p50"] == "REGRESSED"      # 10 -> 14 beyond 20% band
+    rows = common.compare_metrics(
+        "demo", {"scaling": {"x": 2.0}, "lat": {"p50": 7.0}}, _BASELINES)
+    assert {r["metric"]: r["status"] for r in rows}["lat.p50"] == "improved"
+
+
+def test_within_band_and_improved_read_green():
+    rows = common.compare_metrics(
+        "demo", {"scaling": {"x": 2.4}, "lat": {"p50": 10.5}}, _BASELINES)
+    statuses = {r["status"] for r in rows}
+    assert statuses <= {"ok", "improved"}, rows
+
+
+def test_missing_metric_and_missing_bench_read_red():
+    rows = common.compare_metrics("demo", {"lat": {"p50": 10.0}}, _BASELINES)
+    assert {r["metric"]: r["status"] for r in rows}["scaling.x"] == "MISSING"
+    rows = common.compare_metrics("unknown_bench", {}, _BASELINES)
+    assert rows[0]["status"] == "MISSING"
+
+
+def test_non_numeric_metric_is_missing_not_green():
+    rows = common.compare_metrics(
+        "demo", {"scaling": {"x": True}, "lat": {"p50": "fast"}}, _BASELINES)
+    assert all(r["status"] == "MISSING" for r in rows), rows
+
+
+def test_aggregate_cli_exit_codes(tmp_path, monkeypatch):
+    base = tmp_path / "baselines.json"
+    base.write_text(json.dumps(_BASELINES))
+    good = tmp_path / "bench-demo.json"
+    good.write_text(json.dumps({"scaling": {"x": 2.1}, "lat": {"p50": 9.0}}))
+    summary = tmp_path / "summary.md"
+    monkeypatch.setenv("GITHUB_STEP_SUMMARY", str(summary))
+    assert common.main(["--baseline", str(base), str(good)]) == 0
+    assert "benchmark trend" in summary.read_text().lower()
+
+    bad = tmp_path / "bench-demo.json"
+    bad.write_text(json.dumps({"scaling": {"x": 1.0}, "lat": {"p50": 9.0}}))
+    assert common.main(["--baseline", str(base), str(bad)]) == 1
+
+
+def test_artifact_name_normalization():
+    assert common.bench_name_from_path("bench-kernel-hotpath.json") \
+        == "kernel_hotpath"
+    assert common.bench_name_from_path(
+        "/tmp/x/bench-live_update.json") == "live_update"
+
+
+def test_shipped_baselines_match_shipped_artifacts_shape():
+    """Every committed baseline metric must use a real dotted path shape
+    (non-empty, no accidental leading/trailing dots)."""
+    with open(REPO / "benchmarks" / "baselines.json") as f:
+        baselines = json.load(f)
+    assert baselines, "baselines.json is empty"
+    for bench, spec in baselines.items():
+        for metric, band in spec.items():
+            assert metric.strip(".") == metric and metric, (bench, metric)
+            assert "value" in band, (bench, metric)
+            assert band.get("direction", "higher") in ("higher", "lower")
+            assert 0 < float(band.get("tol", 0.1)) < 1, (bench, metric)

@@ -1,0 +1,286 @@
+"""Live-updating serving fleet: frontend dispatch/streaming, in-place
+weight hot-swap with per-token version attribution, version-aware TIS/MIS
+correction, and the trainer's fleet rollout backend."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import tiny_serving_config
+from repro.core import FP8_LINEAR_ROLLOUT, PrecisionConfig, RolloutCorrection
+from repro.data import tasks
+from repro.models import init_params
+from repro.rl import (
+    RLConfig,
+    RLTrainer,
+    VersionedWeights,
+    WeightSyncer,
+    correction_weights,
+    sync_policy_weights,
+    versioned_correction_weights,
+    versioned_mismatch_stats,
+)
+from repro.serving import (
+    FINISH_LENGTH,
+    FINISH_STOP,
+    ServingEngine,
+    ServingFrontend,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def fleet_setup():
+    cfg = tiny_serving_config()
+    params = init_params(cfg, jax.random.key(0))
+    prec = FP8_LINEAR_ROLLOUT
+    roll, _ = sync_policy_weights(params, prec)
+    return cfg, params, prec, roll
+
+
+def _mk_engine(setup, *, seed=0, version=0, **kw):
+    cfg, _params, prec, roll = setup
+    kw.setdefault("max_slots", 4)
+    kw.setdefault("max_seq_len", 48)
+    kw.setdefault("eos_id", None)
+    return ServingEngine(roll, cfg, prec, temperature=0.0, seed=seed,
+                         want_logps=True, weight_version=version, **kw)
+
+
+def _next_version(setup, *, scale=1.1):
+    """A distinguishable new rollout snapshot (same cfg, nudged params)."""
+    cfg, params, prec, _ = setup
+    nudged = jax.tree.map(lambda x: x * scale, params)
+    roll, _ = sync_policy_weights(nudged, prec)
+    return roll
+
+
+# ---------------------------------------------------------------------------
+# engine hot-swap contract
+# ---------------------------------------------------------------------------
+
+def test_install_weights_is_monotonic(fleet_setup):
+    eng = _mk_engine(fleet_setup, version=3)
+    with pytest.raises(AssertionError, match="monotonic"):
+        eng.install_weights(eng.params, 2)
+    eng.install_weights(eng.params, 3)      # same version is a re-push
+    eng.install_weights(eng.params, 5)
+    assert eng.weight_version == 5
+
+
+def test_install_weights_refused_mid_execute(fleet_setup):
+    eng = _mk_engine(fleet_setup)
+    eng._executing = True                   # simulate an in-flight execute()
+    with pytest.raises(AssertionError, match="between engine steps"):
+        eng.install_weights(eng.params, 1)
+
+
+def test_staged_weights_apply_at_next_step(fleet_setup):
+    eng = _mk_engine(fleet_setup)
+    eng.submit(tasks.random_prompt(0, 6), max_new=4, rid=0)
+    eng.stage_weights(_next_version(fleet_setup), 7)
+    assert eng.weight_version == 0          # not yet — staged only
+    eng.step()
+    assert eng.weight_version == 7
+
+
+def test_tokens_carry_the_version_that_produced_them(fleet_setup):
+    eng = _mk_engine(fleet_setup)
+    eng.submit(tasks.random_prompt(1, 6), max_new=6, rid=0)
+    for _ in range(3):
+        eng.step()
+    eng.install_weights(_next_version(fleet_setup), 1)
+    while not eng.done:
+        eng.step()
+    (req,) = eng.done
+    assert len(req.token_versions) == len(req.generated) == 6
+    assert len(req.token_logps) == len(req.generated)
+    assert req.token_versions == sorted(req.token_versions)
+    assert set(req.token_versions) == {0, 1}
+
+
+# ---------------------------------------------------------------------------
+# frontend: dispatch, streaming, fleet-wide swap
+# ---------------------------------------------------------------------------
+
+def test_dispatch_balances_across_replicas(fleet_setup):
+    fe = ServingFrontend([_mk_engine(fleet_setup, seed=i) for i in range(2)])
+    for i in range(4):
+        fe.submit(tasks.random_prompt(i, 5), max_new=4, rid=i)
+    loads = [fe._load(e) for e in fe.engines]
+    assert loads == [2, 2], loads
+    replicas = sorted(t.replica for t in fe._tracked.values())
+    assert replicas == [0, 0, 1, 1]
+
+
+def test_frontend_rejects_mixed_version_fleet(fleet_setup):
+    engines = [_mk_engine(fleet_setup, version=0),
+               _mk_engine(fleet_setup, version=1)]
+    with pytest.raises(ValueError, match="disagree on weight version"):
+        ServingFrontend(engines)
+
+
+def test_frontend_update_is_monotonic_and_fleet_wide(fleet_setup):
+    fe = ServingFrontend([_mk_engine(fleet_setup, seed=i) for i in range(2)])
+    fe.update_weights(_next_version(fleet_setup), version=2)
+    assert all(e.weight_version == 2 for e in fe.engines)
+    with pytest.raises(ValueError, match="monotonic"):
+        fe.update_weights(fe.engines[0].params, version=1)
+
+
+def test_streaming_increments_reassemble_the_final_output(fleet_setup):
+    fe = ServingFrontend([_mk_engine(fleet_setup, seed=i) for i in range(2)])
+    for i in range(3):
+        fe.submit(tasks.random_prompt(10 + i, 5), max_new=5, rid=i)
+    streamed = {i: [] for i in range(3)}
+    swapped = False
+    while fe.has_work():
+        if not swapped and fe.steps >= 2:
+            fe.update_weights(_next_version(fleet_setup), version=1)
+            swapped = True
+        for out in fe.step():
+            streamed[out.rid] += list(
+                zip(out.new_token_ids, out.new_versions))
+    rep = fe.run()                           # backfills finals only
+    assert not rep.stalled
+    assert [o.rid for o in rep.outputs] == [0, 1, 2]
+    for out in rep.outputs:
+        comp = out.output
+        assert comp.finished and comp.finish_reason == FINISH_LENGTH
+        assert streamed[out.rid] == list(
+            zip(comp.token_ids, comp.versions))
+        assert len(comp.logps) == len(comp.token_ids)
+        assert comp.versions == sorted(comp.versions)
+    assert rep.weight_version == 1
+    all_versions = {v for o in rep.outputs for v in o.output.versions}
+    assert all_versions == {0, 1}
+
+
+def test_eos_maps_to_stop_finish_reason(fleet_setup):
+    cfg, _params, prec, roll = fleet_setup
+    eng = ServingEngine(roll, cfg, prec, temperature=0.0, max_slots=2,
+                        max_seq_len=48, eos_id=tasks.EOS, want_logps=True)
+    fe = ServingFrontend([eng])
+    fe.submit(tasks.random_prompt(3, 5), max_new=30, rid=0)
+    rep = fe.run()
+    (out,) = rep.outputs
+    expected = (FINISH_STOP if out.output.token_ids[-1] == tasks.EOS
+                else FINISH_LENGTH)
+    assert out.output.finish_reason == expected
+
+
+# ---------------------------------------------------------------------------
+# version-aware correction math
+# ---------------------------------------------------------------------------
+
+def _prec(correction, **kw):
+    return dataclasses.replace(FP8_LINEAR_ROLLOUT, correction=correction,
+                               **kw)
+
+
+def test_versioned_correction_degenerates_to_plain(fleet_setup):
+    key = jax.random.key(0)
+    lt = jax.random.normal(key, (2, 8)) * 0.1
+    lr = lt + jax.random.normal(jax.random.key(1), (2, 8)) * 0.1
+    mask = jnp.ones((2, 8))
+    prec = _prec(RolloutCorrection.TIS)
+    w_plain = correction_weights(lt, lr, prec)
+    w_ver = versioned_correction_weights(
+        lt, lr, jnp.zeros((2, 8), jnp.int32), mask, prec,
+        num_versions=1, normalize=False)
+    np.testing.assert_allclose(np.asarray(w_ver), np.asarray(w_plain),
+                               rtol=1e-6)
+
+
+def test_versioned_correction_none_is_identity():
+    lt, lr = jnp.zeros((1, 4)), jnp.ones((1, 4))
+    w = versioned_correction_weights(
+        lt, lr, jnp.zeros((1, 4), jnp.int32), jnp.ones((1, 4)),
+        _prec(RolloutCorrection.NONE), num_versions=2)
+    np.testing.assert_array_equal(np.asarray(w), 1.0)
+
+
+def test_per_version_self_normalization():
+    """Each version group is its own proposal: after normalization the
+    masked mean weight within every version is 1 (clip set high enough
+    not to bite)."""
+    key = jax.random.key(2)
+    lt = jax.random.normal(key, (4, 6)) * 0.5
+    lr = jax.random.normal(jax.random.key(3), (4, 6)) * 0.5
+    versions = jnp.concatenate(
+        [jnp.zeros((4, 3), jnp.int32), jnp.ones((4, 3), jnp.int32)], axis=1)
+    mask = jnp.ones((4, 6))
+    w = versioned_correction_weights(
+        lt, lr, versions, mask, _prec(RolloutCorrection.TIS, tis_clip=1e9),
+        num_versions=2)
+    for v in (0, 1):
+        sel = np.asarray(versions) == v
+        np.testing.assert_allclose(np.asarray(w)[sel].mean(), 1.0, rtol=1e-5)
+
+
+def test_versioned_mis_band_is_binary():
+    lt = jnp.log(jnp.array([[1.0, 4.0, 0.1, 1.5]]))
+    lr = jnp.zeros((1, 4))
+    w = versioned_correction_weights(
+        lt, lr, jnp.zeros((1, 4), jnp.int32), jnp.ones((1, 4)),
+        _prec(RolloutCorrection.MIS), num_versions=1, normalize=False)
+    np.testing.assert_allclose(np.asarray(w), [[1.0, 0.0, 0.0, 1.0]])
+
+
+def test_versioned_correction_is_stop_gradient():
+    def loss(lt):
+        w = versioned_correction_weights(
+            lt, jnp.zeros((1, 4)), jnp.zeros((1, 4), jnp.int32),
+            jnp.ones((1, 4)), _prec(RolloutCorrection.TIS), num_versions=1)
+        return jnp.sum(w)
+
+    g = jax.grad(loss)(jnp.ones((1, 4)) * 0.3)
+    np.testing.assert_array_equal(np.asarray(g), 0.0)
+
+
+def test_versioned_mismatch_stats_counts_tokens_per_version():
+    lt = jnp.zeros((2, 4))
+    lr = jnp.zeros((2, 4)) - 0.1
+    versions = jnp.array([[0, 0, 1, 1], [0, 1, 1, 1]], jnp.int32)
+    mask = jnp.array([[1, 1, 1, 0], [1, 1, 1, 1]], jnp.float32)
+    s = versioned_mismatch_stats(lr, lt, versions, mask, num_versions=3)
+    np.testing.assert_array_equal(
+        np.asarray(s["tokens_per_version"]), [3.0, 4.0, 0.0])
+    assert np.all(np.asarray(s["mismatch_kl_per_version"])[:2] >= 0)
+
+
+# ---------------------------------------------------------------------------
+# weight syncer + trainer fleet backend
+# ---------------------------------------------------------------------------
+
+def test_weight_syncer_versions_and_stats(fleet_setup):
+    cfg, params, prec, _ = fleet_setup
+    syncer = WeightSyncer(prec)
+    pushes = [syncer.push(params) for _ in range(3)]
+    assert [p.version for p in pushes] == [1, 2, 3]
+    assert all(isinstance(p, VersionedWeights) for p in pushes)
+    assert pushes[0].stats["weight_version"] == 1
+
+
+def test_trainer_fleet_backend_smoke():
+    from repro.configs import get_config
+
+    cfg = get_config("qwen3-8b").reduced(
+        n_layers=2, d_model=64, d_ff=128, vocab_size=tasks.VOCAB_SIZE,
+        n_heads=4, n_kv_heads=2, d_head=16)
+    rl = RLConfig(precision=FP8_LINEAR_ROLLOUT, prompt_batch=2,
+                  n_per_prompt=2, max_prompt_len=8, max_new_tokens=4,
+                  rollout_backend="fleet", fleet_replicas=2,
+                  fleet_max_slots=4, seed=0)
+    tr = RLTrainer(cfg, rl)
+    m1 = tr.train_step()
+    m2 = tr.train_step()
+    assert tr.syncer.version == 2
+    assert tr._fleet is not None
+    assert all(e.weight_version == 2 for e in tr._fleet.engines)
+    for m in (m1, m2):
+        assert np.isfinite(m["loss"])

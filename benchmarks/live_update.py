@@ -26,6 +26,16 @@ the token-unit clock the other serving benchmarks use:
      from the old-version oracle after the swap (proving the new
      weights actually took effect).
 
+   * **versioned mismatch KL** (the ROADMAP fleet residual): every
+     collected token is rescored teacher-forced under the latest
+     snapshot and `rl.correction.versioned_mismatch_stats` buckets the
+     k3 KL by generating version.  A post-swap wave of requests served
+     entirely under the current version gates `kl_current_pure ~ 0`
+     (the trainer rescore reproduces serving numerics bit-for-bit on
+     pure on-policy rollouts), while stale versions must show real
+     drift; spanning-request suffixes keep their honest nonzero
+     mixture KL in the reported per-version table.
+
 2. **Replica scaling (no updates).**  The same trace through 1 and 2
    replicas.  The fleet clock charges each step the max over replicas of
    that replica's `cost_tokens` (replicas run in parallel), so splitting
@@ -46,8 +56,8 @@ import numpy as np
 from repro.configs import tiny_serving_config as _cfg
 from repro.core.precision import FP8_LINEAR_ROLLOUT
 from repro.data import tasks
-from repro.models import init_params
-from repro.rl import sync_policy_weights
+from repro.models import init_params, token_logprobs
+from repro.rl import sync_policy_weights, versioned_mismatch_stats
 from repro.serving import ServingEngine, ServingFrontend
 
 
@@ -77,12 +87,14 @@ def _versions(seed: int, n_versions: int, precision):
     return out
 
 
-def _mk_engine(params, precision, *, seed, version=0, max_slots=4):
+def _mk_engine(params, precision, *, seed, version=0, max_slots=4,
+               want_logps=False):
     # eos disabled: every request runs to max_new, so "zero dropped"
     # means exact token counts, and oracle streams align position-wise
     return ServingEngine(params, _cfg(), precision, max_slots=max_slots,
                          max_seq_len=48, temperature=0.0, seed=seed,
-                         eos_id=None, weight_version=version)
+                         eos_id=None, weight_version=version,
+                         want_logps=want_logps)
 
 
 # ---------------------------------------------------------------------------
@@ -98,7 +110,8 @@ def run_live_update(n_requests: int = 6, max_new: int = 10,
     # short requests finish inside version 0; long ones span the swaps
     budgets = [3 if i % 2 == 0 else max_new for i in range(n_requests)]
 
-    fe = ServingFrontend([_mk_engine(snapshots[0], precision, seed=seed)])
+    fe = ServingFrontend([_mk_engine(snapshots[0], precision, seed=seed,
+                                     want_logps=True)])
     for i, p in enumerate(prompts):
         fe.submit(p, max_new=budgets[i], rid=i)
 
@@ -120,7 +133,24 @@ def run_live_update(n_requests: int = 6, max_new: int = 10,
                 collected[out.rid] = out.output
         steps += 1
 
-    dropped = n_requests - len(collected)
+    # second wave AFTER the last install: requests generated entirely
+    # under the current version — the on-policy reference population
+    # whose mismatch KL must vanish (their KV was never written by any
+    # other version, so the trainer-side rescore sees the same numerics)
+    wave2 = _prompts(2, seed + 99)
+    for j, p in enumerate(wave2):
+        fe.submit(p, max_new=max_new, rid=n_requests + j)
+    while fe.has_work() and steps < 3000:
+        installed = fe.weight_version
+        for out in fe.step():
+            shadow_ok &= all(v == installed for v in out.new_versions)
+            if out.finished:
+                collected[out.rid] = out.output
+        steps += 1
+    prompts = prompts + wave2
+    budgets = budgets + [max_new] * len(wave2)
+
+    dropped = len(prompts) - len(collected)
     corrupted = sum(
         1 for i, c in collected.items()
         if len(c.token_ids) != budgets[i]
@@ -158,7 +188,7 @@ def run_live_update(n_requests: int = 6, max_new: int = 10,
                 post_swap_diverged += 1
 
     return {
-        "requests": n_requests,
+        "requests": len(prompts),
         "completed": len(collected),
         "dropped": dropped,
         "corrupted": corrupted,
@@ -171,7 +201,81 @@ def run_live_update(n_requests: int = 6, max_new: int = 10,
         "post_swap_diverged": post_swap_diverged,
         "steps": steps,
         "clock_tokens": fe.clock_tokens,
+        "versioned_kl": _versioned_kl(collected, prompts, snapshots),
     }
+
+
+def _versioned_kl(collected, prompts, snapshots) -> dict:
+    """Per-version mismatch-KL table (paper §2.1.3's versioned monitor,
+    `rl.correction.versioned_mismatch_stats` on real serving output).
+
+    Every collected token is scored teacher-forced under the LATEST
+    snapshot — the trainer's view of pi_theta at update time — and its
+    k3 KL vs the engine-recorded rollout logprob is bucketed by the
+    weight version that generated it.
+
+    The current-version bucket mixes two populations: tokens from
+    requests generated ENTIRELY under the current version (pure
+    on-policy — the rescore reproduces the serving numerics exactly, so
+    their KL vanishes) and post-swap suffixes of spanning requests,
+    whose KV prefix was physically written under old weights while the
+    rescore recomputes it under the new ones — a true policy mixture
+    with genuinely nonzero KL (exactly what versioned TIS reweights).
+    `kl_current_pure` isolates the first population for the ~0 gate;
+    `mismatch_kl_per_version` keeps the honest mixed monitor values."""
+    rids = sorted(collected)
+    rows = [np.concatenate([prompts[i],
+                            np.asarray(collected[i].token_ids, np.int32)])
+            for i in rids]
+    width = max(len(r) for r in rows)
+    tokens = np.full((len(rows), width), tasks.PAD, np.int32)
+    mask = np.zeros((len(rows), width - 1), np.float32)
+    token_versions = np.zeros((len(rows), width - 1), np.int32)
+    logp_roll = np.zeros((len(rows), width - 1), np.float32)
+    for b, i in enumerate(rids):
+        c = collected[i]
+        tokens[b, :len(rows[b])] = rows[b]
+        p = len(prompts[i])
+        for j, (v, lp) in enumerate(zip(c.versions, c.logps)):
+            # generated token j sits at packed index p+j, scored by
+            # token_logprobs at row p+j-1 (logp of tokens[:, 1:])
+            mask[b, p + j - 1] = 1.0
+            token_versions[b, p + j - 1] = v
+            logp_roll[b, p + j - 1] = lp
+    logp_train, _ = token_logprobs(snapshots[-1], {"tokens": tokens}, _cfg())
+    stats = versioned_mismatch_stats(
+        logp_roll, logp_train, token_versions, mask,
+        num_versions=len(snapshots))
+    current = len(snapshots) - 1
+    # pure on-policy rows: requests whose every token carries the
+    # current version (no old-weights KV anywhere in their prefix)
+    pure_rows = np.array([set(collected[i].versions) == {current}
+                          for i in rids], bool)
+    stats_pure = versioned_mismatch_stats(
+        logp_roll, logp_train, token_versions,
+        mask * pure_rows[:, None], num_versions=len(snapshots))
+    table = {
+        "num_versions": len(snapshots),
+        "current_version": current,
+        "tokens_per_version": [
+            int(x) for x in np.asarray(stats["tokens_per_version"])],
+        "mismatch_kl_per_version": [
+            float(x) for x in np.asarray(stats["mismatch_kl_per_version"])],
+        "is_weight_mean_per_version": [
+            float(x)
+            for x in np.asarray(stats["is_weight_mean_per_version"])],
+    }
+    table["kl_current"] = table["mismatch_kl_per_version"][current]
+    table["pure_current_requests"] = int(pure_rows.sum())
+    table["pure_current_tokens"] = int(np.asarray(
+        stats_pure["tokens_per_version"])[current])
+    table["kl_current_pure"] = float(np.asarray(
+        stats_pure["mismatch_kl_per_version"])[current])
+    stale = [k for v, (k, n) in enumerate(zip(
+        table["mismatch_kl_per_version"], table["tokens_per_version"]))
+        if v != current and n > 0]
+    table["kl_stale_max"] = max(stale) if stale else 0.0
+    return table
 
 
 # ---------------------------------------------------------------------------
@@ -233,6 +337,22 @@ def check(results: dict) -> None:
     assert u["post_swap_diverged"] >= 1, (
         "no spanning request diverged from the old-version oracle after "
         "the swap — the hot-swap did not take effect")
+    k = u["versioned_kl"]
+    cur = k["current_version"]
+    assert k["tokens_per_version"][cur] > 0, \
+        "no tokens generated under the current version"
+    assert k["pure_current_requests"] >= 1 and \
+        k["pure_current_tokens"] > 0, \
+        "no request was generated entirely under the current version"
+    assert abs(k["kl_current_pure"]) < 1e-4, (
+        f"mismatch KL for pure current-version requests must be ~0 (the "
+        f"trainer rescore under the same quantized weights reproduces "
+        f"the serving logprobs): got {k['kl_current_pure']:.3e}")
+    assert k["kl_stale_max"] > 1e-3, (
+        f"stale-version KL ({k['kl_stale_max']:.3e}) shows no drift — "
+        f"the per-version monitor is not separating versions")
+    assert k["kl_stale_max"] > 100 * abs(k["kl_current_pure"]), (
+        "stale-version KL should dominate the pure current-version KL")
     s = results["scaling"]
     assert s["bit_exact"], "replica count changed decoded tokens"
     assert s["scaling_x"] >= 1.5, (
@@ -251,6 +371,11 @@ def summarize(results: dict):
          f"oracle_prefix_exact={u['oracle_prefix_exact']};"
          f"spanning={u['spanning_requests']};"
          f"diverged={u['post_swap_diverged']}"),
+        ("live_update/versioned_kl", 0.0,
+         f"kl_current_pure={u['versioned_kl']['kl_current_pure']:.2e};"
+         f"kl_current_mixed={u['versioned_kl']['kl_current']:.2e};"
+         f"kl_stale_max={u['versioned_kl']['kl_stale_max']:.2e};"
+         f"tokens={u['versioned_kl']['tokens_per_version']}"),
         ("live_update/scaling", 0.0,
          f"scaling_x={s['scaling_x']:.2f};"
          f"r1_tpc={s['r1']['tokens_per_clock']:.4f};"

@@ -1,0 +1,413 @@
+"""Observability gate: tracing changes nothing, and the trace adds up.
+
+One stressful serving run — chunked prefill (chunk=4), speculative
+decoding (K=4 drafts), staggered arrivals, a mid-run KV-budget shrink
+that forces swap preemption, and a mid-run FP8 weight hot-swap — driven
+manually (scheduler.step -> engine.execute) twice at identical settings:
+once with a `StepTracer` installed, once with the `NULL_TRACER` default.
+Three headline gates:
+
+1. **Zero perturbation.**  The traced run must be bit-exact vs the
+   untraced run: same tokens, same per-token weight versions, same
+   engine stats dict.  Instrumentation that changes the serve is not
+   observability, it is a second workload — the engine contract is ONE
+   ``if self.tracer.enabled:`` branch per site when disabled, and
+   read-only hooks when enabled.
+
+2. **Exact reconciliation.**  The driver independently records every
+   executed decision's `ScheduleDecision.accounting()` and the decode
+   slots' context lengths *before* calling `execute` — ground truth the
+   tracer never sees.  Per step, the event log's token sums (prefill /
+   verify / decode widths, swap-out saves + swap-in restores) must equal
+   that accounting EXACTLY, the `StepEvent` clock chain must be gapless,
+   and the summed `DecodeEvent.hbm_bytes` must equal
+   `roofline.trace_decode_bytes` evaluated at the driver's own context
+   list — the event log is the bytes model made incremental, not a
+   parallel estimate.  Prefill/verify byte fields are re-derived from
+   the driver's captured action args through the same `kv_bytes`
+   functions.
+
+3. **Timeline oracle.**  `obs.timeline`'s TTFT / queue-wait / TPOT
+   p50/p95/p99 must match a from-scratch oracle: raw JSONL-shaped event
+   dicts folded by hand (first token at the last prefill chunk's
+   end-of-step clock, verify bursts landing `committed` tokens at one
+   instant, decode tokens at their step ends) and fed to
+   ``np.percentile`` — pinning both the lifecycle semantics and the
+   no-numpy percentile implementation.
+
+``--json`` also writes ``obs-sample.trace.json`` (Chrome trace-event
+JSON of the traced run) next to it — the CI artifact for loading a real
+trace into Perfetto / chrome://tracing.
+
+Run directly for CSV rows, or with --json/--check from the CI
+bench-smoke job.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+
+import jax
+import numpy as np
+
+from repro.configs import tiny_serving_config as _cfg
+from repro.core.precision import FP8_KV_ONLY_ROLLOUT
+from repro.data import tasks
+from repro.models import init_params
+from repro.obs import NULL_TRACER, StepTracer, chrome_trace
+from repro.rl import sync_policy_weights
+from repro.roofline import (
+    KVGeometry,
+    prefill_chunk_hbm_bytes,
+    trace_decode_bytes,
+    verify_hbm_bytes,
+)
+from repro.serving import ServingEngine, SpecConfig
+from repro.serving.scheduler import Admit, Prefill, Verify
+
+
+def _spec_prompts(n: int, seed: int, pattern_len: int = 4,
+                  repeats: int = 3):
+    """Repetitive-suffix prompts (the spec_decode shape): the n-gram
+    proposer locks on, so the run exercises Draft/Verify events."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n):
+        pat = rng.integers(4, 19, size=pattern_len)
+        out.append(np.concatenate(
+            [[tasks.BOS], rng.integers(4, 19, size=3),
+             np.tile(pat, repeats)]).astype(np.int32))
+    return out
+
+
+def _drive(params, *, tracer, seed: int, n_requests: int, max_new: int,
+           shrink_at: int, swap_params=None, swap_at: int = 10):
+    """One manually-driven serve.  Returns (tokens, versions, stats,
+    ledger) where `ledger[i]` is the driver's own pre-execute record of
+    executed step i: the decision's accounting dict, the decode slots'
+    context lengths, and the prefill/verify action args."""
+    precision = FP8_KV_ONLY_ROLLOUT
+    prompts = _spec_prompts(n_requests, seed)
+    eng = ServingEngine(params, _cfg(), precision, max_slots=3,
+                        max_seq_len=48, temperature=0.0, seed=seed,
+                        eos_id=None, block_size=4, admission="ondemand",
+                        prefill_chunk=4,
+                        spec=SpecConfig(num_draft_tokens=4),
+                        tracer=tracer)
+    # staggered arrivals: two up front, then one every 2 executed steps
+    arrivals = [0, 0] + [2 * (i - 1) for i in range(2, n_requests)]
+    pending = list(zip(arrivals, range(n_requests)))
+
+    ledger = []
+    executed = 0
+    guard = 4000
+    while guard > 0:
+        guard -= 1
+        while pending and pending[0][0] <= executed:
+            _, i = pending.pop(0)
+            eng.submit(prompts[i], max_new=max_new, rid=i)
+        if executed == shrink_at:
+            # the RL reality: the trainer reclaims HBM at a sync —
+            # shrink the token budget to just under what is live, so
+            # the next plan MUST evict (swap preemption on the trace)
+            used = eng.block_mgr.blocks_in_use + eng._state_blocks_in_use
+            eng.budget_tokens = max(eng.block_size * 2,
+                                    (used - 1) * eng.block_size)
+        if swap_params is not None and executed == swap_at:
+            eng.stage_weights(swap_params, 1)   # installs at next boundary
+        if not (eng.queue or any(r is not None for r in eng.slot_req)):
+            if pending:
+                executed += 1       # idle tick until the next arrival
+                continue
+            break
+        eng._apply_staged_weights()
+        decision = eng.scheduler.step(eng)
+        if decision.is_empty:
+            raise AssertionError("observability trace stalled")
+        # predicted decode contexts from PRE-execute state + the
+        # decision's own planned effects (actions run before the fused
+        # decode: a final prefill chunk leaves cached_tokens at its
+        # `end`, a swap-in admit restores the saved row count) — ground
+        # truth derived without the tracer
+        ctx = {}
+        for s in decision.decode_slots:
+            r = eng.slot_req[s]
+            ctx[s] = r.cached_tokens if r is not None else 0
+        for a in decision.actions:
+            if isinstance(a, Admit) and a.swap_in and a.slot in ctx:
+                ctx[a.slot] = a.req.swap_tokens
+            elif isinstance(a, Prefill) and a.slot in ctx:
+                ctx[a.slot] = a.end
+        ledger.append({
+            "acct": decision.accounting(),
+            "contexts": [ctx[s] + 1 for s in decision.decode_slots],
+            "prefills": [(a.start, a.end, a.width) for a in decision.actions
+                         if isinstance(a, Prefill)],
+            "verifies": [(a.start, len(a.tokens), a.width)
+                         for a in decision.actions
+                         if isinstance(a, Verify)],
+        })
+        eng.execute(decision)
+        executed += 1
+    assert guard > 0, "runaway observability drive"
+    tokens = {r.rid: [int(t) for t in r.generated] for r in eng.done}
+    versions = {r.rid: list(r.token_versions) for r in eng.done}
+    return tokens, versions, dict(eng.stats), ledger, eng
+
+
+def _reconcile(events, ledger, geo: KVGeometry) -> dict:
+    """Event sums vs the driver's ground truth: exact, per step."""
+    by_step: dict = {}
+    for e in events:
+        by_step.setdefault(e.step, []).append(e)
+    steps = [e for e in events if e.kind == "step"]
+    assert len(steps) == len(ledger), \
+        f"{len(steps)} StepEvents vs {len(ledger)} executed decisions"
+
+    clock = 0.0
+    decode_contexts = []
+    decode_bytes = 0
+    for i, (se, led) in enumerate(zip(steps, ledger)):
+        acct = led["acct"]
+        assert se.step == i and se.clock_before == clock, \
+            f"step {i}: clock chain broken ({se.clock_before} != {clock})"
+        clock += se.cost_tokens
+        for k in ("prefill_tokens", "verify_tokens", "decode_tokens",
+                  "swap_tokens", "cost_tokens"):
+            got = getattr(se, k) if k != "decode_tokens" \
+                else se.decode_tokens
+            assert got == acct[k], \
+                f"step {i}: StepEvent.{k}={got} != accounting {acct[k]}"
+        evs = by_step.get(i, [])
+        pf = [e for e in evs if e.kind == "prefill"]
+        vf = [e for e in evs if e.kind == "verify"]
+        dc = [e for e in evs if e.kind == "decode"]
+        so = [e for e in evs if e.kind == "swap_out"]
+        ad = [e for e in evs if e.kind == "admit"]
+        assert sum(e.cost_tokens for e in pf) == acct["prefill_tokens"], \
+            f"step {i}: prefill event widths don't sum to the accounting"
+        assert sum(e.cost_tokens for e in vf) == acct["verify_tokens"], \
+            f"step {i}: verify event widths don't sum to the accounting"
+        assert sum(e.cost_tokens for e in dc) == acct["decode_tokens"], \
+            f"step {i}: decode event tokens don't sum to the accounting"
+        moved = sum(e.tokens_moved for e in so) \
+            + sum(e.restored_tokens for e in ad)
+        assert moved == acct["swap_tokens"], \
+            f"step {i}: swap event tokens {moved} != " \
+            f"accounting {acct['swap_tokens']}"
+        # event args == the driver's captured action args, and byte
+        # fields == the kv_bytes model evaluated at those args
+        assert [(e.start, e.end, e.cost_tokens) for e in pf] \
+            == led["prefills"], f"step {i}: prefill args drifted"
+        assert [(e.start, e.k, e.cost_tokens) for e in vf] \
+            == led["verifies"], f"step {i}: verify args drifted"
+        for e in pf:
+            want = prefill_chunk_hbm_bytes(geo, e.start, e.end - e.start,
+                                           e.end)
+            assert e.hbm_bytes == want, f"step {i}: prefill bytes drifted"
+        for e in vf:
+            want = verify_hbm_bytes(geo, e.start, e.k)
+            assert e.hbm_bytes == want, f"step {i}: verify bytes drifted"
+        for e in dc:
+            assert e.contexts == led["contexts"], \
+                f"step {i}: decode contexts {e.contexts} != " \
+                f"driver-captured {led['contexts']}"
+        decode_contexts.extend(led["contexts"])
+        decode_bytes += sum(e.hbm_bytes for e in dc)
+
+    model_bytes = trace_decode_bytes(geo, decode_contexts)
+    assert decode_bytes == model_bytes, (
+        f"summed DecodeEvent.hbm_bytes {decode_bytes} != "
+        f"trace_decode_bytes {model_bytes} at the driver's contexts")
+    return {
+        "steps_checked": len(steps),
+        "cost_tokens": int(sum(se.cost_tokens for se in steps)),
+        "decode_steps": len(decode_contexts),
+        "decode_hbm_bytes": int(decode_bytes),
+    }
+
+
+def _oracle_latency(rows) -> dict:
+    """From-scratch lifecycle fold over raw event DICTS (the JSONL view)
+    + np.percentile — independent of obs.timeline's implementation."""
+    step_start, step_end = {}, {}
+    for r in rows:
+        if r["kind"] == "step":
+            step_start[r["step"]] = r["clock_before"]
+            step_end[r["step"]] = r["clock_before"] + r["cost_tokens"]
+    submit, first_admit, arrivals = {}, {}, {}
+    got_first = set()
+    for r in rows:
+        k = r["kind"]
+        if k == "submit":
+            submit[r["rid"]] = r["clock"]
+        elif k == "admit" and not r["swap_in"] \
+                and r["rid"] not in first_admit:
+            first_admit[r["rid"]] = step_start[r["step"]]
+        elif k == "prefill" and r["last"] and r["rid"] not in got_first:
+            got_first.add(r["rid"])
+            arrivals.setdefault(r["rid"], []).append(step_end[r["step"]])
+        elif k == "verify":
+            arrivals.setdefault(r["rid"], []).extend(
+                [step_end[r["step"]]] * r["committed"])
+        elif k == "decode":
+            for rid in r["rids"]:
+                arrivals.setdefault(rid, []).append(step_end[r["step"]])
+    ttft = [arrivals[rid][0] - submit[rid]
+            for rid in arrivals if rid in submit]
+    waits = [first_admit[rid] - submit[rid]
+             for rid in first_admit if rid in submit]
+    tpot = [b - a for cs in arrivals.values() for a, b in zip(cs, cs[1:])]
+
+    def pack(xs):
+        if not xs:
+            return {"n": 0}
+        return {"n": len(xs), "mean": float(np.mean(xs)),
+                "p50": float(np.percentile(xs, 50)),
+                "p95": float(np.percentile(xs, 95)),
+                "p99": float(np.percentile(xs, 99))}
+
+    return {"ttft": pack(ttft), "queue_wait": pack(waits),
+            "tpot": pack(tpot)}
+
+
+def _latency_matches(summary: dict, oracle: dict) -> bool:
+    for key in ("ttft", "queue_wait", "tpot"):
+        a, b = summary[key], oracle[key]
+        if a["n"] != b["n"]:
+            return False
+        for stat in ("mean", "p50", "p95", "p99"):
+            if a["n"] and not math.isclose(a[stat], b[stat],
+                                           rel_tol=1e-12, abs_tol=1e-9):
+                return False
+    return True
+
+
+# ---------------------------------------------------------------------------
+# experiment
+# ---------------------------------------------------------------------------
+
+def run_observability(n_requests: int = 5, max_new: int = 10,
+                      seed: int = 0) -> dict:
+    precision = FP8_KV_ONLY_ROLLOUT
+    base = init_params(_cfg(), jax.random.key(seed))
+    roll, _ = sync_policy_weights(base, precision)
+    nudged = jax.tree.map(
+        lambda x: x * 1.05 if hasattr(x, "dtype") else x, base)
+    roll2, _ = sync_policy_weights(nudged, precision)
+
+    kw = dict(seed=seed, n_requests=n_requests, max_new=max_new,
+              shrink_at=6, swap_params=roll2, swap_at=10)
+    tracer = StepTracer()
+    tok_t, ver_t, stats_t, ledger, eng = _drive(roll, tracer=tracer, **kw)
+    tok_p, ver_p, stats_p, _, _ = _drive(roll, tracer=NULL_TRACER, **kw)
+
+    geo = KVGeometry.from_engine(eng)
+    recon = _reconcile(tracer.events, ledger, geo)
+    summary = tracer.latency_summary()
+    oracle = _oracle_latency([e.to_dict() for e in tracer.events])
+
+    kinds = sorted({e.kind for e in tracer.events})
+    return {
+        "requests": n_requests,
+        "completed": len(tok_t),
+        "bit_exact": tok_t == tok_p,
+        "versions_exact": ver_t == ver_p,
+        "stats_equal": stats_t == stats_p,
+        "events": len(tracer.events),
+        "event_kinds": kinds,
+        "preemptions": stats_t["preemptions"],
+        "spec_steps": stats_t["spec_steps"],
+        "prefill_chunks": stats_t["prefill_chunks"],
+        "versions_seen": sorted({v for vs in ver_t.values() for v in vs}),
+        "reconcile": recon,
+        "latency": summary,
+        "latency_oracle_exact": _latency_matches(summary, oracle),
+        "_chrome": chrome_trace(tracer.events),    # stripped from --json
+    }
+
+
+# ---------------------------------------------------------------------------
+# harness / CI plumbing
+# ---------------------------------------------------------------------------
+
+def check(results: dict) -> None:
+    """The CI gates for the zero-perturbation observability claims."""
+    o = results["observability"]
+    assert o["completed"] == o["requests"], \
+        f"only {o['completed']}/{o['requests']} requests completed"
+    assert o["bit_exact"], \
+        "tracing changed decoded tokens — instrumentation perturbed " \
+        "the serve"
+    assert o["versions_exact"], "tracing changed per-token versions"
+    assert o["stats_equal"], "tracing changed engine stats"
+    # the trace must actually be stressful, or the reconciliation is
+    # vacuous: preemption, speculation, chunked prefill, a hot-swap
+    assert o["preemptions"] >= 1, "trace never preempted"
+    assert o["spec_steps"] >= 1, "trace never speculated"
+    assert o["prefill_chunks"] >= 2, "trace never chunked a prefill"
+    assert o["versions_seen"] == [0, 1], \
+        f"trace never crossed the hot-swap: {o['versions_seen']}"
+    assert o["latency"]["preemption_spans"] >= 1, \
+        "timeline lost the preemption span"
+    assert o["latency_oracle_exact"], \
+        "timeline percentiles disagree with the numpy oracle"
+    for kind in ("submit", "admit", "swap_out", "prefill", "draft",
+                 "verify", "decode", "finish", "weights", "step",
+                 "gauge"):
+        assert kind in o["event_kinds"], f"no {kind!r} events in trace"
+    # _reconcile already asserted exactness; keep its shape honest here
+    assert o["reconcile"]["steps_checked"] > 10
+    assert o["reconcile"]["decode_hbm_bytes"] > 0
+
+
+def summarize(results: dict):
+    o = results["observability"]
+    r = o["reconcile"]
+    lat = o["latency"]
+    return [
+        ("observability/zero_perturbation", 0.0,
+         f"bit_exact={o['bit_exact']};stats_equal={o['stats_equal']};"
+         f"events={o['events']};kinds={len(o['event_kinds'])}"),
+        ("observability/reconcile", 0.0,
+         f"steps={r['steps_checked']};cost_tokens={r['cost_tokens']};"
+         f"decode_bytes={r['decode_hbm_bytes']}"),
+        ("observability/latency", 0.0,
+         f"ttft_p50={lat['ttft']['p50']:.1f};"
+         f"tpot_p50={lat['tpot']['p50']:.1f};"
+         f"preempted={lat['preempted_requests']};"
+         f"oracle_exact={o['latency_oracle_exact']}"),
+    ]
+
+
+def main(quick: bool = False, json_path=None, run_check: bool = False):
+    results = {"observability": run_observability(
+        n_requests=4 if quick else 5,
+        max_new=8 if quick else 10)}
+    for name, us, derived in summarize(results):
+        print(f"{name},{us:.1f},{derived}")
+    chrome = results["observability"].pop("_chrome")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(results, f, indent=2, default=float)
+        print(f"# wrote {json_path}")
+        sample = os.path.join(os.path.dirname(json_path) or ".",
+                              "obs-sample.trace.json")
+        with open(sample, "w") as f:
+            json.dump(chrome, f)
+        print(f"# wrote {sample} (load in Perfetto / chrome://tracing)")
+    if run_check:
+        check(results)
+        print("# observability invariants hold (tracing-on bit-exact, "
+              "event sums == decision accounting == bytes model, "
+              "percentiles == numpy oracle)")
+    return results
+
+
+if __name__ == "__main__":
+    try:                               # repo-root module mode
+        from benchmarks.common import bench_cli
+    except ImportError:                # script mode (CI bench-smoke)
+        from common import bench_cli
+    bench_cli("observability", main)

@@ -21,6 +21,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.data import tasks
 from repro.launch.train import PRECISIONS
+from repro.obs import JsonlSink, StepTracer, chrome_trace
 from repro.models import init_params
 from repro.rl import WeightSyncer, sync_policy_weights
 from repro.serving import (
@@ -93,6 +94,13 @@ def main(argv=None):
                          "RL trainer's weight pushes; in-flight requests "
                          "keep running, their tokens carry the version "
                          "live at each decode step)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome trace-event JSON of the run "
+                         "(load in Perfetto / chrome://tracing; enables "
+                         "the step tracer)")
+    ap.add_argument("--events-out", default=None, metavar="PATH",
+                    help="write the raw typed event log as JSONL (one "
+                         "event per line; enables the step tracer)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.src_pad < 1:
@@ -123,8 +131,16 @@ def main(argv=None):
     if fleet and args.shrink_at is not None:
         ap.error("--shrink-at applies to the single-engine path only")
 
+    tracing = args.trace_out is not None or args.events_out is not None
+    tracers = []
+
     def mk_engine(i: int) -> ServingEngine:
+        tracer = None
+        if tracing:
+            tracer = StepTracer(replica=i)
+            tracers.append(tracer)
         return ServingEngine(rollout_params, cfg, precision,
+                             tracer=tracer,
                              max_slots=args.slots, max_seq_len=64,
                              kv_budget_bytes=budget, seed=args.seed + i,
                              block_size=args.block_size,
@@ -152,6 +168,24 @@ def main(argv=None):
             target.submit(prob.prompt_ids, max_new=args.max_new, rid=i,
                           frames=frames)
 
+    def write_traces():
+        if not tracing:
+            return
+        if args.events_out:
+            with JsonlSink(args.events_out) as sink:
+                for t in tracers:
+                    for e in t.events:
+                        row = e.to_dict()
+                        row.setdefault("replica", t.replica)
+                        sink.write(row)
+        if args.trace_out:
+            rows = []
+            for t in tracers:
+                rows.extend(chrome_trace(
+                    t.events, replica=t.replica)["traceEvents"])
+            with open(args.trace_out, "w") as f:
+                json.dump({"traceEvents": rows}, f)
+
     if fleet:
         frontend = ServingFrontend([mk_engine(i)
                                     for i in range(args.replicas)])
@@ -175,7 +209,8 @@ def main(argv=None):
         report = frontend.run(max_steps=1000)  # drain + final accounting
         versions = sorted({v for o in report.outputs
                            for v in o.output.versions})
-        print(json.dumps({
+        write_traces()
+        out = {
             "replicas": args.replicas,
             "completed": len(report.outputs),
             "steps": report.steps,
@@ -185,8 +220,12 @@ def main(argv=None):
             "weight_version": report.weight_version,
             "versions_seen": versions,
             "stalled": report.stalled,
+            "kv_pressure": [round(p, 4) for p in report.kv_pressure],
             "sync_ms": round(sync_stats.get("sync_ms", 0.0), 2),
-        }, indent=2))
+        }
+        if report.latency is not None:
+            out["latency"] = report.latency
+        print(json.dumps(out, indent=2))
         return
 
     eng = mk_engine(0)
@@ -197,7 +236,8 @@ def main(argv=None):
             eng.step()
         eng.budget_tokens = int(full * args.shrink_frac)
     report = eng.run()
-    print(json.dumps({
+    write_traces()
+    out = {
         "completed": len(report.completed),
         "steps": report.steps,
         "preemptions": report.preemptions,
@@ -216,7 +256,10 @@ def main(argv=None):
         "kv_bytes_per_token": kv_bytes_per_token(cfg, precision),
         "state_bytes_per_request": state_bytes,
         "sync_ms": round(sync_stats.get("sync_ms", 0.0), 2),
-    }, indent=2))
+    }
+    if report.latency is not None:
+        out["latency"] = report.latency
+    print(json.dumps(out, indent=2))
 
 
 if __name__ == "__main__":

@@ -22,6 +22,7 @@ from repro.core.precision import (
     RolloutCorrection,
 )
 from repro.data import tasks
+from repro.obs import JsonlSink
 from repro.optim import AdamWConfig
 from repro.rl import RLConfig, RLTrainer
 
@@ -34,7 +35,7 @@ PRECISIONS = {
 }
 
 
-def build_trainer(args) -> RLTrainer:
+def build_trainer(args, metrics_sink=None) -> RLTrainer:
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced(vocab_size=tasks.VOCAB_SIZE,
@@ -55,7 +56,7 @@ def build_trainer(args) -> RLTrainer:
         ckpt_every=args.ckpt_every,
         seed=args.seed,
     )
-    return RLTrainer(cfg, rl)
+    return RLTrainer(cfg, rl, metrics_sink=metrics_sink)
 
 
 def main(argv=None):
@@ -81,24 +82,30 @@ def main(argv=None):
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--eval-every", type=int, default=25)
     ap.add_argument("--resume", action="store_true")
-    ap.add_argument("--metrics-out", default=None)
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="stream per-step metrics as JSONL (one step per "
+                         "line, written as each step completes — incl. "
+                         "mismatch-KL, per-version KL breakdowns and "
+                         "TIS/MIS weight ESS)")
     args = ap.parse_args(argv)
 
-    trainer = build_trainer(args)
+    sink = JsonlSink(args.metrics_out) if args.metrics_out else None
+    trainer = build_trainer(args, metrics_sink=sink)
     if args.resume and trainer.restore_checkpoint():
         print(f"resumed from step {trainer.step_idx}")
 
     history = []
-    for _ in range(args.steps):
-        m = trainer.train_step()
-        history.append(m)
-        if m["step"] % args.eval_every == 0 or m["step"] == 1:
-            m["eval_accuracy"] = trainer.evaluate(n_problems=32)
-        print(json.dumps({k: round(v, 5) if isinstance(v, float) else v
-                          for k, v in m.items()}), flush=True)
-    if args.metrics_out:
-        with open(args.metrics_out, "w") as f:
-            json.dump(history, f)
+    try:
+        for _ in range(args.steps):
+            m = trainer.train_step()
+            history.append(m)
+            if m["step"] % args.eval_every == 0 or m["step"] == 1:
+                m["eval_accuracy"] = trainer.evaluate(n_problems=32)
+            print(json.dumps({k: round(v, 5) if isinstance(v, float) else v
+                              for k, v in m.items()}), flush=True)
+    finally:
+        if sink is not None:
+            sink.close()
     return history
 
 

@@ -1,0 +1,287 @@
+"""Typed step-trace events — the observability schema of the serving stack.
+
+One dataclass per executed `ScheduleDecision` action (Admit / SwapOut /
+Grow / Cow / Prefill / Draft / Verify) plus the fused Decode, the
+per-step accounting record (`StepEvent`), pool/fleet gauges
+(`GaugeEvent`), and the request/weight lifecycle markers (`SubmitEvent`,
+`FinishEvent`, `WeightsEvent`).  Every field is JSON-native, so an event
+round-trips through the JSONL sink losslessly: `event.to_dict()` ->
+`json.dumps` -> `json.loads` -> `event_from_dict` reconstructs an equal
+instance (the schema contract `tests/test_observability.py` pins).
+
+Clock convention: the trace lives in the *token-unit clock* every
+serving benchmark uses — one unit per token traced or moved
+(`ScheduleDecision.cost_tokens`).  Events emitted while a step executes
+carry that step's index; the step's end-of-step clock is derived from
+the `StepEvent` stream (`obs.timeline`), because all of a step's work
+completes together (the fused trace retires at once, so its tokens
+share one arrival time).
+
+Byte convention: `hbm_bytes` fields are *modeled* HBM traffic from
+`roofline/kv_bytes` evaluated at the engine's own `KVGeometry` — the
+same analytic model the perf benchmarks gate on, now a live per-step
+counter.  Token costs (`tokens_moved`, widths, decode slot counts) come
+from the decision's accounting, so per-step event sums reconcile
+exactly with `ScheduleDecision.cost_tokens`
+(`benchmarks/observability.py` asserts this).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Type
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    """Base record: `step` is the engine step (execute() call) the event
+    belongs to; between-step events (submit / weights) carry the index
+    of the NEXT step and their own `clock` snapshot."""
+
+    step: int
+
+    kind = "event"              # overridden per subclass
+
+    def to_dict(self) -> dict:
+        """JSON-native dict with the event `kind` tag (the JSONL row)."""
+        d = {"kind": self.kind}
+        d.update(dataclasses.asdict(self))
+        return d
+
+
+@dataclasses.dataclass(frozen=True)
+class SubmitEvent(Event):
+    """A request entered the engine queue (queue-wait clock starts)."""
+
+    rid: int
+    prompt_len: int
+    max_new: int
+    clock: float                # token-unit clock at submission
+    replica: int = 0
+
+    kind = "submit"
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmitEvent(Event):
+    """An executed `Admit`: the request took a slot.  For a swap-in
+    re-admission `restored_tokens` is the host-link restore traffic the
+    decision charged (KV tail past the re-deduped prefix + slot-state
+    block-equivalents); 0 for a fresh admission."""
+
+    rid: int
+    slot: int
+    n_blocks: int               # table entries granted at admission
+    n_shared: int               # leading entries from prefix-index hits
+    swap_in: bool
+    restored_tokens: int = 0
+
+    kind = "admit"
+
+
+@dataclasses.dataclass(frozen=True)
+class SwapOutEvent(Event):
+    """An executed `SwapOut` (preemption): `tokens_moved` is exactly what
+    the decision charged — valid KV rows saved plus the slot-state
+    block-equivalent tokens."""
+
+    rid: int
+    slot: int
+    n_blocks: int               # host-copied pool blocks
+    kv_tokens: int              # valid KV rows saved
+    tokens_moved: int           # kv_tokens + state swap tokens
+
+    kind = "swap_out"
+
+
+@dataclasses.dataclass(frozen=True)
+class GrowEvent(Event):
+    """An executed `Grow`: the slot's block table was extended."""
+
+    rid: int
+    slot: int
+    n_blocks: int               # table size after growth
+
+    kind = "grow"
+
+
+@dataclasses.dataclass(frozen=True)
+class CowEvent(Event):
+    """An executed `Cow`: one shared block privatized before a write.
+    `hbm_bytes` models the block copy (read + write at payload width)."""
+
+    rid: int
+    slot: int
+    src: int
+    dst: int
+    hbm_bytes: int
+
+    kind = "cow"
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefillEvent(Event):
+    """An executed `Prefill` trace (chunk or legacy one-shot).
+    `cost_tokens` is the padded width the decision charged; `hbm_bytes`
+    models the pool context read (`prefill_chunk_hbm_bytes`)."""
+
+    rid: int
+    slot: int
+    start: int
+    end: int
+    cost_tokens: int            # padded trace width
+    last: bool                  # final chunk: sampled the first token
+    oneshot: bool
+    version: int                # weight version live at the trace
+    hbm_bytes: int
+
+    kind = "prefill"
+
+
+@dataclasses.dataclass(frozen=True)
+class DraftEvent(Event):
+    """An executed `Draft`: k tokens proposed for a speculating slot."""
+
+    rid: int
+    slot: int
+    k: int
+
+    kind = "draft"
+
+
+@dataclasses.dataclass(frozen=True)
+class VerifyEvent(Event):
+    """An executed `Verify` trace.  `cost_tokens` is the padded verify
+    width the decision charged (full width even when drafts are
+    rejected); `committed` counts tokens actually appended to the
+    request (accepted + corrected/bonus, truncated at EOS/max_new)."""
+
+    rid: int
+    slot: int
+    start: int                  # cached_tokens at plan time
+    k: int                      # drafts scored
+    cost_tokens: int            # padded trace width
+    accepted: int
+    committed: int
+    version: int
+    hbm_bytes: int              # verify_hbm_bytes at (start, k)
+
+    kind = "verify"
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeEvent(Event):
+    """The fused decode over this step's decode set.  One token per slot;
+    `contexts[i]` is slot `slots[i]`'s reachable context (cached rows +
+    the row being written), the argument `decode_hbm_bytes` is priced
+    at — so summing `hbm_bytes` over a trace equals
+    `trace_decode_bytes(geo, all contexts)` exactly."""
+
+    slots: List[int]
+    rids: List[int]
+    contexts: List[int]
+    cost_tokens: int            # == len(slots)
+    version: int
+    hbm_bytes: int
+
+    kind = "decode"
+
+
+@dataclasses.dataclass(frozen=True)
+class FinishEvent(Event):
+    """A request completed (EOS or max_new) during this step."""
+
+    rid: int
+    n_tokens: int               # total generated tokens
+
+    kind = "finish"
+
+
+@dataclasses.dataclass(frozen=True)
+class WeightsEvent(Event):
+    """A weight hot-swap: `staged=True` for `stage_weights` (queued for
+    the next step boundary), False for the actual install."""
+
+    version: int
+    staged: bool
+    clock: float
+
+    kind = "weights"
+
+
+@dataclasses.dataclass(frozen=True)
+class StepEvent(Event):
+    """End-of-step accounting: the executed decision's token costs and
+    the clock. `clock` is the END-of-step clock (clock_before +
+    cost_tokens) — the arrival time of every token the step emitted."""
+
+    clock_before: float
+    cost_tokens: int
+    prefill_tokens: int
+    verify_tokens: int
+    decode_tokens: int
+    swap_tokens: int
+    version: int
+
+    kind = "step"
+
+    @property
+    def clock(self) -> float:
+        return self.clock_before + self.cost_tokens
+
+
+@dataclasses.dataclass(frozen=True)
+class GaugeEvent(Event):
+    """End-of-step pool/fleet gauges (sampled, not cumulative, except
+    where noted)."""
+
+    clock: float
+    blocks_in_use: int          # allocated pool blocks (cached excluded)
+    blocks_free: int            # truly free (evictor-cached excluded)
+    blocks_cached: int          # evictor cache (reclaimable, index live)
+    state_block_equiv: int      # slot-state block-equivalents pinned
+    slots_active: int
+    max_slots: int
+    queue_len: int
+    kv_pressure: float          # (blocks_in_use + state) / budget blocks
+    prefix_hit_blocks: int      # cumulative stat
+    spec_acceptance: float      # cumulative accepted / drafted
+    staged_pending: bool        # stage_weights awaiting its boundary
+    staged_age: float           # clock units the staged push has waited
+    weight_version: int
+
+    kind = "gauge"
+
+
+_REGISTRY: Dict[str, Type[Event]] = {
+    cls.kind: cls
+    for cls in (SubmitEvent, AdmitEvent, SwapOutEvent, GrowEvent, CowEvent,
+                PrefillEvent, DraftEvent, VerifyEvent, DecodeEvent,
+                FinishEvent, WeightsEvent, StepEvent, GaugeEvent)
+}
+
+EVENT_KINDS = tuple(sorted(_REGISTRY))
+
+
+def event_from_dict(d: dict) -> Event:
+    """Inverse of `Event.to_dict` — reconstruct the typed event from a
+    parsed JSONL row.  Unknown kinds raise (schema drift must be loud).
+    A top-level ``replica`` key is the multi-replica log envelope
+    (merged fleet logs stamp it on every row) and is dropped for kinds
+    whose schema doesn't carry it."""
+    d = dict(d)
+    kind = d.pop("kind", None)
+    if kind not in _REGISTRY:
+        raise ValueError(f"unknown event kind {kind!r}; "
+                         f"schema knows {EVENT_KINDS}")
+    cls = _REGISTRY[kind]
+    if "replica" in d and "replica" not in {
+            f.name for f in dataclasses.fields(cls)}:
+        d.pop("replica")
+    return cls(**d)
+
+
+def cow_copy_bytes(geo, block_size: int) -> int:
+    """Modeled bytes one CoW block copy moves: one block read + one block
+    write at KV payload width, across attention layers (`roofline`'s
+    byte conventions applied to `paged_copy_rows`)."""
+    return 2 * block_size * geo.token_payload_bytes * geo.n_attn_layers

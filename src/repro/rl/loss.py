@@ -22,6 +22,7 @@ from repro.rl.correction import (
     correction_weights,
     mismatch_kl,
     versioned_correction_weights,
+    versioned_mismatch_stats,
 )
 
 
@@ -69,10 +70,24 @@ def dapo_token_loss(
         "clip_frac": ((jnp.abs(ratio - 1.0) > cfg.eps_low) * mask).sum() / n_tok,
         "corr_weight_mean": (w * mask).sum() / n_tok,
         "corr_masked_frac": ((w < 1e-6) * mask).sum() / n_tok,
+        # normalized effective sample size of the TIS/MIS weights in
+        # [1/n, 1]: (sum w)^2 / (n * sum w^2) over masked tokens — 1.0
+        # when every weight is equal (no correction), collapsing toward
+        # 1/n as a few tokens soak up the weight (the correction is then
+        # spending most of the batch)
+        "corr_weight_ess": (w * mask).sum() ** 2
+        / (jnp.maximum((jnp.square(w) * mask).sum(), 1e-12) * n_tok),
     }
     # mismatch monitoring over *all* response tokens — the dynamic-sampling
     # mask must not hide the distribution shift (it zeroes whole batches at
     # init when every reward ties at 0)
-    stats.update(mismatch_kl(logp_rollout, logp_old,
-                             mask if metrics_mask is None else metrics_mask))
+    mmask = mask if metrics_mask is None else metrics_mask
+    stats.update(mismatch_kl(logp_rollout, logp_old, mmask))
+    if token_versions is not None:
+        # per-version drift breakdown (the paper's §2.1.3 monitoring
+        # signal, resolved by rollout weight version): (num_versions,)
+        # arrays ride along in the stats dict for the metrics stream
+        stats.update(versioned_mismatch_stats(
+            logp_rollout, logp_old, token_versions, mmask,
+            num_versions=num_versions))
     return loss, stats

@@ -81,10 +81,17 @@ class RLConfig:
 
 
 class RLTrainer:
-    def __init__(self, cfg, rl: RLConfig, params=None):
-        """cfg: a *reduced* ArchConfig (decoder-only family)."""
+    def __init__(self, cfg, rl: RLConfig, params=None, metrics_sink=None):
+        """cfg: a *reduced* ArchConfig (decoder-only family).
+
+        metrics_sink: optional object with a ``write(dict)`` method (e.g.
+        `repro.obs.JsonlSink`); every `train_step()` streams its metrics
+        dict there — including the per-version mismatch-KL / IS-weight
+        rows and the TIS/MIS weight ESS — as they are produced.
+        """
         self.cfg = cfg
         self.rl = rl
+        self.metrics_sink = metrics_sink
         self.key = jax.random.key(rl.seed)
         self.params = params if params is not None else init_params(
             cfg, jax.random.key(rl.seed + 1))
@@ -312,7 +319,15 @@ class RLTrainer:
                 self.params, calib, cfg)
 
         self.step_idx += 1
-        metrics = {k: float(v) for k, v in stats.items()}
+        # scalars -> float; per-version stat vectors (mismatch_kl_per_
+        # version & co from versioned_mismatch_stats) -> lists, so the
+        # monitoring stream keeps the version breakdown instead of
+        # crashing or silently dropping it
+        metrics = {
+            k: (np.asarray(v).astype(float).tolist()
+                if np.ndim(v) else float(v))
+            for k, v in stats.items()
+        }
         metrics.update(
             step=self.step_idx,
             reward_mean=float(rewards.mean()),
@@ -323,6 +338,8 @@ class RLTrainer:
             step_s=time.perf_counter() - t_start,
             sync_ms=sync_stats.get("sync_ms", 0.0),
         )
+        if self.metrics_sink is not None:
+            self.metrics_sink.write(metrics)
 
         # 7. checkpoint
         if self.ckpt and self.step_idx % rl.ckpt_every == 0:

@@ -116,6 +116,7 @@ from repro.models import blocks as blocks_mod
 from repro.models import ssm as ssm_mod
 from repro.models import decode_step, init_cache, prefill, prefill_chunk
 from repro.models.attention import paged_copy_rows
+from repro.obs.tracer import NULL_TRACER
 from repro.serving.block_manager import BlockManager
 from repro.serving.scheduler import (
     Admit,
@@ -221,6 +222,14 @@ class ServeReport:
     # indistinguishable from success; callers must check this before
     # trusting `completed`.
     stalled: bool = False
+    # fraction of the (possibly shrunk) block budget in live use at the
+    # end of the run — the dispatch-pressure signal the fleet tie-breaks on
+    kv_pressure: float = 0.0
+    # p50/p95/p99 TTFT / TPOT / queue-wait summary (token-unit clock) —
+    # populated only when the engine ran with a recording StepTracer
+    latency: Optional[dict] = None
+    # end-of-run pool/fleet gauge snapshot (`ServingEngine.gauge_snapshot`)
+    gauges: Optional[dict] = None
 
     @property
     def useful_token_rate(self) -> float:
@@ -255,7 +264,8 @@ class ServingEngine:
                  spec: Optional[SpecConfig] = None,
                  proposer=None,
                  want_logps: bool = False,
-                 weight_version: int = 0):
+                 weight_version: int = 0,
+                 tracer=None):
         assert admission in ("reserve", "ondemand"), admission
         assert decode_kernel in ("gather", "paged"), decode_kernel
         if kernel_config is None:
@@ -292,6 +302,9 @@ class ServingEngine:
         # weight version currently serving (stamped onto every generated
         # token); bumped by install_weights at step boundaries
         self.weight_version = weight_version
+        # one tracer per engine; NULL_TRACER keeps every instrumentation
+        # site at a single `if self.tracer.enabled` branch when disabled
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self._staged_weights = None     # (params, version) for next step()
         self._executing = False         # install_weights boundary guard
         self.admission = admission
@@ -417,6 +430,8 @@ class ServingEngine:
         self._next_rid = max(self._next_rid, rid + 1)
         self.queue.append(Request(rid=rid, prompt=prompt, max_new=max_new,
                                   frames=frames))
+        if self.tracer.enabled:
+            self.tracer.record_submit(self, self.queue[-1])
 
     # -- live weight updates ------------------------------------------------
     def install_weights(self, params, version: int):
@@ -444,12 +459,16 @@ class ServingEngine:
             f"{self.weight_version}")
         self.params = params
         self.weight_version = version
+        if self.tracer.enabled:
+            self.tracer.record_weights(self, version, staged=False)
 
     def stage_weights(self, params, version: int):
         """Queue a hot-swap to be installed at the next `step()` boundary
         (the asynchronous spelling of `install_weights`: safe to call at
         any time, including while a step is executing)."""
         self._staged_weights = (params, version)
+        if self.tracer.enabled:
+            self.tracer.record_weights(self, version, staged=True)
 
     def _apply_staged_weights(self):
         if self._staged_weights is not None:
@@ -479,6 +498,38 @@ class ServingEngine:
         return min(self.block_mgr.num_blocks,
                    self.block_mgr.blocks_for_tokens(self.budget_tokens)) \
             - self._state_blocks_in_use
+
+    @property
+    def kv_pressure(self) -> float:
+        """Fraction of the (possibly shrunk) block budget in live use:
+        (allocated pool blocks + slot-state block-equivalents) / budget
+        blocks.  The fleet's dispatch tie-break and the tracer's gauge
+        stream both read this — 1.0 means the next growth preempts."""
+        budget = min(self.block_mgr.num_blocks,
+                     self.block_mgr.blocks_for_tokens(self.budget_tokens))
+        used = self.block_mgr.blocks_in_use + self._state_blocks_in_use
+        return used / max(budget, 1)
+
+    def gauge_snapshot(self) -> dict:
+        """Point-in-time pool/slot/spec gauges (JSON-native).  The tracer
+        samples this every step into `GaugeEvent`s; `run()` attaches the
+        final snapshot to `ServeReport.gauges`."""
+        bm = self.block_mgr
+        drafted = self.stats["draft_tokens"]
+        return {
+            "blocks_in_use": bm.blocks_in_use,
+            "blocks_free": bm.num_free_blocks - bm.num_cached_blocks,
+            "blocks_cached": bm.num_cached_blocks,
+            "state_block_equiv": self._state_blocks_in_use,
+            "slots_active": sum(r is not None for r in self.slot_req),
+            "max_slots": self.max_slots,
+            "queue_len": len(self.queue),
+            "kv_pressure": self.kv_pressure,
+            "prefix_hit_blocks": self.stats["prefix_hits"],
+            "spec_acceptance": (self.stats["accepted_tokens"] / drafted
+                                if drafted else 0.0),
+            "weight_version": self.weight_version,
+        }
 
     @property
     def _needs_kv_calibration(self) -> bool:
@@ -633,30 +684,53 @@ class ServingEngine:
         scheduler's bookkeeping already assumed it: a victim's rows are
         copied to host before any later-ordered action can overwrite
         them); the fused decode over `decode_slots` runs last."""
+        tracing = self.tracer.enabled
+        if tracing:
+            self.tracer.begin_step(self)
         self._executing = True
         try:
             self._execute(decision)
         finally:
             self._executing = False
+        if tracing:
+            self.tracer.end_step(self, decision)
 
     def _execute(self, decision: ScheduleDecision):
+        tracing = self.tracer.enabled
         n_verify = 0
         for act in decision.actions:
             if isinstance(act, SwapOut):
                 self._exec_swap_out(act)
+                if tracing:
+                    self.tracer.record_swap_out(self, act)
             elif isinstance(act, Admit):
-                self._exec_admit(act)
+                restored = self._exec_admit(act)
+                if tracing:
+                    self.tracer.record_admit(self, act, restored)
             elif isinstance(act, Grow):
                 self._set_table_row(act.slot, act.block_ids)
+                if tracing:
+                    self.tracer.record_grow(
+                        self, act, self.slot_req[act.slot].rid)
             elif isinstance(act, Cow):
                 self._copy_block(act.src, act.dst)
                 self._set_table_row(act.slot, act.block_ids)
+                if tracing:
+                    self.tracer.record_cow(
+                        self, act, self.slot_req[act.slot].rid)
             elif isinstance(act, Prefill):
                 self._exec_prefill(act)
+                if tracing:
+                    self.tracer.record_prefill(self, act)
             elif isinstance(act, Draft):
                 self._exec_draft(act)
+                if tracing:
+                    self.tracer.record_draft(self, act)
             elif isinstance(act, Verify):
-                self._exec_verify(act)
+                accepted, committed = self._exec_verify(act)
+                if tracing:
+                    self.tracer.record_verify(self, act, accepted,
+                                              committed)
                 n_verify += 1
             else:                              # pragma: no cover
                 raise TypeError(f"unknown action {act!r}")
@@ -696,12 +770,15 @@ class ServingEngine:
         req.token_logps = [float(logp)] if logp is not None else []
 
     # -- prefill -------------------------------------------------------------
-    def _exec_admit(self, act: Admit):
+    def _exec_admit(self, act: Admit) -> int:
+        """Returns the restore traffic in tokens (0 for fresh admits) —
+        the swap-in half of the decision's `swap_tokens` accounting,
+        which the tracer's `AdmitEvent` carries."""
         req = act.req
         self._set_table_row(act.slot, act.block_ids)
         if act.swap_in:
-            self._swap_in(act.slot, req, act.block_ids,
-                          n_shared=act.n_shared)
+            return self._swap_in(act.slot, req, act.block_ids,
+                                 n_shared=act.n_shared)
         else:
             # fresh occupant: the slot's recurrent state rows still hold
             # the previous occupant's h/conv (the preemption-clobber bug:
@@ -710,6 +787,7 @@ class ServingEngine:
             self._reset_slot_state(act.slot)
             self.cache["lengths"] = self.cache["lengths"].at[act.slot].set(
                 req.prefilled)
+            return 0
 
     def _exec_prefill(self, act: Prefill):
         if act.oneshot:
@@ -823,8 +901,9 @@ class ServingEngine:
         self._clear_slot(act.slot)
 
     def _swap_in(self, slot: int, req: Request, ids: List[int],
-                 n_shared: int = 0):
+                 n_shared: int = 0) -> int:
         """Copy swapped blocks back into fresh pool rows; no recompute.
+        Returns the restore traffic in tokens (the `wasted` charge).
 
         The leading `n_shared` table entries came from a prefix-index hit
         at re-admission: those pool rows already hold the prompt's KV
@@ -893,6 +972,7 @@ class ServingEngine:
         # victim resumed mid-prefill whose prompt is not fully written)
         if req.prefilled >= len(req.prompt):
             self.block_mgr.register_prefix(req.rid, req.prompt)
+        return restored
 
     # -- copy-on-write -------------------------------------------------------
     def _copy_block(self, src: int, dst: int):
@@ -964,8 +1044,10 @@ class ServingEngine:
         self.stats["accepted_tokens"] += n_acc
         # commit emitted tokens in order; EOS / max_new truncation scans
         # them exactly like successive decode steps would have
+        committed = 0
         for j, tok in enumerate(toks):
             self.stats["emitted"] += 1
+            committed += 1
             req.generated.append(tok)
             req.token_versions.append(self.weight_version)
             if self.want_logps:
@@ -976,7 +1058,10 @@ class ServingEngine:
                 self.slot_req[slot] = None
                 self.block_mgr.free(req.rid)
                 self._clear_slot(slot)
+                if self.tracer.enabled:
+                    self.tracer.record_finish(self, req)
                 break
+        return n_acc, committed
 
     # -- decode --------------------------------------------------------------
     def _exec_decode(self, decode_slots: List[int]):
@@ -987,6 +1072,13 @@ class ServingEngine:
         the same treatment by write-back — the fused recurrence advances
         every batch row, and a mid-prefill slot's h/conv must not absorb
         a garbage decode token between its chunks."""
+        if self.tracer.enabled:
+            # contexts are priced pre-decode (cached rows + the row being
+            # written), matching the benchmarks' decode-bytes convention
+            self.tracer.record_decode(
+                self, decode_slots,
+                [self.slot_req[i].rid for i in decode_slots],
+                [self.slot_req[i].cached_tokens + 1 for i in decode_slots])
         masked = [i for i, r in enumerate(self.slot_req)
                   if r is not None and i not in decode_slots]
         if masked and self.has_paged_kv:
@@ -1038,6 +1130,8 @@ class ServingEngine:
                 self.slot_req[i] = None
                 self.block_mgr.free(req.rid)
                 self._clear_slot(i)
+                if self.tracer.enabled:
+                    self.tracer.record_finish(self, req)
 
     # -- main loop ---------------------------------------------------------
     def run(self, max_steps: int = 1000) -> ServeReport:
@@ -1081,4 +1175,8 @@ class ServingEngine:
             draft_tokens=self.stats["draft_tokens"],
             accepted_tokens=self.stats["accepted_tokens"],
             stalled=stalled,
+            kv_pressure=self.kv_pressure,
+            latency=(self.tracer.latency_summary()
+                     if self.tracer.enabled else None),
+            gauges=self.gauge_snapshot(),
         )

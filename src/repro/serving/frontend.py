@@ -5,7 +5,8 @@
 one vLLM-style surface:
 
 * `submit()` dispatches each request to the least-loaded replica
-  (round-robin among ties), returns the rid;
+  (load ties break on KV-pool pressure, then round-robin), returns the
+  rid;
 * `step()` advances every replica one scheduler step and yields
   incremental `RequestOutput`s (new tokens + per-token weight versions
   + finish reasons) for every request that moved;
@@ -26,6 +27,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional
 
+from repro.obs.timeline import build_timelines, summarize_timelines
 from repro.serving.engine import Request, ServingEngine
 from repro.serving.outputs import (
     FINISH_LENGTH,
@@ -55,6 +57,15 @@ class FleetReport:
     weight_version: int        # latest version pushed to the fleet
     stalled: bool
     replica_stats: List[dict]  # per-replica engine stat snapshots
+    # per-replica KV-pool pressure at the end of the run (bytes in use /
+    # budget, as block fractions) — the dispatch tie-break signal
+    kv_pressure: List[float] = dataclasses.field(default_factory=list)
+    # per-replica end-of-run gauge snapshots (ServingEngine.gauge_snapshot)
+    replica_gauges: List[dict] = dataclasses.field(default_factory=list)
+    # fleet-wide latency summary (token-unit clock) pooled over replicas,
+    # plus per-replica breakdowns — only when replicas run with tracers
+    latency: Optional[dict] = None
+    replica_latency: Optional[List[dict]] = None
 
     @property
     def tokens_per_clock(self) -> float:
@@ -101,11 +112,18 @@ class ServingFrontend:
         n = len(self.engines)
         loads = [self._load(e) for e in self.engines]
         best = min(loads)
-        # least-loaded replica; ties resolved round-robin so equal-load
-        # replicas share the stream instead of replica 0 soaking it up
+        # least-loaded replica; among load ties, the one with the lowest
+        # KV-pool pressure takes the request (a replica near its byte
+        # budget sheds load even when its queue+slots count ties), and
+        # exact pressure ties fall back to round-robin so equal replicas
+        # share the stream instead of replica 0 soaking it up
+        tied = [i for i in range(n) if loads[i] == best]
+        min_pressure = min(self.engines[i].kv_pressure for i in tied)
+        tied = [i for i in tied
+                if self.engines[i].kv_pressure <= min_pressure]
         for k in range(n):
             i = (self._rr + k) % n
-            if loads[i] == best:
+            if i in tied:
                 break
         self._rr = (i + 1) % n
         self.engines[i].submit(prompt_ids, max_new, rid=rid, frames=frames)
@@ -233,6 +251,23 @@ class ServingFrontend:
             if t.finished and rid not in finals:
                 finals[rid] = self._final_output(rid, t)
         emitted = sum(eng.stats["emitted"] for eng in self.engines)
+        latency = None
+        replica_latency = None
+        if any(eng.tracer.enabled for eng in self.engines):
+            # timelines are rid-keyed (rids are fleet-unique) so replica
+            # timelines merge directly; step->clock maps must NOT merge
+            # (step indices collide across replicas), hence per-replica
+            # build_timelines calls
+            merged: Dict[int, object] = {}
+            replica_latency = []
+            for eng in self.engines:
+                if eng.tracer.enabled:
+                    tls = build_timelines(eng.tracer.events)
+                    merged.update(tls)
+                    replica_latency.append(summarize_timelines(tls))
+                else:
+                    replica_latency.append({"requests": 0})
+            latency = summarize_timelines(merged)
         return FleetReport(
             outputs=[finals[r] for r in sorted(finals)],
             steps=self.steps,
@@ -241,4 +276,8 @@ class ServingFrontend:
             weight_version=self.weight_version,
             stalled=stalled,
             replica_stats=[dict(eng.stats) for eng in self.engines],
+            kv_pressure=[eng.kv_pressure for eng in self.engines],
+            replica_gauges=[eng.gauge_snapshot() for eng in self.engines],
+            latency=latency,
+            replica_latency=replica_latency,
         )

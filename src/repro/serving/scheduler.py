@@ -196,6 +196,18 @@ class ScheduleDecision:
         return self.prefill_tokens + self.verify_tokens + \
             len(self.decode_slots) + self.swap_tokens
 
+    def accounting(self) -> Dict[str, int]:
+        """The decision's token costs as a flat dict — the ground truth
+        the observability gate reconciles the event log against (every
+        key matches the corresponding `obs.events.StepEvent` field)."""
+        return {
+            "prefill_tokens": self.prefill_tokens,
+            "verify_tokens": self.verify_tokens,
+            "decode_tokens": len(self.decode_slots),
+            "swap_tokens": self.swap_tokens,
+            "cost_tokens": self.cost_tokens,
+        }
+
     @property
     def is_empty(self) -> bool:
         return not self.actions and not self.decode_slots

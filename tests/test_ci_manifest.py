@@ -60,7 +60,7 @@ def _gated_benchmarks() -> list:
 
 def test_every_gated_benchmark_has_a_checked_smoke_step():
     gated = _gated_benchmarks()
-    assert len(gated) >= 8, f"gate inventory shrank: {gated}"
+    assert len(gated) >= 9, f"gate inventory shrank: {gated}"
     runs = [s.get("run", "") for s in _bench_smoke_steps() if "run" in s]
     for name in gated:
         matching = [r for r in runs if f"benchmarks/{name}.py" in r]
@@ -72,17 +72,39 @@ def test_every_gated_benchmark_has_a_checked_smoke_step():
             "the invariants are never asserted")
 
 
-def test_every_smoke_json_is_covered_by_the_artifact_glob():
-    steps = _bench_smoke_steps()
-    uploads = [s for s in steps
+def _upload_globs() -> list:
+    uploads = [s for s in _bench_smoke_steps()
                if "upload-artifact" in str(s.get("uses", ""))]
     assert uploads, "bench-smoke lost its artifact upload step"
-    glob = uploads[-1]["with"]["path"]
-    for step in steps:
+    # `path:` may be a single glob or a `|` block with one glob per line
+    return [g.strip() for g in uploads[-1]["with"]["path"].splitlines()
+            if g.strip()]
+
+
+def test_every_smoke_json_is_covered_by_the_artifact_glob():
+    globs = _upload_globs()
+    for step in _bench_smoke_steps():
         for jpath in re.findall(r"--json\s+(\S+)", step.get("run", "")):
-            assert fnmatch.fnmatch(jpath, glob), (
+            assert any(fnmatch.fnmatch(jpath, g) for g in globs), (
                 f"{jpath} written by '{step.get('name')}' is not covered "
-                f"by the upload glob {glob!r} — the artifact vanishes")
+                f"by the upload globs {globs!r} — the artifact vanishes")
+
+
+def test_trace_sample_artifact_is_uploaded_but_not_trended():
+    """benchmarks/observability.py drops a Perfetto-loadable
+    obs-sample.trace.json next to its --json output.  It must ride the
+    artifact upload for humans, but must NOT match the bench-*.json glob
+    the trend step aggregates — it is a chrome trace, not a metrics run,
+    and feeding it to benchmarks.common would red the trend on MISSING."""
+    globs = _upload_globs()
+    assert any(fnmatch.fnmatch("obs-sample.trace.json", g) for g in globs), (
+        f"obs-sample.trace.json not covered by upload globs {globs!r}")
+    trend = [s.get("run", "") for s in _bench_smoke_steps()
+             if "benchmarks.common" in s.get("run", "")]
+    trend_glob = re.search(r"(bench-\*\.\w+)", trend[0]).group(1)
+    assert not fnmatch.fnmatch("obs-sample.trace.json", trend_glob), (
+        "the trace artifact matches the trend glob — benchmarks.common "
+        "would try to parse a chrome trace as a metrics artifact")
 
 
 def test_bench_trend_step_runs_against_committed_baselines():

@@ -1,0 +1,414 @@
+"""Observability subsystem tests: event schema round-trip, the no-numpy
+percentile vs the numpy oracle, Chrome trace-event schema, null-tracer
+bit-exactness on a preemption trace, latency/gauge surfaces on
+ServeReport / FleetReport, the pressure-aware dispatch tie-break, the
+trainer-side versioned mismatch stats, and a hypothesis property pinning
+event token sums to `ScheduleDecision.accounting()` on random traces.
+"""
+import json
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import tiny_serving_config as _cfg
+from repro.core import BF16_ROLLOUT
+from repro.data import tasks
+from repro.models import init_params
+from repro.obs import (
+    EVENT_KINDS,
+    NULL_TRACER,
+    DecodeEvent,
+    GaugeEvent,
+    JsonlSink,
+    NullTracer,
+    PrefillEvent,
+    StepEvent,
+    StepTracer,
+    SubmitEvent,
+    build_timelines,
+    chrome_trace,
+    event_from_dict,
+    percentile,
+    read_events_jsonl,
+    summarize_timelines,
+    write_events_jsonl,
+)
+from repro.serving import ServingEngine, ServingFrontend, kv_bytes_per_token
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = _cfg()
+    params = init_params(cfg, jax.random.key(0))
+    return cfg, params
+
+
+_prompt = tasks.random_prompt
+
+
+def _trace_engine(params, cfg, *, tracer, budget_blocks=None, **kw):
+    budget = None
+    if budget_blocks is not None:
+        budget = kv_bytes_per_token(cfg, BF16_ROLLOUT) * 4 * budget_blocks
+    return ServingEngine(params, cfg, BF16_ROLLOUT, max_slots=3,
+                         max_seq_len=32, kv_budget_bytes=budget,
+                         tracer=tracer, **kw)
+
+
+# ---------------------------------------------------------------------------
+# schema round-trip
+# ---------------------------------------------------------------------------
+
+def test_event_schema_roundtrip_through_json(setup, tmp_path):
+    """Every event kind a real trace emits survives to_dict -> JSON ->
+    event_from_dict as an equal instance, in memory and through the
+    JSONL sink."""
+    cfg, params = setup
+    tracer = StepTracer()
+    eng = _trace_engine(params, cfg, tracer=tracer, budget_blocks=4,
+                        admission="ondemand", prefill_chunk=4)
+    for i in range(4):
+        eng.submit(_prompt(i, 6 + i), max_new=4, rid=i)
+    rep = eng.run(max_steps=200)
+    assert len(rep.completed) == 4
+
+    for e in tracer.events:
+        row = json.loads(json.dumps(e.to_dict()))
+        assert row["kind"] in EVENT_KINDS
+        assert event_from_dict(row) == e
+
+    path = tmp_path / "events.jsonl"
+    assert write_events_jsonl(tracer.events, str(path)) \
+        == len(tracer.events)
+    assert read_events_jsonl(str(path)) == tracer.events
+
+
+def test_event_from_dict_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="unknown event kind"):
+        event_from_dict({"kind": "nope", "step": 0})
+
+
+def test_event_from_dict_drops_fleet_replica_envelope():
+    """Merged fleet JSONL stamps `replica` on every row; kinds whose
+    schema doesn't carry it must still parse."""
+    e = StepEvent(step=0, clock_before=0.0, cost_tokens=3,
+                  prefill_tokens=3, verify_tokens=0, decode_tokens=0,
+                  swap_tokens=0, version=0)
+    row = e.to_dict()
+    row["replica"] = 2
+    assert event_from_dict(row) == e
+    # SubmitEvent HAS a replica field: the envelope value is kept
+    s = SubmitEvent(step=0, rid=1, prompt_len=4, max_new=2, clock=0.0,
+                    replica=2)
+    assert event_from_dict(s.to_dict()) == s
+
+
+def test_jsonl_sink_streams_rows(tmp_path):
+    path = tmp_path / "stream.jsonl"
+    with JsonlSink(str(path)) as sink:
+        sink.write({"a": 1})
+        sink.write({"b": [1, 2]})
+        assert sink.rows == 2
+    lines = path.read_text().strip().splitlines()
+    assert [json.loads(ln) for ln in lines] == [{"a": 1}, {"b": [1, 2]}]
+
+
+# ---------------------------------------------------------------------------
+# percentile oracle
+# ---------------------------------------------------------------------------
+
+def test_percentile_matches_numpy_oracle():
+    hyp = pytest.importorskip("hypothesis")
+    st = hyp.strategies
+
+    @hyp.settings(deadline=None, max_examples=50)
+    @hyp.given(xs=st.lists(st.floats(-1e6, 1e6, allow_nan=False),
+                           min_size=1, max_size=40),
+               q=st.floats(0.0, 100.0))
+    def run(xs, q):
+        assert math.isclose(percentile(xs, q),
+                            float(np.percentile(xs, q)),
+                            rel_tol=1e-9, abs_tol=1e-6)
+
+    run()
+    assert math.isnan(percentile([], 50))
+    assert percentile([7.0], 99) == 7.0
+
+
+# ---------------------------------------------------------------------------
+# null tracer: zero perturbation on a preemption trace
+# ---------------------------------------------------------------------------
+
+def test_null_tracer_bit_exact_on_preemption_trace(setup):
+    """A KV-starved ondemand trace (swap preemption + re-admission) must
+    produce identical tokens and stats with and without a StepTracer —
+    and the traced run must actually record the preemption."""
+    cfg, params = setup
+
+    def serve(tracer):
+        eng = _trace_engine(params, cfg, tracer=tracer, budget_blocks=5,
+                            admission="ondemand", eviction="lru",
+                            prefill_chunk=4)
+        for i in range(5):
+            eng.submit(_prompt(i, 5 + 2 * i), max_new=5, rid=i)
+        rep = eng.run(max_steps=300)
+        toks = {r.rid: list(map(int, r.generated)) for r in eng.done}
+        return toks, dict(eng.stats), rep
+
+    tracer = StepTracer()
+    toks_t, stats_t, rep_t = serve(tracer)
+    toks_n, stats_n, rep_n = serve(NULL_TRACER)
+    assert toks_t == toks_n
+    assert stats_t == stats_n
+    assert stats_t["preemptions"] >= 1, "trace never preempted"
+    assert any(e.kind == "swap_out" for e in tracer.events)
+    summary = summarize_timelines(build_timelines(tracer.events))
+    assert summary["preempted_requests"] >= 1
+    # the preemption span is a well-ordered clock interval
+    for t in build_timelines(tracer.events).values():
+        for out_clock, in_clock in t.preemptions:
+            assert in_clock >= out_clock
+    # report surfaces: latency only when traced, gauges always
+    assert rep_t.latency is not None and rep_t.latency["requests"] == 5
+    assert rep_n.latency is None
+    assert rep_n.gauges["blocks_in_use"] == 0
+    assert 0.0 <= rep_n.kv_pressure
+
+
+def test_null_tracer_is_singleton_default(setup):
+    cfg, params = setup
+    eng = ServingEngine(params, cfg, BF16_ROLLOUT, max_slots=2,
+                        max_seq_len=32)
+    assert eng.tracer is NULL_TRACER
+    assert isinstance(eng.tracer, NullTracer)
+    assert not eng.tracer.enabled
+
+
+# ---------------------------------------------------------------------------
+# chrome trace export
+# ---------------------------------------------------------------------------
+
+def test_chrome_trace_schema(setup):
+    cfg, params = setup
+    tracer = StepTracer(replica=1)
+    eng = _trace_engine(params, cfg, tracer=tracer, prefill_chunk=4)
+    for i in range(3):
+        eng.submit(_prompt(i, 6), max_new=3, rid=i)
+    eng.run(max_steps=100)
+
+    doc = chrome_trace(tracer.events, replica=1)
+    rows = doc["traceEvents"]
+    assert rows, "empty chrome trace"
+    assert {r["ph"] for r in rows} <= {"M", "X", "i", "C"}
+    for r in rows:
+        assert r["pid"] == 1                     # replica -> pid
+        if r["ph"] == "X":
+            assert r["dur"] >= 0 and "ts" in r and r["name"]
+        elif r["ph"] == "C":
+            assert isinstance(r["args"], dict) and r["args"]
+        elif r["ph"] == "i":
+            assert "ts" in r and r["name"]
+    # spans exist for the prefill/decode work and counters track the pool
+    names = {r["name"] for r in rows}
+    assert any(n.startswith("prefill") for n in names)
+    assert "kv blocks" in names
+
+
+# ---------------------------------------------------------------------------
+# fleet: latency aggregation + pressure-aware dispatch
+# ---------------------------------------------------------------------------
+
+def test_fleet_report_latency_and_gauges(setup):
+    cfg, params = setup
+    engines = [_trace_engine(params, cfg, tracer=StepTracer(replica=i))
+               for i in range(2)]
+    fe = ServingFrontend(engines)
+    for i in range(4):
+        fe.submit(_prompt(i, 6), max_new=3, rid=i)
+    rep = fe.run(max_steps=200)
+    assert len(rep.outputs) == 4
+    assert rep.latency is not None
+    assert rep.latency["requests"] == 4
+    assert rep.latency["ttft"]["n"] == 4
+    assert len(rep.replica_latency) == 2
+    assert sum(r["requests"] for r in rep.replica_latency) == 4
+    assert len(rep.kv_pressure) == 2
+    assert len(rep.replica_gauges) == 2
+    assert all("kv_pressure" in g for g in rep.replica_gauges)
+
+
+def test_dispatch_breaks_load_ties_on_kv_pressure(setup):
+    """Two replicas with equal request loads but unequal KV pressure:
+    the next submit must land on the lower-pressure replica even when
+    round-robin points at the other one."""
+    cfg, params = setup
+    engines = [ServingEngine(params, cfg, BF16_ROLLOUT, max_slots=2,
+                             max_seq_len=32, seed=i) for i in range(2)]
+    fe = ServingFrontend(engines)
+    fe.submit(_prompt(0, 14), max_new=8, rid=0)     # long -> replica 0
+    fe.submit(_prompt(1, 4), max_new=8, rid=1)      # short -> replica 1
+    assert fe._tracked[0].replica == 0 and fe._tracked[1].replica == 1
+    for _ in range(2):
+        fe.step()                 # prefill both: KV allocated, loads tie
+    loads = [len(e.queue) + sum(r is not None for r in e.slot_req)
+             for e in engines]
+    assert loads[0] == loads[1] == 1
+    p0, p1 = engines[0].kv_pressure, engines[1].kv_pressure
+    assert p0 > p1, "test setup: replica 0 must be under more pressure"
+    # round-robin alone would pick replica 0 next (_rr == 0 after two
+    # submits) — the pressure tie-break must override it
+    assert fe._rr == 0
+    fe.submit(_prompt(2, 4), max_new=2, rid=2)
+    assert fe._tracked[2].replica == 1
+
+
+# ---------------------------------------------------------------------------
+# trainer-side stream: versioned stats + ESS in the loss metrics
+# ---------------------------------------------------------------------------
+
+def test_loss_stats_carry_versioned_kl_and_ess(setup):
+    from repro.core.precision import FP8_LINEAR_ROLLOUT, RolloutCorrection
+    from repro.rl.loss import dapo_token_loss
+
+    rng = np.random.default_rng(0)
+    B, G, V = 4, 6, 3
+    logp_theta = rng.normal(-1.5, 0.3, (B, G)).astype(np.float32)
+    drift = np.array([0.4, 0.2, 0.0])            # stale versions drift
+    versions = rng.integers(0, V, (B, G)).astype(np.int32)
+    logp_rollout = (logp_theta + drift[versions]
+                    * rng.normal(1.0, 0.1, (B, G))).astype(np.float32)
+    adv = rng.normal(0.0, 1.0, B).astype(np.float32)
+    mask = np.ones((B, G), np.float32)
+    precision = FP8_LINEAR_ROLLOUT.replace(
+        correction=RolloutCorrection.TIS)
+
+    loss, stats = dapo_token_loss(
+        logp_theta, logp_theta, logp_rollout, adv, mask, precision,
+        metrics_mask=mask, token_versions=versions, num_versions=V)
+    assert np.isfinite(float(loss))
+    for key in ("tokens_per_version", "mismatch_kl_per_version",
+                "is_weight_mean_per_version"):
+        assert key in stats and np.asarray(stats[key]).shape == (V,)
+    assert float(np.asarray(stats["tokens_per_version"]).sum()) == B * G
+    kl = np.asarray(stats["mismatch_kl_per_version"])
+    assert kl[0] > kl[2], "drifted version 0 must show more KL than " \
+        "the on-policy version 2"
+    assert "corr_weight_ess" in stats
+    ess = float(stats["corr_weight_ess"])
+    assert 0.0 < ess <= 1.0 + 1e-6
+
+
+def test_trainer_metrics_sink_streams_steps(setup, tmp_path):
+    """RLTrainer streams one JSON-native metrics row per step into the
+    sink, including the per-version arrays as lists."""
+    from repro.launch.train import build_trainer
+
+    class Args:
+        arch = "qwen3-8b"
+        reduced = True
+        layers = 1
+        d_model = 64
+        precision = "fp8-linear"
+        tis = True
+        mis = False
+        rrr = False
+        calibration = "inference"
+        prompt_batch = 2
+        n_per_prompt = 2
+        max_new_tokens = 3
+        lr = 1e-4
+        seed = 0
+        ckpt_dir = None
+        ckpt_every = 1000
+
+    path = tmp_path / "metrics.jsonl"
+    with JsonlSink(str(path)) as sink:
+        trainer = build_trainer(Args(), metrics_sink=sink)
+        for _ in range(2):
+            trainer.train_step()
+    rows = [json.loads(ln) for ln in
+            path.read_text().strip().splitlines()]
+    assert len(rows) == 2
+    assert rows[0]["step"] == 1 and rows[1]["step"] == 2
+    for row in rows:
+        assert "mismatch_kl" in row
+        assert "corr_weight_ess" in row
+        json.dumps(row)                          # JSON-native end to end
+
+
+# ---------------------------------------------------------------------------
+# property: event token sums == decision accounting on random traces
+# ---------------------------------------------------------------------------
+
+def test_event_sums_match_decision_accounting_random_traces(setup):
+    hyp = pytest.importorskip("hypothesis")
+    st = hyp.strategies
+    cfg, params = setup
+    canonical = [_prompt(s, 4 + 2 * s) for s in range(4)]
+
+    @hyp.settings(deadline=None, max_examples=8)
+    @hyp.given(
+        reqs=st.lists(
+            st.tuples(st.integers(0, 3),      # canonical prompt index
+                      st.integers(2, 5),      # max_new
+                      st.integers(0, 5)),     # arrival step
+            min_size=1, max_size=4),
+        admission=st.sampled_from(["reserve", "ondemand"]),
+        chunk=st.sampled_from([None, 3]),
+        budget_blocks=st.integers(5, 9),
+    )
+    def run(reqs, admission, chunk, budget_blocks):
+        tracer = StepTracer()
+        eng = _trace_engine(params, cfg, tracer=tracer,
+                            budget_blocks=budget_blocks,
+                            admission=admission, eviction="lru",
+                            prefill_chunk=chunk)
+        ledger = []
+        by_arrival = sorted(enumerate(reqs), key=lambda kv: kv[1][2])
+        idx = 0
+        for tick in range(300):
+            while idx < len(by_arrival) and by_arrival[idx][1][2] <= tick:
+                rid, (pi, max_new, _) = by_arrival[idx]
+                eng.submit(canonical[pi], max_new=max_new, rid=rid)
+                idx += 1
+            eng._apply_staged_weights()
+            decision = eng.scheduler.step(eng)
+            if not decision.is_empty:
+                ledger.append(decision.accounting())
+                eng.execute(decision)
+            if idx == len(by_arrival) and decision.is_empty:
+                break
+        assert len(eng.done) == len(reqs)
+
+        steps = [e for e in tracer.events if isinstance(e, StepEvent)]
+        assert len(steps) == len(ledger)
+        by_step = {}
+        for e in tracer.events:
+            by_step.setdefault(e.step, []).append(e)
+        clock = 0.0
+        for i, (se, acct) in enumerate(zip(steps, ledger)):
+            assert se.clock_before == clock
+            clock += se.cost_tokens
+            assert se.cost_tokens == acct["cost_tokens"]
+            evs = by_step.get(i, [])
+            assert sum(e.cost_tokens for e in evs
+                       if isinstance(e, PrefillEvent)) \
+                == acct["prefill_tokens"]
+            assert sum(e.cost_tokens for e in evs
+                       if isinstance(e, DecodeEvent)) \
+                == acct["decode_tokens"]
+            moved = sum(e.tokens_moved for e in evs
+                        if e.kind == "swap_out") \
+                + sum(e.restored_tokens for e in evs
+                      if e.kind == "admit")
+            assert moved == acct["swap_tokens"]
+            gauges = [e for e in evs if isinstance(e, GaugeEvent)]
+            assert len(gauges) == 1
+            assert 0.0 <= gauges[0].kv_pressure
+        assert tracer.clock == clock
+
+    run()

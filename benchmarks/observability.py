@@ -136,7 +136,7 @@ def _drive(params, *, tracer, seed: int, n_requests: int, max_new: int,
             ctx[s] = r.cached_tokens if r is not None else 0
         for a in decision.actions:
             if isinstance(a, Admit) and a.swap_in and a.slot in ctx:
-                ctx[a.slot] = a.req.swap_tokens
+                ctx[a.slot] = a.retained
             elif isinstance(a, Prefill) and a.slot in ctx:
                 ctx[a.slot] = a.end
         ledger.append({

@@ -53,6 +53,11 @@ def main(argv=None):
     ap.add_argument("--eviction", choices=sorted(EVICTION_POLICIES),
                     default="youngest",
                     help="preemption victim-selection policy")
+    ap.add_argument("--host-kv-blocks", type=int, default=0,
+                    help="host-tier reservation (blocks) for demoted "
+                         "cache blocks: evicted prefix entries demote to "
+                         "host and revive by copy-in instead of dying "
+                         "(0 = single-tier drop-on-evict)")
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="chunked prefill width in tokens (default: "
                          "legacy batch-1 prefill at --prompt-pad width)")
@@ -101,6 +106,11 @@ def main(argv=None):
     ap.add_argument("--events-out", default=None, metavar="PATH",
                     help="write the raw typed event log as JSONL (one "
                          "event per line; enables the step tracer)")
+    ap.add_argument("--run-id", default=None, metavar="ID",
+                    help="stamp this id on every --events-out row; launch "
+                         "the trainer (repro.launch.train --run-id) with "
+                         "the SAME id to join its metrics stream to these "
+                         "serving steps")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.src_pad < 1:
@@ -146,6 +156,7 @@ def main(argv=None):
                              block_size=args.block_size,
                              admission=args.admission,
                              eviction=args.eviction,
+                             host_kv_blocks=args.host_kv_blocks,
                              prefill_chunk=args.prefill_chunk,
                              step_budget=step_budget,
                              decode_kernel=args.decode_kernel,
@@ -172,7 +183,7 @@ def main(argv=None):
         if not tracing:
             return
         if args.events_out:
-            with JsonlSink(args.events_out) as sink:
+            with JsonlSink(args.events_out, run_id=args.run_id) as sink:
                 for t in tracers:
                     for e in t.events:
                         row = e.to_dict()

@@ -87,9 +87,15 @@ def main(argv=None):
                          "line, written as each step completes — incl. "
                          "mismatch-KL, per-version KL breakdowns and "
                          "TIS/MIS weight ESS)")
+    ap.add_argument("--run-id", default=None, metavar="ID",
+                    help="stamp this id on every metrics row; launch the "
+                         "serving side (repro.launch.serve --run-id) with "
+                         "the SAME id to join trainer steps to the serving "
+                         "steps that produced their rollout batches")
     args = ap.parse_args(argv)
 
-    sink = JsonlSink(args.metrics_out) if args.metrics_out else None
+    sink = JsonlSink(args.metrics_out, run_id=args.run_id) \
+        if args.metrics_out else None
     trainer = build_trainer(args, metrics_sink=sink)
     if args.resume and trainer.restore_checkpoint():
         print(f"resumed from step {trainer.step_idx}")

@@ -74,6 +74,10 @@ class AdmitEvent(Event):
     n_shared: int               # leading entries from prefix-index hits
     swap_in: bool
     restored_tokens: int = 0
+    # host->device copy-in blocks this admission executed: the swap-in
+    # tail restore, or (fresh admit) host-cached prefix blocks revived
+    # by copy-in instead of recompute
+    n_promoted: int = 0
 
     kind = "admit"
 
@@ -89,6 +93,7 @@ class SwapOutEvent(Event):
     n_blocks: int               # host-copied pool blocks
     kv_tokens: int              # valid KV rows saved
     tokens_moved: int           # kv_tokens + state swap tokens
+    n_demoted: int = 0          # device->host blocks (= n_blocks today)
 
     kind = "swap_out"
 
@@ -248,6 +253,14 @@ class GaugeEvent(Event):
     staged_pending: bool        # stage_weights awaiting its boundary
     staged_age: float           # clock units the staged push has waited
     weight_version: int
+    # host KV tier (two-tier allocator): occupancy split and cumulative
+    # cross-tier traffic — additive defaults keep pre-tier logs loadable
+    host_blocks_live: int = 0   # swapped-out requests' host blocks
+    host_blocks_cached: int = 0  # demoted (refcount-0, index-live) blocks
+    host_bytes_in_use: int = 0
+    demoted_blocks: int = 0     # cumulative device->host moves
+    promoted_blocks: int = 0    # cumulative host->device moves
+    host_transfer_bytes: int = 0  # cumulative both directions
 
     kind = "gauge"
 
@@ -267,16 +280,19 @@ def event_from_dict(d: dict) -> Event:
     parsed JSONL row.  Unknown kinds raise (schema drift must be loud).
     A top-level ``replica`` key is the multi-replica log envelope
     (merged fleet logs stamp it on every row) and is dropped for kinds
-    whose schema doesn't carry it."""
+    whose schema doesn't carry it; ``run_id`` is the cross-sink join
+    envelope (JsonlSink stamps it when the run was launched with one)
+    and is dropped the same way."""
     d = dict(d)
     kind = d.pop("kind", None)
     if kind not in _REGISTRY:
         raise ValueError(f"unknown event kind {kind!r}; "
                          f"schema knows {EVENT_KINDS}")
     cls = _REGISTRY[kind]
-    if "replica" in d and "replica" not in {
-            f.name for f in dataclasses.fields(cls)}:
-        d.pop("replica")
+    fields = {f.name for f in dataclasses.fields(cls)}
+    for envelope in ("replica", "run_id"):
+        if envelope in d and envelope not in fields:
+            d.pop(envelope)
     return cls(**d)
 
 

@@ -29,19 +29,31 @@ class JsonlSink:
 
     Accepts a path (opened lazily, closed by `close()`/context exit) or
     an already-open file object (left open — caller owns it).
+
+    `run_id` (optional) is stamped onto every row as a top-level
+    ``run_id`` key: launching the trainer's metrics sink and the serving
+    fleet's event sink with the SAME id makes a trainer step joinable to
+    the serving steps that produced its rollout batch by one equality on
+    the two streams.  Rows that already carry a ``run_id`` keep theirs
+    (merged logs stay faithful); `obs.events.event_from_dict` drops the
+    key as envelope, like ``replica``.
     """
 
-    def __init__(self, path_or_file: Union[str, IO]):
+    def __init__(self, path_or_file: Union[str, IO],
+                 run_id: Optional[str] = None):
         if hasattr(path_or_file, "write"):
             self._f: Optional[IO] = path_or_file
             self._owns = False
         else:
             self._f = open(path_or_file, "w")
             self._owns = True
+        self.run_id = run_id
         self.rows = 0
 
     def write(self, row: dict) -> None:
         assert self._f is not None, "sink is closed"
+        if self.run_id is not None and "run_id" not in row:
+            row = dict(row, run_id=self.run_id)
         self._f.write(json.dumps(row) + "\n")
         self.rows += 1
 

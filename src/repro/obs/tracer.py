@@ -112,13 +112,15 @@ class StepTracer:
         self.emit(ev.AdmitEvent(
             step=self.step, rid=act.req.rid, slot=act.slot,
             n_blocks=len(act.block_ids), n_shared=act.n_shared,
-            swap_in=act.swap_in, restored_tokens=restored_tokens))
+            swap_in=act.swap_in, restored_tokens=restored_tokens,
+            n_promoted=act.n_promoted))
 
     def record_swap_out(self, eng, act) -> None:
         self.emit(ev.SwapOutEvent(
             step=self.step, rid=act.req.rid, slot=act.slot,
             n_blocks=len(act.block_ids), kv_tokens=act.tokens,
-            tokens_moved=act.tokens + eng.state_swap_tokens))
+            tokens_moved=act.tokens + eng.state_swap_tokens,
+            n_demoted=len(act.moves)))
 
     def record_grow(self, eng, act, rid: int) -> None:
         self.emit(ev.GrowEvent(

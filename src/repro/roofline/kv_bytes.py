@@ -146,3 +146,34 @@ def trace_decode_bytes(geo: KVGeometry, contexts,
     evaluating the cost model at the benchmark's actual length
     distribution instead of a synthetic one."""
     return sum(decode_hbm_bytes(geo, c, mode) for c in contexts)
+
+
+# ---------------------------------------------------------------------------
+# cross-tier (host link) pricing — the two-tier allocator's move costs
+# ---------------------------------------------------------------------------
+
+def cross_tier_block_bytes(geo: KVGeometry) -> int:
+    """Device-side HBM bytes one block-granular tier move (demote or
+    promote) touches: the block's KV payload across attention layers,
+    read (demote) or written (promote) once on the device end of the
+    host link.  Both directions cost the same — the model charges the
+    HBM side, which is what competes with decode for bandwidth; PCIe
+    time overlaps other slots' compute in a real engine."""
+    return geo.block_size * geo.token_payload_bytes * geo.n_attn_layers
+
+
+def cross_tier_move_bytes(geo: KVGeometry, n_blocks: int) -> int:
+    """Modeled HBM bytes for `n_blocks` blocks crossing the host link in
+    either direction (an allocator demote/promote's `moves` list)."""
+    return n_blocks * cross_tier_block_bytes(geo)
+
+
+def prefix_revival_bytes(geo: KVGeometry, n_blocks: int) -> int:
+    """Modeled HBM bytes to revive a host-cached prefix of `n_blocks`
+    blocks by copy-in: one promote write per block.  The recompute
+    alternative re-runs chunked prefill over the same tokens — it both
+    writes the same KV payload AND streams the growing context
+    (`prefill_chunk_hbm_bytes` per chunk), so revival wins whenever the
+    prefix spans more than one chunk's context; `benchmarks/tiered_kv.py`
+    gates exactly this comparison."""
+    return cross_tier_move_bytes(geo, n_blocks)

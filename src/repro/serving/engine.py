@@ -62,16 +62,24 @@ Prefix sharing (refcount + content hash + copy-on-write)
     (`paged_copy_rows`).  Freed blocks with a live index entry move to
     the BlockManager's evictor cache — the entry survives until the
     space is actually needed, so a re-submitted prompt can revive its
-    own KV for free.
+    own KV for free; when the space IS needed and the engine was built
+    with `host_kv_blocks > 0`, the entry demotes to the host tier
+    instead of dying (still a prefix hit, revived by copy-in).
 
-Preemption = swap-to-host
-    A victim's blocks are copied to host and released (refcount -1 each;
-    blocks another request holds stay resident).  On re-admission the
-    prompt is re-deduped against the index, only the non-shared tail is
-    restored, and decoding (or chunked prefill, for a victim preempted
-    mid-prefill) resumes from the exact pending position — nothing is
-    recomputed, and every restored token is counted in `wasted_tokens`
-    (the swap tax the victim pays for the preemption).
+Preemption = allocator demote/promote (two-tier swap)
+    Host memory is a first-class KV tier: `BlockManager.demote` moves a
+    victim's valid blocks to host-tier block ids at plan time (refcount
+    -1 each; blocks another request holds stay resident) and hands back
+    the ordered copy pairs the engine executes at the SwapOut action —
+    the engine's role is purely the data plane (`host_pool` holds the
+    rows, `_host_state` the non-KV slot state + pending token).  On
+    re-admission `BlockManager.promote` re-dedups the prompt against
+    the prefix index, drops the host copies a device-resident hit
+    supersedes, and returns the tail copy-ins; decoding (or chunked
+    prefill, for a victim preempted mid-prefill) resumes from the exact
+    pending position — nothing is recomputed, and every restored token
+    is counted in `wasted_tokens` (the swap tax the victim pays for the
+    preemption).
 
 Hybrid / enc-dec slot state
     SSM layers (mamba2 / jamba patterns) carry recurrent state (`h`,
@@ -188,14 +196,11 @@ class Request:
     prefilled: int = 0           # prompt tokens whose KV is (being) computed
     cached_tokens: int = 0       # valid KV rows in the pool (host truth)
     last_used: int = 0           # scheduler tick last scheduled (lru)
-    # swap-to-host state (set while preempted, cleared on resume)
-    swap_kv: Optional[Dict[str, Tuple[np.ndarray, np.ndarray]]] = None
-    swap_tokens: int = 0         # kv rows held in swap
-    swap_pending: int = 0        # pending (sampled, not yet fed) token
-    # non-KV slot state held while preempted: per layer-stack host copies
-    # of the SSM h/conv rows and cross-attention K/V rows (the paged-KV
-    # swap above cannot carry them — they live slot-indexed, not pooled)
-    swap_state: Optional[Dict[str, dict]] = None
+    # NOTE: swap residency lives in the allocator now, not here — while
+    # preempted, `block_mgr.is_swapped(rid)` is true, the request's block
+    # table is host-tier ids, and the engine keeps the block content in
+    # `host_pool` (keyed by host block id) plus the non-KV slot state in
+    # `_host_state` (keyed by rid)
 
 
 @dataclasses.dataclass
@@ -265,6 +270,7 @@ class ServingEngine:
                  proposer=None,
                  want_logps: bool = False,
                  weight_version: int = 0,
+                 host_kv_blocks: int = 0,
                  tracer=None):
         assert admission in ("reserve", "ondemand"), admission
         assert decode_kernel in ("gather", "paged"), decode_kernel
@@ -359,9 +365,31 @@ class ServingEngine:
         # block-capacity mechanism of §2.3.2.
         per_tok_bf16 = max(kv_bytes_per_token(
             cfg, precision.replace(kv_cache_dtype="bf16")), 1)
+        # host_kv_blocks reserves a host-memory tier for demoted cache
+        # blocks (evictor demote-before-drop); 0 keeps the allocator's
+        # single-tier drop-on-evict behavior.  Live swap-out demotions
+        # always ride the host tier regardless — preemption correctness
+        # is never capacity-gated.
         self.block_mgr = BlockManager.from_byte_budget(
             kv_budget_bytes, block_size * per_tok_bf16, per_tok,
-            enable_prefix_sharing=prefix_sharing)
+            enable_prefix_sharing=prefix_sharing,
+            host_blocks=host_kv_blocks)
+        self.block_mgr.set_host_callbacks(
+            demote_copy=self._host_copy_out_block,
+            host_drop=self._host_drop_block)
+        # host tier storage: host block id -> per-layer (k, v) numpy rows;
+        # rid -> snapshotted non-KV slot state + pending token while the
+        # request is swapped out
+        self.host_pool: Dict[int, Dict[str, Tuple[np.ndarray, np.ndarray]]] \
+            = {}
+        self._host_state: Dict[int, dict] = {}
+        # host ids retired by the allocator BEFORE their swap-out copy
+        # materialized (a same-plan swap-out -> re-admit promotes the
+        # victim right back, and device prefix hits supersede the head's
+        # host copies at plan time) — `_exec_swap_out` must skip writing
+        # them or the storage leaks.  Ids are never recycled, so a
+        # membership test here can never alias a later block.
+        self._host_dead_on_arrival: set = set()
         # Mutable token-denominated view of the budget; shrinking it lowers
         # the effective block limit below the physical pool size.
         self.budget_tokens = self.block_mgr.capacity_tokens
@@ -388,7 +416,8 @@ class ServingEngine:
                           steps=0, occupancy=0.0, swap_outs=0, swap_ins=0,
                           peak_blocks=0, prefix_hits=0, cow_copies=0,
                           prefill_chunks=0, spec_steps=0, draft_tokens=0,
-                          accepted_tokens=0)
+                          accepted_tokens=0, demoted_blocks=0,
+                          promoted_blocks=0)
 
     # ------------------------------------------------------------------
     def submit(self, prompt_ids, max_new: int, rid: Optional[int] = None,
@@ -529,6 +558,15 @@ class ServingEngine:
             "spec_acceptance": (self.stats["accepted_tokens"] / drafted
                                 if drafted else 0.0),
             "weight_version": self.weight_version,
+            # host tier: occupancy split (swapped requests' live blocks
+            # vs demoted cache blocks) and cumulative cross-tier traffic
+            "host_blocks_live": bm.num_host_live,
+            "host_blocks_cached": bm.num_host_cached,
+            "host_bytes_in_use": bm.host_bytes_in_use,
+            "demoted_blocks": bm.demoted_blocks + bm.cache_demotions,
+            "promoted_blocks": bm.promoted_blocks,
+            "host_transfer_bytes": (bm.demoted_blocks + bm.cache_demotions
+                                    + bm.promoted_blocks) * bm.block_bytes,
         }
 
     @property
@@ -552,7 +590,7 @@ class ServingEngine:
         state footprint is priced separately via `state_blocks`)."""
         if self.cfg.attention_free:
             return 0
-        retained = req.swap_tokens if req.swap_kv is not None else 0
+        retained = self.block_mgr.swapped_tokens(req.rid)
         if self.admission == "reserve":
             # worst case: full prompt + every token it may still generate
             tokens = max(len(req.prompt) + req.max_new, retained + 1)
@@ -771,23 +809,27 @@ class ServingEngine:
 
     # -- prefill -------------------------------------------------------------
     def _exec_admit(self, act: Admit) -> int:
-        """Returns the restore traffic in tokens (0 for fresh admits) —
-        the swap-in half of the decision's `swap_tokens` accounting,
-        which the tracer's `AdmitEvent` carries."""
+        """Returns the restore traffic in tokens — the host->device half
+        of the decision's `swap_tokens` accounting, which the tracer's
+        `AdmitEvent` carries.  Fresh admits can carry traffic too: a
+        host-cached prefix hit is revived by the ordered copy-ins in
+        `act.moves` (executed here, before this request's first chunk is
+        reached in plan order)."""
         req = act.req
         self._set_table_row(act.slot, act.block_ids)
         if act.swap_in:
-            return self._swap_in(act.slot, req, act.block_ids,
-                                 n_shared=act.n_shared)
+            return self._swap_in(act.slot, req, act)
         else:
             # fresh occupant: the slot's recurrent state rows still hold
             # the previous occupant's h/conv (the preemption-clobber bug:
             # these rows are NOT part of the paged pool, so nothing else
             # resets them)
+            if act.moves:
+                self._promote_blocks(act.moves)
             self._reset_slot_state(act.slot)
             self.cache["lengths"] = self.cache["lengths"].at[act.slot].set(
                 req.prefilled)
-            return 0
+            return act.n_promoted * self.block_size
 
     def _exec_prefill(self, act: Prefill):
         if act.oneshot:
@@ -864,73 +906,127 @@ class ServingEngine:
         req.cached_tokens = p
 
     # -- preemption / swap ---------------------------------------------------
+    def _host_copy_out_block(self, dev: int, host: int):
+        """Copy one device pool row to host storage under host block id
+        `host` — the allocator's `demote_copy` hook.  Only the evictor's
+        demote-before-drop calls this synchronously (the content was
+        written in an earlier step, so plan-time copying cannot race any
+        execute-time write of the current step); swap-out demotions
+        batch the same copy at the SwapOut action's place in execute
+        order instead."""
+        entry = {}
+        for name, sd in self.cache["slots"].items():
+            if "kv" in sd:
+                kv = sd["kv"]
+                entry[name] = (np.asarray(kv.k[:, dev]),
+                               np.asarray(kv.v[:, dev]))
+        self.host_pool[host] = entry
+
+    def _host_drop_block(self, host: int):
+        """Free a dropped host block's storage — the allocator's
+        `host_drop` hook (cache-pressure drops and superseded swap
+        copies).  A drop can arrive before the storage exists: a
+        same-plan swap-out -> re-admit retires superseded host ids at
+        plan time while the SwapOut that would write them is still
+        pending in execute order — flag those so the write is skipped."""
+        if host in self.host_pool:
+            del self.host_pool[host]
+        else:
+            self._host_dead_on_arrival.add(host)
+
+    def _promote_blocks(self, moves):
+        """Execute ordered (host_id, device_id) promote pairs: write each
+        host block's rows into its fresh device pool row, then release
+        the host storage (the allocator already retired the host ids)."""
+        hids = [h for h, _ in moves]
+        idx = jnp.asarray([d for _, d in moves], jnp.int32)
+        slots = {}
+        for name, sd in self.cache["slots"].items():
+            merged = dict(sd)
+            if "kv" in sd and all(name in self.host_pool[h] for h in hids):
+                kv = sd["kv"]
+                ks = np.stack([self.host_pool[h][name][0] for h in hids],
+                              axis=1)
+                vs = np.stack([self.host_pool[h][name][1] for h in hids],
+                              axis=1)
+                merged["kv"] = kv._replace(
+                    k=kv.k.at[:, idx].set(jnp.asarray(ks)),
+                    v=kv.v.at[:, idx].set(jnp.asarray(vs)))
+            slots[name] = merged
+        self.cache = dict(self.cache, slots=slots)
+        for h in hids:
+            self.host_pool.pop(h, None)
+        self.stats["promoted_blocks"] += len(moves)
+
     def _exec_swap_out(self, act: SwapOut):
-        """Copy the victim's blocks to host.  The scheduler already freed
-        them and requeued the request at plan time; refcount-aware `free`
-        means blocks shared with an active request never left the pool,
-        and no action ordered after this one can have overwritten the
-        rows being copied."""
+        """Execute the device half of an allocator demote: copy the
+        victim's blocks into their host-tier ids.  The allocator already
+        moved the request to the host tier at plan time (table = host
+        ids, device blocks freed); refcount-aware demote means blocks
+        shared with an active request never left the pool, and no action
+        ordered after this one can have overwritten the rows being
+        copied."""
         req = act.req
-        host = {}
-        if act.block_ids:
-            idx = jnp.asarray(act.block_ids, jnp.int32)
+        # a same-plan re-admit may have already retired some of these
+        # host ids (superseded by device prefix hits) — don't write
+        # storage nobody will ever read
+        moves = [(d, h) for d, h in act.moves
+                 if h not in self._host_dead_on_arrival]
+        self._host_dead_on_arrival.difference_update(
+            h for _, h in act.moves)
+        if moves:
+            idx = jnp.asarray([d for d, _ in moves], jnp.int32)
+            per_layer = {}
             for name, sd in self.cache["slots"].items():
                 if "kv" in sd:
                     kv = sd["kv"]
-                    host[name] = (np.asarray(kv.k[:, idx]),
-                                  np.asarray(kv.v[:, idx]))
-        # Non-KV slot state rides along: SSM h/conv and cross-attention
-        # K/V live slot-indexed (not in the paged pool), so a swap that
-        # only saved blocks would let the next occupant of this slot
-        # clobber them — resume would then decode from garbage state.
+                    per_layer[name] = (np.asarray(kv.k[:, idx]),
+                                       np.asarray(kv.v[:, idx]))
+            for j, (_, h) in enumerate(moves):
+                self.host_pool[h] = {
+                    name: (k[:, j], v[:, j])
+                    for name, (k, v) in per_layer.items()}
+        # Non-KV slot state rides along as tier-tagged per-request state:
+        # SSM h/conv and cross-attention K/V live slot-indexed (not in
+        # the paged pool), so a swap that only saved blocks would let the
+        # next occupant of this slot clobber them — resume would then
+        # decode from garbage state.  Snapshotting happens HERE, at this
+        # action's place in the execution order: when this victim was
+        # swap-admitted earlier in the SAME step, `pending_tok[slot]`
+        # only became correct when that restore ran (and that Admit
+        # consumed the previous `_host_state` entry).
         state = self._snapshot_slot_state(act.slot)
-        # Authoritative (re-)claim of the swap state.  The scheduler set
-        # swap_tokens at plan time, but when this victim was swap-admitted
-        # earlier in the SAME step, that Admit's `_swap_in` has just
-        # consumed and zeroed the fields — and `pending_tok[slot]` only
-        # became correct when that restore ran — so both are (re)recorded
-        # here, at this action's place in the execution order.
-        req.swap_kv = host
-        req.swap_state = state or None
-        req.swap_tokens = act.tokens
-        req.swap_pending = int(self.pending_tok[act.slot]) \
-            if req.prefilled >= len(req.prompt) else 0
+        self._host_state[req.rid] = {
+            "state": state or None,
+            "pending": int(self.pending_tok[act.slot])
+            if req.prefilled >= len(req.prompt) else 0,
+        }
         req.preemptions += 1
         self.stats["preemptions"] += 1
         self.stats["swap_outs"] += 1
+        self.stats["demoted_blocks"] += len(act.moves)
         self._clear_slot(act.slot)
 
-    def _swap_in(self, slot: int, req: Request, ids: List[int],
-                 n_shared: int = 0) -> int:
-        """Copy swapped blocks back into fresh pool rows; no recompute.
+    def _swap_in(self, slot: int, req: Request, act: Admit) -> int:
+        """Execute the device half of an allocator promote: copy the
+        host-tier blocks back into fresh pool rows; no recompute.
         Returns the restore traffic in tokens (the `wasted` charge).
 
         The leading `n_shared` table entries came from a prefix-index hit
         at re-admission: those pool rows already hold the prompt's KV
-        (content-keyed, bit-identical), so only the tail of the host copy
-        is restored — and only the restored tokens (plus the slot-state
+        (content-keyed, bit-identical), so the allocator dropped their
+        host copies without a move — only the tail (`act.moves`) crosses
+        the link, and only the restored tokens (plus the slot-state
         block-equivalents for SSM/cross models) count as `wasted` (the
         swap tax of the preemption)."""
-        n = next(iter(req.swap_kv.values()))[0].shape[1] if req.swap_kv \
-            else 0
-        s = min(n_shared, n)
-        if n > s:
-            idx = jnp.asarray(ids[s:n], jnp.int32)
-            slots = {}
-            for name, sd in self.cache["slots"].items():
-                merged = dict(sd)
-                if "kv" in sd and name in req.swap_kv:
-                    kv = sd["kv"]
-                    host_k, host_v = req.swap_kv[name]
-                    merged["kv"] = kv._replace(
-                        k=kv.k.at[:, idx].set(jnp.asarray(host_k[:, s:n])),
-                        v=kv.v.at[:, idx].set(jnp.asarray(host_v[:, s:n])))
-                slots[name] = merged
-            self.cache = dict(self.cache, slots=slots)
-        if req.swap_state:
+        if act.moves:
+            self._promote_blocks(act.moves)
+        hs = self._host_state.pop(req.rid, None) or {}
+        state = hs.get("state")
+        if state:
             # restore the victim's recurrent/cross rows into the (possibly
             # different) slot it resumes in
-            host = req.swap_state
+            host = state
 
             def restore_ssm(name, st):
                 entry = host.get(name, {})
@@ -954,18 +1050,16 @@ class ServingEngine:
         if self.cfg.is_encdec:
             self.cache["src_lengths"] = \
                 self.cache["src_lengths"].at[slot].set(req.frames.shape[0])
-        restored = max(req.swap_tokens - s * self.block_size, 0)
-        if req.swap_state:
+        retained = act.retained
+        s = min(act.n_shared, self.block_mgr.blocks_for_tokens(retained))
+        restored = max(retained - s * self.block_size, 0)
+        if state:
             restored += self.state_swap_tokens
         req.wasted_tokens += restored
         self.stats["wasted_tokens"] += restored
-        self.cache["lengths"] = self.cache["lengths"].at[slot].set(
-            req.swap_tokens)
-        self.pending_tok[slot] = req.swap_pending
-        req.cached_tokens = req.swap_tokens
-        req.swap_kv = None
-        req.swap_state = None
-        req.swap_tokens = 0
+        self.cache["lengths"] = self.cache["lengths"].at[slot].set(retained)
+        self.pending_tok[slot] = hs.get("pending", 0)
+        req.cached_tokens = retained
         self.stats["swap_ins"] += 1
         # the restored prompt blocks can serve later same-prompt requests
         # (no-op for prefixes still indexed by another holder, and for a

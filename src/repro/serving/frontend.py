@@ -76,6 +76,15 @@ class FleetReport:
 
 
 class ServingFrontend:
+    # Weight of kv_pressure (a [0, ~1] fraction) against load (a request
+    # count) in the dispatch score.  Below 1.0, pressure can never
+    # reorder replicas whose loads differ by a whole request — it
+    # resolves fractional standing between count-tied replicas (the old
+    # tie-break, now as one continuous score) — while any pressure GAP
+    # bigger than 1/pressure_weight of a request does shift dispatch
+    # away from a replica near its byte budget.
+    pressure_weight = 0.5
+
     def __init__(self, engines: List[ServingEngine]):
         if not engines:
             raise ValueError("ServingFrontend needs at least one engine")
@@ -110,17 +119,19 @@ class ServingFrontend:
             raise ValueError(f"duplicate rid {rid}")
         self._next_rid = max(self._next_rid, rid + 1)
         n = len(self.engines)
-        loads = [self._load(e) for e in self.engines]
-        best = min(loads)
-        # least-loaded replica; among load ties, the one with the lowest
-        # KV-pool pressure takes the request (a replica near its byte
-        # budget sheds load even when its queue+slots count ties), and
-        # exact pressure ties fall back to round-robin so equal replicas
-        # share the stream instead of replica 0 soaking it up
-        tied = [i for i in range(n) if loads[i] == best]
-        min_pressure = min(self.engines[i].kv_pressure for i in tied)
-        tied = [i for i in tied
-                if self.engines[i].kv_pressure <= min_pressure]
+        # single weighted load/pressure score: queue+slot count plus the
+        # KV-pool pressure fraction scaled by `pressure_weight`.  A
+        # replica near its byte budget sheds load even at equal request
+        # count (pressure breaks count ties continuously), and a large
+        # enough pressure gap outweighs a small count deficit — e.g. a
+        # replica whose budget just shrank stops soaking up dispatch
+        # before its queue visibly backs up.  Exact score ties fall back
+        # to round-robin so equal replicas share the stream instead of
+        # replica 0 soaking it up.
+        scores = [self._load(e) + self.pressure_weight * e.kv_pressure
+                  for e in self.engines]
+        best = min(scores)
+        tied = [i for i in range(n) if scores[i] <= best]
         for k in range(n):
             i = (self._rr + k) % n
             if i in tied:
@@ -149,6 +160,24 @@ class ServingFrontend:
                 f"fleet is at {self.weight_version}")
         for eng in self.engines:
             eng.install_weights(params, version)
+        self.weight_version = version
+
+    def stage_weights(self, params, version: Optional[int] = None):
+        """Stage a new weight version on every replica for install at
+        each replica's next `step()` boundary (the deferred spelling of
+        `update_weights` — the trainer can push mid-flight and every
+        replica picks the push up exactly when it is safe to).  Tokens
+        sampled before a replica's boundary keep the old version stamp;
+        tokens after carry the new one — version attribution stays
+        exact per token either way."""
+        if version is None:
+            params, version = params.params, params.version
+        if version < self.weight_version:
+            raise ValueError(
+                f"weight version must be monotonic: got {version}, "
+                f"fleet is at {self.weight_version}")
+        for eng in self.engines:
+            eng.stage_weights(params, version)
         self.weight_version = version
 
     # -- stepping -----------------------------------------------------------

@@ -102,6 +102,9 @@ class SwapOut:
     req: object                  # engine.Request
     block_ids: List[int]         # table snapshot (device copy source)
     tokens: int                  # valid KV rows to save
+    # ordered (device_id, host_id) demote pairs from the allocator — the
+    # engine executes these copies when it reaches the action
+    moves: List[tuple] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
@@ -111,6 +114,11 @@ class Admit:
     block_ids: List[int]
     swap_in: bool                # restore host KV instead of prefilling
     n_shared: int                # leading table entries from prefix hits
+    # ordered (host_id, device_id) promote pairs (swap-in tail restore,
+    # or host-cached prefix blocks revived by copy-in on a fresh admit)
+    moves: List[tuple] = dataclasses.field(default_factory=list)
+    retained: int = 0            # valid KV rows restored on swap-in
+    n_promoted: int = 0          # host->device copy-in blocks
 
 
 @dataclasses.dataclass
@@ -316,13 +324,11 @@ class Scheduler:
                     if not (isinstance(a, (Draft, Verify))
                             and a.slot == slot)]
                 decision.verify_tokens -= verify.width
-        # Save only the blocks that hold valid rows: a speculating slot
+        # Demote only the blocks that hold valid rows: a speculating slot
         # can own blocks past `cached_tokens` (grown for a verify that
         # was then rewound or cancelled), and re-admission only reserves
         # blocks for the tokens actually retained — an untrimmed host
         # copy would not fit the restore target (and is pure swap waste).
-        ids = eng.block_mgr.blocks_of(req.rid)[
-            :eng.block_mgr.blocks_for_tokens(req.cached_tokens)]
         # `cached_tokens` is the host-authoritative count of valid KV rows
         # (kept in lockstep by engine.execute); for a slot admitted earlier
         # THIS step it already covers exactly the rows whose content is
@@ -330,22 +336,25 @@ class Scheduler:
         # Non-KV slot state (SSM h/conv, cross KV) moves over the host
         # link too — priced in block-equivalent token units alongside the
         # KV rows, so evicting a hybrid/enc-dec slot is never free.
-        decision.actions.append(SwapOut(slot, req, ids, req.cached_tokens))
-        decision.swap_tokens += req.cached_tokens + eng.state_swap_tokens
-        # claim the swap state NOW: a re-admission later in this same plan
-        # must see the request as swapped (not fresh), or it would schedule
-        # a full re-prefill and throw away its generated tokens.  Only the
-        # token COUNT is claimed here (same-plan `_reserve_blocks` reads
-        # it); the pending token and the host KV copy are recorded when
-        # the engine executes the SwapOut — `pending_tok[slot]` can be
+        #
+        # The demote IS the claim: the allocator marks the request
+        # swapped NOW (a re-admission later in this same plan must see it
+        # as swapped, not fresh — `_reserve_blocks` and the swap_in test
+        # read `block_mgr.is_swapped`), its table becomes host ids, and
+        # the freed device blocks are immediately reusable.  Only the
+        # device COPIES wait for the action's place in execute order —
+        # the victim's rows must reach host before any later-ordered
+        # action can overwrite them.  The pending token and slot state
+        # are snapshotted at execute time too: `pending_tok[slot]` can be
         # stale at plan time when this victim was itself swap-admitted
-        # earlier in the same plan, but is always current at execute time,
-        # and execute-time re-claiming also undoes `_swap_in` zeroing the
-        # fields when that same-plan Admit ran first.
-        req.swap_tokens = req.cached_tokens
-        if req.swap_kv is None:
-            req.swap_kv = {}
-        eng.block_mgr.free(req.rid)
+        # earlier in the same plan, but is always current at execute
+        # time, and execute-time snapshotting also undoes `_swap_in`
+        # consuming the host state when that same-plan Admit ran first.
+        moves = eng.block_mgr.demote(req.rid, req.cached_tokens)
+        decision.actions.append(SwapOut(
+            slot, req, [d for d, _ in moves], req.cached_tokens,
+            moves=moves))
+        decision.swap_tokens += req.cached_tokens + eng.state_swap_tokens
         eng.slot_req[slot] = None
         eng.queue.insert(0, req)
 
@@ -357,56 +366,100 @@ class Scheduler:
             if slot is None:
                 return
             req = eng.queue[0]
-            shared = eng.block_mgr.lookup_prefix(req.prompt)
+            swap_in = eng.block_mgr.is_swapped(req.rid)
+            hits = eng.block_mgr.lookup_prefix(req.prompt)
+            # A hit is usable only where its tier fits the admission
+            # shape.  Host-tier hits need a copy-in, which only the
+            # chunked skip path can exploit on a FRESH admission (legacy
+            # one-shot prefill rewrites every prompt block anyway, and a
+            # swap-in restore dedups against device content only — its
+            # own host copy already covers those rows).  Either
+            # restriction keeps the run a prefix: truncate at the first
+            # unusable tier, never filter mid-run.
+            if swap_in or not (self.prefill_chunk is not None
+                               and eng._chunk_skip_ok):
+                shared = []
+                for b in hits:
+                    if eng.block_mgr.tier(b) != "device":
+                        break
+                    shared.append(b)
+            else:
+                shared = hits
             need = max(eng._reserve_blocks(req) - len(shared), 0)
             # evictor-cached hits are revived (refcount 0 -> 1): they leave
             # the reclaimable pool exactly like a fresh allocation would,
             # so they count against the per-step block throttle the same
             # way — a GRPO burst whose prefixes all sit in the evictor
-            # cache must still admit gradually, not all at once
-            revive = sum(1 for b in shared if eng.block_mgr.refcount(b) == 0)
+            # cache must still admit gradually, not all at once.  Host-
+            # cached hits consume a fresh device block each (the copy-in
+            # target), so they count identically.
+            revive = sum(1 for b in shared
+                         if eng.block_mgr.tier(b) == "device"
+                         and eng.block_mgr.refcount(b) == 0)
+            promote = sum(1 for b in shared
+                          if eng.block_mgr.tier(b) == "host")
             # the request's constant slot state (SSM h/conv, cross KV)
             # counts against the byte budget like `state_blocks` more
             # fresh blocks — an enc-dec/hybrid model must not over-admit
             # on its per-token KV cost alone
             if self.budget.new_blocks is not None and \
-                    fresh_blocks[0] + need + revive + eng.state_blocks > \
+                    fresh_blocks[0] + need + revive + promote + \
+                    eng.state_blocks > \
                     self.budget.new_blocks and fresh_blocks[0] > 0:
                 return              # block budget spent: admit next step
             if not eng.block_mgr.can_allocate(
-                    need + revive,
+                    need + revive + promote,
                     limit_blocks=eng._effective_blocks - eng.state_blocks):
                 return              # capacity-bound: stay queued
             eng.queue.pop(0)
-            fresh_blocks[0] += need + revive + eng.state_blocks
+            fresh_blocks[0] += need + revive + promote + eng.state_blocks
+            limit = eng._effective_blocks - eng.state_blocks
             if shared:
-                eng.block_mgr.acquire(req.rid, shared)
                 eng.stats["prefix_hits"] += len(shared)
-            eng.block_mgr.allocate(
-                req.rid, need,
-                limit_blocks=eng._effective_blocks - eng.state_blocks)
-            ids = eng.block_mgr.blocks_of(req.rid)
-            swap_in = req.swap_kv is not None
+            moves: List[tuple] = []
+            n_promoted = 0
+            retained = 0
             if not swap_in:
+                if shared:
+                    # cross-tier acquire: device hits refcount up, host-
+                    # cached hits are promoted (copy-in) and the prefix
+                    # index re-points to their new device rows
+                    _, moves, n_promoted = eng.block_mgr.promote_hits(
+                        req.rid, shared, limit_blocks=limit)
+                eng.block_mgr.allocate(req.rid, need, limit_blocks=limit)
                 # fresh request: skip straight past the shared full-block
-                # prefix (its KV is already in the pool) — but only where
-                # prefix KV is the *whole* carried state (pure attention),
-                # and always leave >= 1 token so the last chunk has logits
+                # prefix (its KV is in the pool — or arriving from host
+                # via the Admit's ordered copy-ins, which the engine
+                # executes before this request's first chunk) — but only
+                # where prefix KV is the *whole* carried state (pure
+                # attention), and always leave >= 1 token so the last
+                # chunk has logits
                 p = len(req.prompt)
                 skip = min(len(shared) * eng.block_size, p - 1) \
                     if (self.prefill_chunk is not None
                         and eng._chunk_skip_ok) else 0
                 req.prefilled = skip
                 req.cached_tokens = skip
+                # revival is not free: the promoted blocks cross the host
+                # link exactly like a swap-in restore, and the honest
+                # charge is what lets `accounting()` and the tiered-kv
+                # benchmark compare revival against recompute
+                decision.swap_tokens += n_promoted * eng.block_size
             else:
-                req.cached_tokens = req.swap_tokens
+                retained = eng.block_mgr.swapped_tokens(req.rid)
+                moves, n_promoted = eng.block_mgr.promote(
+                    req.rid, shared_ids=shared, limit_blocks=limit)
+                eng.block_mgr.allocate(
+                    req.rid, need - n_promoted, limit_blocks=limit)
+                req.cached_tokens = retained
                 # restore traffic: rows beyond the re-deduped shared head,
                 # plus the slot state coming back from host
                 s = min(len(shared),
-                        eng.block_mgr.blocks_for_tokens(req.swap_tokens))
+                        eng.block_mgr.blocks_for_tokens(retained))
                 decision.swap_tokens += max(
-                    req.swap_tokens - s * eng.block_size, 0) + \
+                    retained - s * eng.block_size, 0) + \
                     eng.state_swap_tokens
+            ids = eng.block_mgr.blocks_of(req.rid)
             req.last_used = self._tick
             eng.slot_req[slot] = req
             if self.prefill_chunk is None:
@@ -421,7 +474,9 @@ class Scheduler:
                 # be fully materialized before it becomes discoverable.
                 eng.block_mgr.register_prefix(req.rid, req.prompt)
             decision.actions.append(
-                Admit(slot, req, ids, swap_in, len(shared)))
+                Admit(slot, req, ids, swap_in, len(shared),
+                      moves=moves, retained=retained,
+                      n_promoted=n_promoted))
 
     # -- chunked prefill ----------------------------------------------------
     def _plan_prefills(self, eng, decision: ScheduleDecision,

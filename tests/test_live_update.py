@@ -117,6 +117,71 @@ def test_dispatch_balances_across_replicas(fleet_setup):
     assert replicas == [0, 0, 1, 1]
 
 
+def test_dispatch_sheds_load_from_pressured_replica(fleet_setup):
+    """At equal request count, the weighted score routes to the replica
+    with lower KV pressure — round-robin alone would have picked the
+    pressured one."""
+    fe = ServingFrontend([_mk_engine(fleet_setup, seed=i) for i in range(2)])
+    for i in range(2):
+        fe.submit(tasks.random_prompt(i, 9), max_new=4, rid=i)  # one each
+    for _ in range(2):
+        fe.step()                           # prompts prefill on both
+    e0, e1 = fe.engines
+    assert fe._load(e0) == fe._load(e1) == 1
+    assert e0.block_mgr.blocks_in_use >= 3
+    # replica 0's budget shrinks (the trainer reclaimed HBM): its pool
+    # fraction spikes while the count tie — which the wrapped round-robin
+    # cursor would hand to replica 0 — stays
+    e0.budget_tokens = e0.block_size
+    rid = fe.submit(tasks.random_prompt(7, 5), max_new=4, rid=7)
+    assert fe._tracked[rid].replica == 1
+
+
+def test_pressure_gap_outweighs_count_deficit(fleet_setup):
+    """A severely pressured replica sheds dispatch even against a replica
+    with MORE queued work: the score is one weighted sum, not a count
+    comparison tie-broken by pressure."""
+    fe = ServingFrontend([_mk_engine(fleet_setup, seed=i) for i in range(2)])
+    fe.submit(tasks.random_prompt(0, 9), max_new=4, rid=0)   # -> replica 0
+    for _ in range(2):
+        fe.step()
+    e0, e1 = fe.engines
+    e1.submit(tasks.random_prompt(1, 5), max_new=4, rid=91)
+    e1.submit(tasks.random_prompt(2, 5), max_new=4, rid=92)
+    assert (fe._load(e0), fe._load(e1)) == (1, 2)
+    e0.budget_tokens = e0.block_size        # >= 3 blocks vs a 1-block budget
+    assert fe.pressure_weight * e0.kv_pressure > 1.0
+    rid = fe.submit(tasks.random_prompt(7, 5), max_new=4, rid=7)
+    assert fe._tracked[rid].replica == 1
+
+
+def test_fleet_stage_weights_attributes_versions_exactly(fleet_setup):
+    """stage_weights through the front-end: every replica installs at its
+    own next step boundary, and per-token version attribution is exact —
+    tokens sampled before the boundary carry the old version, every token
+    after carries the new one."""
+    fe = ServingFrontend([_mk_engine(fleet_setup, seed=i) for i in range(2)])
+    for i in range(4):
+        fe.submit(tasks.random_prompt(i, 6), max_new=5, rid=i)
+    for _ in range(3):
+        fe.step()
+    before = {rid: len(t.req.generated) for rid, t in fe._tracked.items()}
+    assert any(n > 0 for n in before.values())
+    fe.stage_weights(VersionedWeights(
+        params=_next_version(fleet_setup), version=7, stats={}))
+    assert fe.weight_version == 7                       # fleet-side, eager
+    assert all(e.weight_version == 0 for e in fe.engines)   # replica: staged
+    fe.step()
+    assert all(e.weight_version == 7 for e in fe.engines)
+    while fe.has_work():
+        fe.step()
+    for rid, t in fe._tracked.items():
+        vs = t.req.token_versions
+        assert len(vs) == len(t.req.generated)
+        assert vs == [0] * before[rid] + [7] * (len(vs) - before[rid]), \
+            f"rid {rid}: {vs} (had {before[rid]} pre-stage tokens)"
+
+
 def test_frontend_rejects_mixed_version_fleet(fleet_setup):
     engines = [_mk_engine(fleet_setup, version=0),
                _mk_engine(fleet_setup, version=1)]

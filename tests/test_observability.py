@@ -117,6 +117,30 @@ def test_jsonl_sink_streams_rows(tmp_path):
     assert [json.loads(ln) for ln in lines] == [{"a": 1}, {"b": [1, 2]}]
 
 
+def test_run_id_joins_trainer_metrics_to_serve_events(tmp_path):
+    """One shared id stamps BOTH streams: the trainer's metrics rows and
+    the fleet's event rows written with the same `run_id` join on one
+    equality — and the stamped event rows still parse back to equal
+    typed events (`run_id` is envelope, like `replica`)."""
+    rid = "rl-2026-08-08-a"
+    metrics, events = tmp_path / "metrics.jsonl", tmp_path / "events.jsonl"
+    with JsonlSink(str(metrics), run_id=rid) as sink:
+        sink.write({"step": 0, "loss": 1.25})
+        sink.write({"step": 1, "loss": 1.125, "run_id": "resumed-b"})
+    e = StepEvent(step=0, clock_before=0.0, cost_tokens=3,
+                  prefill_tokens=3, verify_tokens=0, decode_tokens=0,
+                  swap_tokens=0, version=0)
+    with JsonlSink(str(events), run_id=rid) as sink:
+        row = e.to_dict()
+        row["replica"] = 1
+        sink.write(row)
+    mrows = [json.loads(ln) for ln in metrics.read_text().splitlines()]
+    erows = [json.loads(ln) for ln in events.read_text().splitlines()]
+    assert mrows[0]["run_id"] == erows[0]["run_id"] == rid   # the join key
+    assert mrows[1]["run_id"] == "resumed-b"   # pre-stamped rows keep theirs
+    assert event_from_dict(erows[0]) == e
+
+
 # ---------------------------------------------------------------------------
 # percentile oracle
 # ---------------------------------------------------------------------------

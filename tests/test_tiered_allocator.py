@@ -1,0 +1,329 @@
+"""Two-tier allocator tests: cross-tier move bookkeeping (demote /
+promote / promote_hits), the evictor's demote-before-drop path, the
+live-demotion squeeze of the host cache reservation, and a hypothesis
+property drawing per-tier capacities — including ``host_blocks=0``,
+which must degenerate to the single-tier drop-on-evict allocator —
+over random arrival/policy/admission traces, asserting the tier
+invariants (every id in exactly one tier, refcounts exactly match
+table ownership, host storage conserved) on top of the scheduler ones
+(no request lost, budget never exceeded, completions bit-exact vs the
+no-preemption oracle)."""
+from collections import Counter
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import tiny_serving_config as _cfg
+from repro.core import BF16_ROLLOUT
+from repro.data import tasks
+from repro.models import init_params
+from repro.serving import (
+    EVICTION_POLICIES,
+    BlockManager,
+    ServingEngine,
+    kv_bytes_per_token,
+    request_state_bytes,
+)
+from repro.serving.block_manager import DEVICE_TIER, HOST_TIER
+
+jax.config.update("jax_platform_name", "cpu")
+
+_prompt = tasks.random_prompt
+
+
+def _bm(num_blocks=4, host_blocks=4, block_size=4):
+    """Bookkeeping-only manager with recording host callbacks."""
+    bm = BlockManager(num_blocks=num_blocks, block_size=block_size,
+                      host_blocks=host_blocks)
+    copies, drops = [], []
+    bm.set_host_callbacks(demote_copy=lambda d, h: copies.append((d, h)),
+                          host_drop=drops.append)
+    return bm, copies, drops
+
+
+def _toks(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(4, 19, size=n).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# cross-tier moves: demote / promote / promote_hits
+# ---------------------------------------------------------------------------
+
+def test_demote_promote_round_trip():
+    bm, _, drops = _bm()
+    bm.allocate(0, 3)
+    moves = bm.demote(0, 10)                  # 10 tokens -> 3 valid blocks
+    assert len(moves) == 3
+    assert bm.is_swapped(0) and bm.swapped_tokens(0) == 10
+    table = bm.blocks_of(0)
+    assert [bm.tier(b) for b in table] == [HOST_TIER] * 3
+    assert [h for _, h in moves] == table     # plan order = table order
+    assert bm.blocks_in_use == 0 and bm.num_host_live == 3
+    back, n = bm.promote(0, shared_ids=[])
+    assert n == 3 and [h for h, _ in back] == table
+    assert not bm.is_swapped(0)
+    assert [bm.tier(b) for b in bm.blocks_of(0)] == [DEVICE_TIER] * 3
+    assert bm.num_host_live == 0
+    # promote hands storage ownership to the engine's copy loop: no drop
+    assert drops == []
+    assert (bm.demoted_blocks, bm.promoted_blocks) == (3, 3)
+
+
+def test_demote_trims_to_valid_tokens():
+    """Blocks past the valid count (speculative growth) are released
+    without a host copy."""
+    bm, _, _ = _bm()
+    bm.allocate(0, 3)
+    moves = bm.demote(0, 5)                   # 5 tokens -> 2 valid blocks
+    assert len(moves) == 2 and len(bm.blocks_of(0)) == 2
+    assert bm.num_host_live == 2              # only the valid blocks crossed
+    assert bm.num_free_blocks == bm.num_blocks    # device side fully free
+
+
+def test_promote_shared_head_drops_superseded_host_copies():
+    """A swapped-out prefix whose group is still device-resident restores
+    for free: the index hit heads the table and the host copies die."""
+    bm, _, drops = _bm(num_blocks=6)
+    toks = _toks(8)
+    bm.allocate(0, 2)
+    bm.register_prefix(0, toks)
+    bm.acquire(1, bm.blocks_of(0))            # the sharer keeps them live
+    shared = bm.blocks_of(1)
+    moves = bm.demote(0, 8)
+    assert len(moves) == 2                    # sharer may die first: copy all
+    hosts = [h for _, h in moves]
+    back, n = bm.promote(0, shared_ids=bm.lookup_prefix(toks))
+    assert (back, n) == ([], 0)
+    assert bm.blocks_of(0) == shared
+    assert bm.refcount(shared[0]) == 2
+    assert sorted(drops) == sorted(hosts)     # superseded copies freed
+    assert bm.num_host_live == 0
+
+
+def test_evictor_demotes_before_drop_and_revives_by_copy_in():
+    bm, copies, _ = _bm(num_blocks=4, host_blocks=4)
+    toks = _toks(8)
+    bm.allocate(0, 2)
+    bm.register_prefix(0, toks)
+    bm.free(0)
+    assert bm.num_cached_blocks == 2
+    dev_hits = bm.lookup_prefix(toks)
+    bm.allocate(1, 4)                         # pool-sized: evicts the cache
+    assert bm.cache_demotions == 2
+    assert [d for d, _ in copies] == dev_hits # content copied out, in order
+    hits = bm.lookup_prefix(toks)             # ...still a prefix hit
+    assert [bm.tier(b) for b in hits] == [HOST_TIER] * 2
+    assert bm.num_host_cached == 2
+    bm.free(1)
+    table, moves, n = bm.promote_hits(2, hits)
+    assert n == 2 and [h for h, _ in moves] == hits
+    assert table == bm.blocks_of(2)
+    assert [bm.tier(b) for b in table] == [DEVICE_TIER] * 2
+    # the index re-pointed across tiers: the revived run hits on device
+    assert bm.lookup_prefix(toks) == table
+    assert bm.num_host_cached == 0
+
+
+def test_host_blocks_zero_degenerates_to_drop_on_evict():
+    bm, copies, drops = _bm(num_blocks=4, host_blocks=0)
+    toks = _toks(8)
+    bm.allocate(0, 2)
+    bm.register_prefix(0, toks)
+    bm.free(0)
+    bm.allocate(1, 4)
+    assert bm.lookup_prefix(toks) == []       # the entries died
+    assert bm.cache_demotions == 0 and bm.num_host_cached == 0
+    assert copies == [] and drops == []
+
+
+def test_live_demotion_squeezes_the_host_cache():
+    """Swap-out always succeeds: live host blocks overcommit the
+    reservation and the oldest cached entries are dropped to make room."""
+    bm, _, drops = _bm(num_blocks=6, host_blocks=2)
+    toks = _toks(8)
+    bm.allocate(0, 2)
+    bm.register_prefix(0, toks)
+    bm.free(0)
+    bm.allocate(1, 6)                         # evict both -> host cache full
+    assert bm.num_host_cached == 2
+    cached = bm.lookup_prefix(toks)
+    moves = bm.demote(1, 24)                  # 6 live blocks > reservation
+    assert len(moves) == 6 and bm.num_host_live == 6
+    assert bm.num_host_cached == 0            # cache squeezed out entirely
+    assert bm.host_cache_drops == 2 and sorted(drops) == sorted(cached)
+    assert bm.lookup_prefix(toks) == []
+
+
+def test_acquire_rejects_host_tier_ids():
+    bm, _, _ = _bm(num_blocks=4, host_blocks=4)
+    toks = _toks(8)
+    bm.allocate(0, 2)
+    bm.register_prefix(0, toks)
+    bm.free(0)
+    bm.allocate(1, 4)
+    hits = bm.lookup_prefix(toks)
+    with pytest.raises(ValueError, match="promote_hits"):
+        bm.acquire(2, hits)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property: random traces over drawn per-tier capacities
+# ---------------------------------------------------------------------------
+
+_ORACLE_CACHE = {}
+
+
+def _oracle_tokens(cfg, params, prompt, max_new):
+    """No-preemption single-request reference run (greedy decode depends
+    only on the prompt; the jnp chunked-prefill path is bit-exact vs
+    one-shot, so tiering/chunking must never change tokens)."""
+    key = (prompt.tobytes(), max_new)
+    if key not in _ORACLE_CACHE:
+        eng = ServingEngine(params, cfg, BF16_ROLLOUT, max_slots=1,
+                            max_seq_len=32)
+        eng.submit(prompt, max_new=max_new, rid=0)
+        rep = eng.run(max_steps=200)
+        assert len(rep.completed) == 1
+        _ORACLE_CACHE[key] = list(rep.completed[0].generated)
+    return _ORACLE_CACHE[key]
+
+
+def _assert_tier_invariants(eng):
+    """The allocator/engine cross-tier state is exactly consistent."""
+    mgr = eng.block_mgr
+    # refcounts are exactly the ownership multiset (both tiers)
+    owned = Counter(b for t in mgr._owned.values() for b in t)
+    assert dict(owned) == mgr._refcount
+    # the device pool partitions into free / cached / refcounted rows
+    dev_owned = {b for b in owned if mgr.tier(b) == DEVICE_TIER}
+    free, cached = set(mgr._free), set(mgr._cached)
+    assert len(mgr._free) == len(free)
+    assert not (free & cached) and not (free & dev_owned) \
+        and not (cached & dev_owned)
+    assert len(free) + len(cached) + len(dev_owned) == mgr.num_blocks
+    # host tier: live count matches ownership; the cache never exceeds
+    # its live-squeezed reservation
+    host_owned = [b for b in owned if mgr.tier(b) == HOST_TIER]
+    assert len(host_owned) == mgr.num_host_live
+    assert mgr.num_host_cached <= max(mgr.host_blocks - mgr.num_host_live, 0)
+    # a request is swapped iff its table lives on the host tier
+    for rid, table in mgr._owned.items():
+        tiers = {mgr.tier(b) for b in table}
+        assert tiers <= ({HOST_TIER} if mgr.is_swapped(rid)
+                         else {DEVICE_TIER})
+    # engine host storage is conserved: exactly one array set per live or
+    # cached host block, none leaked for dead ids
+    assert set(eng.host_pool) == set(host_owned) | set(mgr._host_cached)
+
+
+def test_tiered_invariants_random_traces():
+    hyp = pytest.importorskip("hypothesis")
+    st = hyp.strategies
+    cfg = _cfg()
+    params = init_params(cfg, jax.random.key(0))
+    canonical = [_prompt(s, 4 + 2 * s) for s in range(4)]   # lens 4..10
+
+    @hyp.settings(deadline=None, max_examples=8)
+    @hyp.given(
+        reqs=st.lists(
+            st.tuples(st.integers(0, 3),      # canonical prompt index
+                      st.integers(2, 5),      # max_new
+                      st.integers(0, 5)),     # arrival step
+            min_size=1, max_size=5),
+        policy=st.sampled_from(sorted(EVICTION_POLICIES)),
+        admission=st.sampled_from(["reserve", "ondemand"]),
+        chunk=st.sampled_from([None, 3]),
+        budget_blocks=st.integers(5, 10),     # device-tier capacity
+        host_blocks=st.sampled_from([0, 2, 6]),   # host-tier capacity
+    )
+    def run(reqs, policy, admission, chunk, budget_blocks, host_blocks):
+        per = kv_bytes_per_token(cfg, BF16_ROLLOUT)
+        budget = per * 4 * budget_blocks + \
+            3 * request_state_bytes(cfg, BF16_ROLLOUT)
+        eng = ServingEngine(
+            params, cfg, BF16_ROLLOUT, max_slots=3, max_seq_len=32,
+            kv_budget_bytes=budget, admission=admission, eviction=policy,
+            prefill_chunk=chunk, host_kv_blocks=host_blocks)
+        if host_blocks == 0:
+            # the evictor degenerates to seed drop-on-evict (live
+            # swap-out demotions are reservation-exempt and still run)
+            assert eng.block_mgr.host_blocks == 0
+        submitted = {}
+        by_arrival = sorted(enumerate(reqs), key=lambda kv: kv[1][2])
+        idx = 0
+        for tick in range(400):
+            while idx < len(by_arrival) and by_arrival[idx][1][2] <= tick:
+                rid, (pi, max_new, _) = by_arrival[idx]
+                eng.submit(canonical[pi], max_new=max_new, rid=rid)
+                submitted[rid] = (pi, max_new)
+                idx += 1
+            decision = eng.step()
+            assert eng.block_mgr.blocks_in_use <= eng._effective_blocks
+            _assert_tier_invariants(eng)
+            queued = [r.rid for r in eng.queue]
+            running = [r.rid for r in eng.slot_req if r is not None]
+            done = [r.rid for r in eng.done]
+            everywhere = queued + running + done
+            assert sorted(everywhere) == sorted(set(everywhere))
+            assert set(everywhere) == set(submitted)
+            if idx == len(by_arrival) and decision.is_empty:
+                break
+        assert len(eng.done) == len(submitted)
+        for r in eng.done:
+            pi, max_new = submitted[r.rid]
+            assert list(r.generated) == _oracle_tokens(
+                cfg, params, canonical[pi], max_new), \
+                f"rid {r.rid} diverged (policy={policy}, chunk={chunk}, " \
+                f"admission={admission}, host_blocks={host_blocks})"
+        # host_blocks=0 disables the evictor's demote-to-host cache (seed
+        # drop-on-evict); LIVE swap-out demotions are reservation-exempt
+        # and may still mint host blocks, so demoted_blocks stays free.
+        if host_blocks == 0:
+            assert eng.block_mgr.cache_demotions == 0
+            assert eng.block_mgr.num_host_cached == 0
+        # end state: no device blocks held, no live host blocks, and the
+        # only host storage left is the (bounded) demoted prefix cache
+        assert eng.block_mgr.blocks_in_use == 0
+        assert eng.block_mgr.num_host_live == 0
+        assert set(eng.host_pool) == set(eng.block_mgr._host_cached)
+
+    run()
+
+
+def test_same_plan_swap_out_readmit_conserves_host_storage():
+    """Regression: a GRPO trio under a tight device budget produces plans
+    where a victim is swapped out and re-admitted in the SAME step.  The
+    plan-time promote retires the shared-head host ids (device prefix
+    hits supersede them) before the SwapOut's copies materialize at
+    execute time — the engine must not write storage for the dead ids,
+    or `host_pool` leaks them forever."""
+    cfg = _cfg()
+    params = init_params(cfg, jax.random.key(0))
+    prompt = _prompt(3, 10)
+    per = kv_bytes_per_token(cfg, BF16_ROLLOUT)
+    budget = per * 4 * 7 + 3 * request_state_bytes(cfg, BF16_ROLLOUT)
+    eng = ServingEngine(
+        params, cfg, BF16_ROLLOUT, max_slots=3, max_seq_len=32,
+        kv_budget_bytes=budget, admission="ondemand",
+        eviction="private-blocks", prefill_chunk=3, host_kv_blocks=2)
+    for rid in range(3):
+        eng.submit(prompt, max_new=5, rid=rid)
+    saw_same_plan = False
+    for _ in range(400):
+        decision = eng.step()
+        kinds = [type(a).__name__ for a in decision.actions]
+        if "SwapOut" in kinds and "Admit" in kinds:
+            saw_same_plan = True
+        _assert_tier_invariants(eng)
+        if decision.is_empty and not eng.queue \
+                and all(r is None for r in eng.slot_req):
+            break
+    assert saw_same_plan, "trace no longer exercises the hazard"
+    assert len(eng.done) == 3
+    oracle = _oracle_tokens(cfg, params, prompt, 5)
+    for r in eng.done:
+        assert list(r.generated) == oracle
+    # end state: only the (bounded) demoted prefix cache may hold storage
+    assert set(eng.host_pool) == set(eng.block_mgr._host_cached)

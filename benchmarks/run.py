@@ -25,6 +25,7 @@ MODULES = [
     ("live_update", "Live fleet: hot-swap attribution + replica scaling"),
     ("observability", "Step-trace telemetry: zero-perturbation + reconcile"),
     ("tiered_kv", "Two-tier KV: host-tier prefix revival vs recompute"),
+    ("fault_tolerance", "Fleet chaos: failover exactly-once + atomic push"),
     ("router_precision", "Fig 6 router precision mismatch-KL"),
     ("scale_format", "Fig 12 FP32 vs UE8M0 scales mismatch-KL"),
     ("recipe_ablation", "Fig 11 hybrid vs pure-E4M3 grad profiling"),

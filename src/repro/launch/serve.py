@@ -26,6 +26,9 @@ from repro.models import init_params
 from repro.rl import WeightSyncer, sync_policy_weights
 from repro.serving import (
     EVICTION_POLICIES,
+    CrashFault,
+    FaultInjector,
+    FaultPlan,
     ServingEngine,
     ServingFrontend,
     SpecConfig,
@@ -111,6 +114,26 @@ def main(argv=None):
                          "the trainer (repro.launch.train --run-id) with "
                          "the SAME id to join its metrics stream to these "
                          "serving steps")
+    ap.add_argument("--chaos-seed", type=int, default=None,
+                    help="fleet chaos: derive a deterministic random "
+                         "fault schedule (replica crashes) from this seed "
+                         "via FaultPlan.random and inject it into every "
+                         "replica; the frontend fails work over with "
+                         "exactly-once token delivery (requires "
+                         "--replicas >= 2)")
+    ap.add_argument("--crash-replica", type=int, default=None,
+                    metavar="I",
+                    help="fleet chaos: crash exactly replica I (instead "
+                         "of a --chaos-seed random schedule)")
+    ap.add_argument("--crash-step", type=int, default=2, metavar="N",
+                    help="engine-local step at which --crash-replica "
+                         "fires (0-based count of step() entries)")
+    ap.add_argument("--crash-transient", action="store_true",
+                    help="make the --crash-replica crash transient: the "
+                         "replica rejoins after --crash-down-steps once "
+                         "it reinstalls the fleet weight version")
+    ap.add_argument("--crash-down-steps", type=int, default=3,
+                    help="front-end steps a transient crash stays down")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.src_pad < 1:
@@ -118,6 +141,13 @@ def main(argv=None):
     if args.kernel_config is not None and args.decode_kernel != "gather":
         ap.error("--decode-kernel and --kernel-config are mutually "
                  "exclusive (use --kernel-config decode)")
+    if args.chaos_seed is not None and args.crash_replica is not None:
+        ap.error("--chaos-seed and --crash-replica are mutually "
+                 "exclusive (random schedule vs one explicit crash)")
+    chaos = args.chaos_seed is not None or args.crash_replica is not None
+    if chaos and args.replicas < 2:
+        ap.error("fault injection needs --replicas >= 2: a single-replica "
+                 "fleet has nowhere to fail work over to")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -144,13 +174,32 @@ def main(argv=None):
     tracing = args.trace_out is not None or args.events_out is not None
     tracers = []
 
+    # one shared injector: faults are keyed on each engine's replica_index
+    # (assigned by the frontend), so every replica sees the same plan and
+    # only its own entries fire
+    faults = None
+    if args.crash_replica is not None:
+        if not 0 <= args.crash_replica < args.replicas:
+            ap.error(f"--crash-replica {args.crash_replica} out of range "
+                     f"for --replicas {args.replicas}")
+        faults = FaultInjector(FaultPlan(crashes=(
+            CrashFault(replica=args.crash_replica, step=args.crash_step,
+                       transient=args.crash_transient,
+                       down_steps=args.crash_down_steps),)))
+    elif args.chaos_seed is not None:
+        # max_step=4: short launcher runs drain in a handful of steps, so
+        # schedule the crash early enough to actually fire
+        faults = FaultInjector(FaultPlan.random(
+            args.chaos_seed, replicas=args.replicas, max_step=4,
+            down_steps=args.crash_down_steps))
+
     def mk_engine(i: int) -> ServingEngine:
         tracer = None
         if tracing:
             tracer = StepTracer(replica=i)
             tracers.append(tracer)
         return ServingEngine(rollout_params, cfg, precision,
-                             tracer=tracer,
+                             tracer=tracer, faults=faults,
                              max_slots=args.slots, max_seq_len=64,
                              kv_budget_bytes=budget, seed=args.seed + i,
                              block_size=args.block_size,
@@ -234,6 +283,15 @@ def main(argv=None):
             "kv_pressure": [round(p, 4) for p in report.kv_pressure],
             "sync_ms": round(sync_stats.get("sync_ms", 0.0), 2),
         }
+        if chaos:
+            out["chaos"] = {
+                "healthy_replicas": report.healthy_replicas,
+                "quarantined_replicas": report.quarantined_replicas,
+                "redispatches": report.redispatches,
+                "replayed_tokens": report.replayed_tokens,
+                "aborted": report.aborted,
+                "injected": dict(faults.injected),
+            }
         if report.latency is not None:
             out["latency"] = report.latency
         print(json.dumps(out, indent=2))

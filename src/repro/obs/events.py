@@ -265,11 +265,119 @@ class GaugeEvent(Event):
     kind = "gauge"
 
 
+@dataclasses.dataclass(frozen=True)
+class ReplicaDownEvent(Event):
+    """A replica left the healthy set: it crashed (`reason="crash"`) or
+    was quarantined after a weight push it could not take
+    (`reason="quarantine"`).  `step` is the FLEET step index; `clock`
+    the fleet token-unit clock."""
+
+    replica: int
+    clock: float
+    transient: bool             # a rejoin is scheduled
+    reason: str                 # "crash" | "quarantine"
+
+    kind = "replica_down"
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaUpEvent(Event):
+    """A restarted replica rejoined the healthy set — only after
+    installing the current fleet weight `version` (the catch-up
+    contract: a rejoiner can never serve stale weights)."""
+
+    replica: int
+    clock: float
+    version: int
+
+    kind = "replica_up"
+
+
+@dataclasses.dataclass(frozen=True)
+class RedispatchEvent(Event):
+    """One request failed over from `src_replica` to `dst_replica`.
+    `replayed_tokens` is the exactly-once replay cost: tokens already
+    streamed to the client, re-prefilled on the survivor as a forced
+    prefix and never re-emitted.  Summing it over the event stream must
+    reconcile exactly with the fleet's redispatch gauges (the chaos
+    benchmark asserts this)."""
+
+    rid: int
+    src_replica: int
+    dst_replica: int
+    replayed_tokens: int
+    clock: float
+
+    kind = "redispatch"
+
+
+@dataclasses.dataclass(frozen=True)
+class PushRetryEvent(Event):
+    """One failed install attempt during an atomic weight push (the
+    replica raised; the front-end will retry up to its bounded budget,
+    then quarantine)."""
+
+    replica: int
+    version: int
+    attempt: int                # 1-based failed attempt index
+    clock: float
+
+    kind = "push_retry"
+
+
+@dataclasses.dataclass(frozen=True)
+class QuarantineEvent(Event):
+    """A replica exhausted its install retries for weight `version` and
+    was quarantined: marked unhealthy, its work re-dispatched — the
+    healthy fleet is never version-split."""
+
+    replica: int
+    version: int
+    clock: float
+
+    kind = "quarantine"
+
+
+@dataclasses.dataclass(frozen=True)
+class AbortEvent(Event):
+    """The front-end aborted a request (`FINISH_ABORT`): the fleet
+    stalled with it in flight, its deadline passed on the fleet clock,
+    or no healthy replica remained.  `n_tokens` is what had been
+    streamed before the abort — delivered exactly once, then closed."""
+
+    rid: int
+    replica: int
+    reason: str                 # "stall" | "deadline" | "no_replicas"
+    n_tokens: int
+    clock: float
+
+    kind = "abort"
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetGaugeEvent(Event):
+    """End-of-fleet-step health gauges (cumulative where noted)."""
+
+    clock: float
+    healthy_replicas: int
+    total_replicas: int
+    redispatches: int           # cumulative failovers
+    replayed_tokens: int        # cumulative forced-prefix replay cost
+    aborted: int                # cumulative FINISH_ABORT finals
+    push_retries: int           # cumulative failed install attempts
+    quarantined: int            # replicas currently quarantined
+
+    kind = "fleet_gauge"
+
+
 _REGISTRY: Dict[str, Type[Event]] = {
     cls.kind: cls
     for cls in (SubmitEvent, AdmitEvent, SwapOutEvent, GrowEvent, CowEvent,
                 PrefillEvent, DraftEvent, VerifyEvent, DecodeEvent,
-                FinishEvent, WeightsEvent, StepEvent, GaugeEvent)
+                FinishEvent, WeightsEvent, StepEvent, GaugeEvent,
+                ReplicaDownEvent, ReplicaUpEvent, RedispatchEvent,
+                PushRetryEvent, QuarantineEvent, AbortEvent,
+                FleetGaugeEvent)
 }
 
 EVENT_KINDS = tuple(sorted(_REGISTRY))

@@ -179,6 +179,50 @@ def chrome_trace(events: List[ev.Event], replica: int = 0) -> dict:
                 f"weights v{e.version}" + (" staged" if e.staged else ""),
                 "weights", pid, 0, e.clock,
                 {"version": e.version, "staged": e.staged}))
+        elif isinstance(e, ev.ReplicaDownEvent):
+            rows.append(_instant(
+                f"replica_down r{e.replica} ({e.reason})", "fault",
+                e.replica, 0, e.clock,
+                {"replica": e.replica, "transient": e.transient,
+                 "reason": e.reason}))
+        elif isinstance(e, ev.ReplicaUpEvent):
+            rows.append(_instant(
+                f"replica_up r{e.replica} v{e.version}", "fault",
+                e.replica, 0, e.clock,
+                {"replica": e.replica, "version": e.version}))
+        elif isinstance(e, ev.RedispatchEvent):
+            rows.append(_instant(
+                f"redispatch r{e.rid} {e.src_replica}->{e.dst_replica}",
+                "fault", e.dst_replica, 0, e.clock,
+                {"rid": e.rid, "src": e.src_replica, "dst": e.dst_replica,
+                 "replayed_tokens": e.replayed_tokens}))
+        elif isinstance(e, ev.PushRetryEvent):
+            rows.append(_instant(
+                f"push_retry r{e.replica} v{e.version} #{e.attempt}",
+                "fault", e.replica, 0, e.clock,
+                {"replica": e.replica, "version": e.version,
+                 "attempt": e.attempt}))
+        elif isinstance(e, ev.QuarantineEvent):
+            rows.append(_instant(
+                f"quarantine r{e.replica} v{e.version}", "fault",
+                e.replica, 0, e.clock,
+                {"replica": e.replica, "version": e.version}))
+        elif isinstance(e, ev.AbortEvent):
+            rows.append(_instant(
+                f"abort r{e.rid} ({e.reason})", "fault", e.replica, 0,
+                e.clock,
+                {"rid": e.rid, "reason": e.reason,
+                 "n_tokens": e.n_tokens}))
+        elif isinstance(e, ev.FleetGaugeEvent):
+            rows.append({"name": "fleet health", "ph": "C", "pid": pid,
+                         "ts": float(e.clock),
+                         "args": {"healthy": e.healthy_replicas,
+                                  "quarantined": e.quarantined}})
+            rows.append({"name": "failover", "ph": "C", "pid": pid,
+                         "ts": float(e.clock),
+                         "args": {"redispatches": e.redispatches,
+                                  "replayed_tokens": e.replayed_tokens,
+                                  "aborted": e.aborted}})
         elif isinstance(e, ev.GaugeEvent):
             rows.append({"name": "kv blocks", "ph": "C", "pid": pid,
                          "ts": float(e.clock),

@@ -182,6 +182,49 @@ class StepTracer:
             step=self.step, version=version, staged=staged,
             clock=self.clock))
 
+    # -- fleet fault/recovery hooks (called by ServingFrontend) -------------
+    # These carry explicit step/clock arguments: the FLEET owns its own
+    # step index and token clock (max-over-replicas), which this
+    # tracer's per-engine counters do not track.
+
+    def record_replica_down(self, replica: int, *, step: int, clock: float,
+                            transient: bool, reason: str) -> None:
+        self.emit(ev.ReplicaDownEvent(
+            step=step, replica=replica, clock=clock, transient=transient,
+            reason=reason))
+
+    def record_replica_up(self, replica: int, *, step: int, clock: float,
+                          version: int) -> None:
+        self.emit(ev.ReplicaUpEvent(
+            step=step, replica=replica, clock=clock, version=version))
+
+    def record_redispatch(self, rid: int, src: int, dst: int, *, step: int,
+                          clock: float, replayed_tokens: int) -> None:
+        self.emit(ev.RedispatchEvent(
+            step=step, rid=rid, src_replica=src, dst_replica=dst,
+            replayed_tokens=replayed_tokens, clock=clock))
+
+    def record_push_retry(self, replica: int, *, step: int, clock: float,
+                          version: int, attempt: int) -> None:
+        self.emit(ev.PushRetryEvent(
+            step=step, replica=replica, version=version, attempt=attempt,
+            clock=clock))
+
+    def record_quarantine(self, replica: int, *, step: int, clock: float,
+                          version: int) -> None:
+        self.emit(ev.QuarantineEvent(
+            step=step, replica=replica, version=version, clock=clock))
+
+    def record_abort(self, rid: int, replica: int, *, step: int,
+                     clock: float, reason: str, n_tokens: int) -> None:
+        self.emit(ev.AbortEvent(
+            step=step, rid=rid, replica=replica, reason=reason,
+            n_tokens=n_tokens, clock=clock))
+
+    def record_fleet_gauges(self, *, step: int, clock: float,
+                            **gauges) -> None:
+        self.emit(ev.FleetGaugeEvent(step=step, clock=clock, **gauges))
+
     def record_gauges(self, eng) -> None:
         self.emit(ev.GaugeEvent(
             step=self.step,

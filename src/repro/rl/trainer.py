@@ -246,12 +246,15 @@ class RLTrainer:
         rollout_precision = self._rollout_precision()
         token_versions = None
         if rl.rollout_backend == "fleet":
-            vw = self.syncer.push(self.params)
-            sync_stats = vw.stats
             if self._fleet is None:
+                vw = self.syncer.push(self.params)
                 self._fleet = self._build_fleet(vw.params, vw.version)
             else:
-                self._fleet.update_weights(vw)
+                # failure-aware push: the version is minted only after
+                # the fleet accepts the install (bounded retry inside),
+                # so a failed sync never desyncs trainer vs fleet
+                vw = self.syncer.push_to(self.params, self._fleet)
+            sync_stats = vw.stats
         else:
             rollout_params, sync_stats = sync_policy_weights(
                 self.params, rollout_precision)

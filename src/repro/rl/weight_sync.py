@@ -65,25 +65,69 @@ class WeightSyncer:
     """Version-stamped weight sync for the live-updating fleet.
 
     Owns the monotonic version counter.  The fleet starts at version 0
-    (the checkpoint the engines were built from); every `push()` bumps
-    it and requantizes, so version k's tokens were sampled from the
-    weights of the k-th sync.  Versions never repeat or go backwards —
+    (the checkpoint the engines were built from); every push bumps it
+    and requantizes, so version k's tokens were sampled from the weights
+    of the k-th sync.  Versions never repeat or go backwards —
     `ServingFrontend.update_weights` and `ServingEngine.install_weights`
     both enforce monotonicity on their side too.
+
+    `push_to()` is the failure-aware spelling: the version is minted
+    only AFTER the fleet accepts the push.  A failed install is retried
+    with bounded exponential backoff (`install_retries`, `backoff_s`);
+    exhausting the budget raises with `self.version` untouched, so the
+    next successful push reuses the same number — the fleet never sees
+    a skipped or repeated version, and a half-failed push can never
+    leave the trainer's counter ahead of what the fleet runs.
     """
 
     def __init__(self, precision: PrecisionConfig, *,
-                 rollout_shardings=None, start_version: int = 0):
+                 rollout_shardings=None, start_version: int = 0,
+                 install_retries: int = 2, backoff_s: float = 0.0):
         self.precision = precision
         self.rollout_shardings = rollout_shardings
         self.version = start_version
+        self.install_retries = install_retries
+        self.backoff_s = backoff_s
+        self.push_failures = 0    # failed install attempts absorbed
 
     def push(self, train_params) -> VersionedWeights:
-        """Requantize `train_params` and mint the next weight version."""
+        """Requantize `train_params` and mint the next weight version.
+
+        Fire-and-forget spelling: the caller owns delivery.  Use
+        `push_to(fleet)` when a front-end should absorb install
+        failures without desyncing the version counter."""
         params, stats = sync_policy_weights(
             train_params, self.precision,
             rollout_shardings=self.rollout_shardings)
         self.version += 1
+        stats["weight_version"] = self.version
+        return VersionedWeights(params=params, version=self.version,
+                                stats=stats)
+
+    def push_to(self, train_params, fleet) -> VersionedWeights:
+        """Requantize and install onto `fleet` (anything with an
+        ``update_weights(params, version)``, e.g. `ServingFrontend`),
+        committing the version bump only on success."""
+        from repro.serving.faults import WeightInstallError
+
+        params, stats = sync_policy_weights(
+            train_params, self.precision,
+            rollout_shardings=self.rollout_shardings)
+        version = self.version + 1
+        last_exc = None
+        for attempt in range(1 + self.install_retries):
+            try:
+                fleet.update_weights(params, version)
+                break
+            except WeightInstallError as exc:
+                last_exc = exc
+                self.push_failures += 1
+                if self.backoff_s > 0:
+                    time.sleep(self.backoff_s * (2 ** attempt))
+        else:
+            raise WeightInstallError(
+                getattr(last_exc, "replica", -1), version) from last_exc
+        self.version = version
         stats["weight_version"] = self.version
         return VersionedWeights(params=params, version=self.version,
                                 stats=stats)

@@ -7,8 +7,20 @@ from repro.serving.engine import (
     kv_bytes_per_token,
     request_state_bytes,
 )
+from repro.serving.faults import (
+    NULL_INJECTOR,
+    CrashFault,
+    FaultInjector,
+    FaultPlan,
+    HostCopyError,
+    HostCopyFault,
+    InstallFault,
+    ReplicaCrash,
+    WeightInstallError,
+)
 from repro.serving.frontend import FleetReport, ServingFrontend
 from repro.serving.outputs import (
+    FINISH_ABORT,
     FINISH_LENGTH,
     FINISH_STOP,
     CompletionOutput,
@@ -30,4 +42,7 @@ __all__ = ["ServingEngine", "ServeReport", "Request", "kv_bytes_per_token",
            "EVICTION_POLICIES", "KernelConfig",
            "SpecConfig", "NGramProposer", "Draft", "Verify",
            "ServingFrontend", "FleetReport", "CompletionOutput",
-           "RequestOutput", "FINISH_STOP", "FINISH_LENGTH"]
+           "RequestOutput", "FINISH_STOP", "FINISH_LENGTH", "FINISH_ABORT",
+           "FaultPlan", "FaultInjector", "NULL_INJECTOR", "CrashFault",
+           "InstallFault", "HostCopyFault", "ReplicaCrash",
+           "WeightInstallError", "HostCopyError"]

@@ -93,6 +93,8 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.serving.faults import HostCopyError
+
 DEVICE_TIER = "device"
 HOST_TIER = "host"
 
@@ -163,6 +165,9 @@ class BlockManager:
         self.promoted_blocks = 0      # host->device copies (all paths)
         self.cache_demotions = 0      # evictor demote-before-drop moves
         self.host_cache_drops = 0     # host-cached entries dropped
+        # demote copies that failed (HostCopyError from the engine's
+        # injector seam) and fell back to dropping the prefix entry
+        self.host_copy_faults = 0
 
     # -- construction --------------------------------------------------------
     @classmethod
@@ -322,8 +327,18 @@ class BlockManager:
         if key is not None and self._prefix_index.get(key) == b:
             if self._host_cache_room() > 0:
                 h = self._new_host_id()
-                if self.demote_copy is not None:
-                    self.demote_copy(b, h)
+                try:
+                    if self.demote_copy is not None:
+                        self.demote_copy(b, h)
+                except HostCopyError:
+                    # the host copy failed: fall back to dropping the
+                    # entry (the pre-host-tier behavior).  The content
+                    # is a refcount-0 cache, so nothing is lost but a
+                    # future prefix hit; the minted host id is simply
+                    # abandoned (ids are never recycled).
+                    del self._prefix_index[key]
+                    self.host_copy_faults += 1
+                    return b
                 self._block_key[h] = key
                 self._prefix_index[key] = h
                 self._host_cached[h] = None

@@ -126,6 +126,7 @@ from repro.models import decode_step, init_cache, prefill, prefill_chunk
 from repro.models.attention import paged_copy_rows
 from repro.obs.tracer import NULL_TRACER
 from repro.serving.block_manager import BlockManager
+from repro.serving.faults import NULL_INJECTOR
 from repro.serving.scheduler import (
     Admit,
     Cow,
@@ -271,7 +272,9 @@ class ServingEngine:
                  want_logps: bool = False,
                  weight_version: int = 0,
                  host_kv_blocks: int = 0,
-                 tracer=None):
+                 tracer=None,
+                 faults=None,
+                 replica_index: int = 0):
         assert admission in ("reserve", "ondemand"), admission
         assert decode_kernel in ("gather", "paged"), decode_kernel
         if kernel_config is None:
@@ -311,6 +314,12 @@ class ServingEngine:
         # one tracer per engine; NULL_TRACER keeps every instrumentation
         # site at a single `if self.tracer.enabled` branch when disabled
         self.tracer = tracer if tracer is not None else NULL_TRACER
+        # fault-injection seam (serving.faults): same single-branch
+        # contract as the tracer.  `replica_index` keys the injector's
+        # per-replica schedules; ServingFrontend overwrites it with the
+        # engine's fleet position.
+        self.faults = faults if faults is not None else NULL_INJECTOR
+        self.replica_index = replica_index
         self._staged_weights = None     # (params, version) for next step()
         self._executing = False         # install_weights boundary guard
         self.admission = admission
@@ -370,6 +379,12 @@ class ServingEngine:
         # single-tier drop-on-evict behavior.  Live swap-out demotions
         # always ride the host tier regardless — preemption correctness
         # is never capacity-gated.
+        # kept for reset_for_rejoin: a cold restart rebuilds the
+        # allocator with the exact construction-time sizing
+        self._bm_init = dict(
+            budget_bytes=kv_budget_bytes,
+            block_bytes=block_size * per_tok_bf16, per_tok=per_tok,
+            prefix_sharing=prefix_sharing, host_blocks=host_kv_blocks)
         self.block_mgr = BlockManager.from_byte_budget(
             kv_budget_bytes, block_size * per_tok_bf16, per_tok,
             enable_prefix_sharing=prefix_sharing,
@@ -462,6 +477,66 @@ class ServingEngine:
         if self.tracer.enabled:
             self.tracer.record_submit(self, self.queue[-1])
 
+    def cancel(self, rid: int) -> bool:
+        """Drop a request wherever it lives — queued (including swapped-
+        out victims, which sit at the queue head), or occupying a slot —
+        and free its blocks on both tiers.  No further tokens are
+        emitted; tokens already generated stay on the Request.  Returns
+        False for an unknown rid (finished, or never here), so a double
+        cancel / a cancel after a crash-reset is a safe no-op — the
+        front-end's abort path must never be able to corrupt live
+        state."""
+        for i, r in enumerate(self.queue):
+            if r.rid == rid:
+                self.queue.pop(i)
+                self.block_mgr.free(rid)
+                self._host_state.pop(rid, None)
+                return True
+        for slot, r in enumerate(self.slot_req):
+            if r is not None and r.rid == rid:
+                self.slot_req[slot] = None
+                self.block_mgr.free(rid)
+                self._clear_slot(slot)
+                self._host_state.pop(rid, None)
+                return True
+        return False
+
+    def reset_for_rejoin(self, params, version: int):
+        """Cold restart after a transient crash: everything device-side
+        is considered lost.  Fresh allocator (construction-time sizing),
+        fresh KV pool, cleared slots/queue/host tier — then the fleet's
+        current weights are installed through the normal seam (so a
+        rejoin install can itself fail and the front-end keeps the
+        replica down).  `done` survives: those requests' finals were
+        already streamed and the front-end's bookkeeping still keys on
+        them.  Cumulative `stats` survive too — they are telemetry of
+        work performed, and the work before the crash did happen."""
+        bm = self._bm_init
+        self.block_mgr = BlockManager.from_byte_budget(
+            bm["budget_bytes"], bm["block_bytes"], bm["per_tok"],
+            enable_prefix_sharing=bm["prefix_sharing"],
+            host_blocks=bm["host_blocks"])
+        self.block_mgr.set_host_callbacks(
+            demote_copy=self._host_copy_out_block,
+            host_drop=self._host_drop_block)
+        self.budget_tokens = self.block_mgr.capacity_tokens
+        self.cache = init_cache(
+            self.cfg, self.max_slots, self.max_seq_len, self.precision,
+            page_size=self.block_mgr.block_size,
+            num_pages=self.block_mgr.num_blocks,
+            src_len=self.src_pad if self.cfg.is_encdec else 0)
+        self.slot_req = [None] * self.max_slots
+        self.queue = []
+        self.pending_tok = np.zeros((self.max_slots,), np.int32)
+        self.host_pool = {}
+        self._host_state = {}
+        self._host_dead_on_arrival = set()
+        self._staged_weights = None
+        # a fresh pool holds no calibrated scales; the first prefill
+        # after rejoin re-locks them (one full-width chunk, as at boot)
+        self._scales_calibrated = False
+        self.install_weights(params, version)
+
     # -- live weight updates ------------------------------------------------
     def install_weights(self, params, version: int):
         """In-place weight hot-swap at a step boundary — no draining.
@@ -486,6 +561,12 @@ class ServingEngine:
         assert version >= self.weight_version, (
             f"weight version must be monotonic: {version} < "
             f"{self.weight_version}")
+        if self.faults.enabled:
+            # the install-failure seam sits BEFORE any mutation: a failed
+            # install leaves params/version untouched, so installs are
+            # replica-atomic and a fleet push can only be fleet-partial
+            # (which the front-end's retry/quarantine resolves)
+            self.faults.on_install(self, version)
         self.params = params
         self.weight_version = version
         if self.tracer.enabled:
@@ -788,7 +869,17 @@ class ServingEngine:
         """One scheduler+engine step (the unit external drivers — the
         continuous-batching benchmark, the property tests — advance by).
         Weights staged via `stage_weights` are installed here, before the
-        scheduler plans — the step-boundary swap hook."""
+        scheduler plans — the step-boundary swap hook.
+
+        The crash seam fires FIRST, before any state mutates: a crashed
+        step did nothing, so everything the replica had streamed before
+        it remains exactly-once deliverable and the front-end's failover
+        replay starts from a step boundary.  A staged install that fails
+        (`WeightInstallError` from `_apply_staged_weights`) also leaves
+        the step un-run — the front-end retries the install and
+        re-enters `step()`."""
+        if self.faults.enabled:
+            self.faults.on_step(self)        # may raise ReplicaCrash
         self._apply_staged_weights()
         decision = self.scheduler.step(self)
         if not decision.is_empty:
@@ -800,12 +891,23 @@ class ServingEngine:
         admissions plus their prefill work, nothing else."""
         self.execute(self.scheduler.step(self, admit_only=True))
 
-    def _commit_first_token(self, req: Request, tok, logp):
+    def _commit_first_token(self, req: Request, tok, logp, slot: int):
         """Record the token sampled off the final prefill logits: the
-        ONE place a request's generated/version/logp lists start."""
+        ONE place a request's generated/version/logp lists start.  A
+        max_new=1 request is already done here — without the check it
+        would ride through one decode step and deliver two tokens (the
+        failover replay path is the first caller to submit remaining
+        budgets of 1)."""
         req.generated = [int(tok)]
         req.token_versions = [self.weight_version]
         req.token_logps = [float(logp)] if logp is not None else []
+        if len(req.generated) >= req.max_new:
+            self.done.append(req)
+            self.slot_req[slot] = None
+            self.block_mgr.free(req.rid)
+            self._clear_slot(slot)
+            if self.tracer.enabled:
+                self.tracer.record_finish(self, req)
 
     # -- prefill -------------------------------------------------------------
     def _exec_admit(self, act: Admit) -> int:
@@ -860,7 +962,7 @@ class ServingEngine:
             tok, logp = sample(logits[0], k, self.temperature, self.top_k,
                                want_logp=self.want_logps)
             self.pending_tok[act.slot] = tok
-            self._commit_first_token(req, tok, logp)
+            self._commit_first_token(req, tok, logp, act.slot)
 
     def _prefill_into(self, slot: int, req: Request, ids: List[int]):
         """Legacy one-shot prefill: the whole prompt through one fixed
@@ -902,8 +1004,8 @@ class ServingEngine:
                            want_logp=self.want_logps)
         self.pending_tok[slot] = tok
         self.slot_req[slot] = req
-        self._commit_first_token(req, tok, logp)
         req.cached_tokens = p
+        self._commit_first_token(req, tok, logp, slot)
 
     # -- preemption / swap ---------------------------------------------------
     def _host_copy_out_block(self, dev: int, host: int):
@@ -914,6 +1016,11 @@ class ServingEngine:
         execute-time write of the current step); swap-out demotions
         batch the same copy at the SwapOut action's place in execute
         order instead."""
+        if self.faults.enabled:
+            # cache-demotion copies may fail (HostCopyError): the
+            # allocator falls back to dropping the prefix entry — a
+            # performance loss only, the content is a refcount-0 cache
+            self.faults.on_demote_copy(self)
         entry = {}
         for name, sd in self.cache["slots"].items():
             if "kv" in sd:
@@ -1166,6 +1273,14 @@ class ServingEngine:
         the same treatment by write-back — the fused recurrence advances
         every batch row, and a mid-prefill slot's h/conv must not absorb
         a garbage decode token between its chunks."""
+        # a slot whose request finished at this step's final prefill
+        # chunk (max_new=1: the sampled first token exhausted the
+        # budget) was freed mid-step; its cleared row already points at
+        # the trash table, so just don't decode or commit for it
+        decode_slots = [i for i in decode_slots
+                        if self.slot_req[i] is not None]
+        if not decode_slots:
+            return
         if self.tracer.enabled:
             # contexts are priced pre-decode (cached rows + the row being
             # written), matching the benchmarks' decode-bytes convention

@@ -21,6 +21,12 @@ from typing import List, Optional
 
 FINISH_STOP = "stop"  # hit the engine's EOS id
 FINISH_LENGTH = "length"  # hit the request's max_new budget
+# aborted by the front-end: the fleet stalled with the request in
+# flight, its deadline_tokens passed on the fleet clock, or no healthy
+# replica was left to fail it over to.  The final RequestOutput carries
+# every token already streamed (exactly-once: nothing re-emitted,
+# nothing silently vanishes) and the request's blocks are freed.
+FINISH_ABORT = "abort"
 
 
 @dataclasses.dataclass

@@ -60,7 +60,10 @@ def _gated_benchmarks() -> list:
 
 def test_every_gated_benchmark_has_a_checked_smoke_step():
     gated = _gated_benchmarks()
-    assert len(gated) >= 10, f"gate inventory shrank: {gated}"
+    assert len(gated) >= 11, f"gate inventory shrank: {gated}"
+    assert "fault_tolerance" in gated, (
+        "the fleet chaos gate (failover exactly-once, atomic pushes, "
+        "zero-perturbation injector) must stay wired into CI")
     assert "tiered_kv" in gated, (
         "the tiered-KV revival gate left the registry — the two-tier "
         "allocator's cross-tier win is no longer asserted in CI")

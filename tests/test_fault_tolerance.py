@@ -1,0 +1,466 @@
+"""Fault-tolerant fleet serving: deterministic injection, failover with
+exactly-once token delivery, atomic weight pushes, and the no-silent-loss
+abort paths (stall / deadline / no-survivors)."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import tiny_serving_config
+from repro.core import FP8_LINEAR_ROLLOUT
+from repro.data import tasks
+from repro.models import init_params
+from repro.obs import events as ev
+from repro.obs.tracer import StepTracer
+from repro.rl import WeightSyncer, sync_policy_weights
+from repro.serving import (
+    FINISH_ABORT,
+    FINISH_LENGTH,
+    CrashFault,
+    FaultInjector,
+    FaultPlan,
+    HostCopyFault,
+    InstallFault,
+    ReplicaCrash,
+    ServingEngine,
+    ServingFrontend,
+    WeightInstallError,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = tiny_serving_config()
+    params = init_params(cfg, jax.random.key(0))
+    prec = FP8_LINEAR_ROLLOUT
+    roll, _ = sync_policy_weights(params, prec)
+    return cfg, params, prec, roll
+
+
+def _mk_engine(setup, *, seed=0, version=0, **kw):
+    cfg, _params, prec, roll = setup
+    kw.setdefault("max_slots", 3)
+    kw.setdefault("max_seq_len", 48)
+    kw.setdefault("eos_id", None)
+    # chunked prefill: failover replays original_prompt + streamed as
+    # one longer prompt, which must clear admission
+    kw.setdefault("prefill_chunk", 8)
+    return ServingEngine(roll, cfg, prec, temperature=0.0, seed=seed,
+                         weight_version=version, **kw)
+
+
+def _mk_fleet(setup, *, replicas=2, faults=None, trace=False, **kw):
+    engines = [
+        _mk_engine(setup, seed=i, faults=faults,
+                   tracer=StepTracer(replica=i) if trace else None, **kw)
+        for i in range(replicas)]
+    return ServingFrontend(
+        engines, tracer=StepTracer(replica=-1) if trace else None)
+
+
+def _prompt(seed, plen):
+    rng = np.random.default_rng(seed)
+    return np.concatenate(
+        [[tasks.BOS], rng.integers(4, 19, size=plen - 1)]).astype(np.int32)
+
+
+def _next_version(setup, *, scale=1.1):
+    cfg, params, prec, _ = setup
+    nudged = jax.tree.map(lambda x: x * scale, params)
+    roll, _ = sync_policy_weights(nudged, prec)
+    return roll
+
+
+def _run_collect(fe, max_steps=600):
+    finals = {}
+    for _ in range(max_steps):
+        if not fe.has_work():
+            break
+        for out in fe.step():
+            if out.finished:
+                finals[out.rid] = out
+    return finals
+
+
+# ---------------------------------------------------------------------------
+# injector mechanics
+# ---------------------------------------------------------------------------
+
+def test_empty_plan_injector_is_inert(setup):
+    eng = _mk_engine(setup, faults=FaultInjector(FaultPlan()))
+    eng.submit(_prompt(0, 6), max_new=4)
+    rep = eng.run(max_steps=200)
+    assert len(rep.completed) == 1 and not rep.stalled
+
+
+def test_crash_fires_once_at_scheduled_step(setup):
+    inj = FaultInjector(FaultPlan(crashes=(
+        CrashFault(replica=0, step=2, transient=False),)))
+    eng = _mk_engine(setup, faults=inj)
+    eng.submit(_prompt(0, 6), max_new=6)
+    eng.step()
+    eng.step()
+    with pytest.raises(ReplicaCrash):
+        eng.step()
+    assert inj.injected["crashes"] == 1
+    eng.step()                       # one-shot: does not re-fire
+    assert inj.injected["crashes"] == 1
+
+
+def test_install_fault_burns_bounded_budget(setup):
+    inj = FaultInjector(FaultPlan(installs=(
+        InstallFault(replica=0, version=1, times=2),)))
+    eng = _mk_engine(setup, faults=inj)
+    for _ in range(2):
+        with pytest.raises(WeightInstallError):
+            eng.install_weights(eng.params, 1)
+    assert eng.weight_version == 0   # raise-before-mutate: replica-atomic
+    eng.install_weights(eng.params, 1)
+    assert eng.weight_version == 1
+    assert inj.injected["install_failures"] == 2
+
+
+def test_random_plan_keeps_a_survivor():
+    for seed in range(40):
+        plan = FaultPlan.random(seed, replicas=3, max_step=10, n_crashes=3)
+        permanent = sum(1 for c in plan.crashes if not c.transient)
+        assert permanent <= 2
+
+
+# ---------------------------------------------------------------------------
+# failover: exactly-once delivery
+# ---------------------------------------------------------------------------
+
+def test_failover_is_bit_exact_and_exactly_once(setup):
+    prompts = [_prompt(s, 6 + s % 4) for s in range(5)]
+    kw = dict(replicas=2, max_slots=2)
+
+    fe0 = _mk_fleet(setup, **kw)
+    for i, p in enumerate(prompts):
+        fe0.submit(p, max_new=6, rid=i)
+    oracle = _run_collect(fe0)
+
+    inj = FaultInjector(FaultPlan(crashes=(
+        CrashFault(replica=0, step=3, transient=False),)))
+    fe1 = _mk_fleet(setup, faults=inj, trace=True, **kw)
+    for i, p in enumerate(prompts):
+        fe1.submit(p, max_new=6, rid=i)
+    got = _run_collect(fe1)
+
+    assert inj.injected["crashes"] == 1
+    assert sorted(got) == sorted(oracle)          # zero requests lost
+    for rid in oracle:
+        o, g = oracle[rid].output, got[rid].output
+        assert g.token_ids == o.token_ids         # bit-exact, no dup/drop
+        assert g.versions == o.versions           # exact attribution
+        assert g.finish_reason == o.finish_reason
+    assert fe1.redispatches >= 1 and fe1.replayed_tokens >= 0
+    red = [e for e in fe1.tracer.events
+           if isinstance(e, ev.RedispatchEvent)]
+    assert len(red) == fe1.redispatches
+    assert sum(e.replayed_tokens for e in red) == fe1.replayed_tokens
+
+
+def test_streamed_tokens_never_reemitted_across_failover(setup):
+    """The incremental delta streams concatenate to exactly the final
+    stream — replayed tokens never reappear in a delta."""
+    inj = FaultInjector(FaultPlan(crashes=(
+        CrashFault(replica=0, step=4, transient=False),)))
+    fe = _mk_fleet(setup, replicas=2, max_slots=2, faults=inj)
+    for i in range(4):
+        fe.submit(_prompt(i, 7), max_new=6, rid=i)
+    deltas = {i: [] for i in range(4)}
+    finals = {}
+    for _ in range(400):
+        if not fe.has_work():
+            break
+        for out in fe.step():
+            deltas[out.rid].extend(out.new_token_ids)
+            if out.finished:
+                finals[out.rid] = out
+    assert inj.injected["crashes"] == 1
+    assert len(finals) == 4
+    for rid, out in finals.items():
+        assert deltas[rid] == out.output.token_ids
+        assert len(out.output.token_ids) == 6
+
+
+def test_transient_crash_rejoins_and_serves(setup):
+    inj = FaultInjector(FaultPlan(crashes=(
+        CrashFault(replica=1, step=1, transient=True, down_steps=2),)))
+    fe = _mk_fleet(setup, replicas=2, max_slots=2, faults=inj,
+                   trace=True)
+    for i in range(4):
+        fe.submit(_prompt(i, 6), max_new=5, rid=i)
+    finals = _run_collect(fe)
+    assert len(finals) == 4
+    assert fe.healthy_replicas == 2              # it came back
+    ups = [e for e in fe.tracer.events if isinstance(e, ev.ReplicaUpEvent)]
+    assert len(ups) == 1 and ups[0].version == fe.weight_version
+    # the rejoined replica serves new work
+    rid = fe.submit(_prompt(9, 6), max_new=4)
+    assert fe._tracked[rid].replica == 1         # empty replica wins dispatch
+    finals = _run_collect(fe)
+    assert len(finals[rid].output.token_ids) == 4
+
+
+def test_no_survivor_aborts_instead_of_losing(setup):
+    inj = FaultInjector(FaultPlan(crashes=(
+        CrashFault(replica=0, step=2, transient=False),)))
+    fe = _mk_fleet(setup, replicas=1, faults=inj)
+    fe.submit(_prompt(0, 6), max_new=6, rid=0)
+    finals = _run_collect(fe)
+    assert finals[0].output.finish_reason == FINISH_ABORT
+    assert fe.aborted == 1 and fe.healthy_replicas == 0
+    with pytest.raises(RuntimeError, match="no healthy replica"):
+        fe.submit(_prompt(1, 6), max_new=4)
+
+
+# ---------------------------------------------------------------------------
+# atomic pushes: retry, quarantine, no version split
+# ---------------------------------------------------------------------------
+
+def test_transient_install_failure_absorbed_by_retry(setup):
+    inj = FaultInjector(FaultPlan(installs=(
+        InstallFault(replica=0, version=1, times=1),)))
+    fe = _mk_fleet(setup, replicas=2, faults=inj)
+    fe.submit(_prompt(0, 6), max_new=6, rid=0)
+    fe.step()
+    fe.update_weights(_next_version(setup), 1)
+    assert fe.push_retries == 1
+    assert fe.healthy_replicas == 2              # nobody quarantined
+    assert all(e.weight_version == 1 for e in fe.engines)
+    finals = _run_collect(fe)
+    assert len(finals) == 1
+
+
+def test_permanent_install_failure_quarantines_not_splits(setup):
+    inj = FaultInjector(FaultPlan(installs=(
+        InstallFault(replica=1, version=1, times=-1),)))
+    fe = _mk_fleet(setup, replicas=2, max_slots=2, faults=inj,
+                   trace=True)
+    for i in range(4):
+        fe.submit(_prompt(i, 6), max_new=6, rid=i)
+    fe.step()
+    fe.update_weights(_next_version(setup), 1)
+    assert fe.health[1] == "quarantined"
+    assert fe.engines[0].weight_version == 1 == fe.weight_version
+    assert fe.redispatches >= 1                  # its work moved over
+    quars = [e for e in fe.tracer.events
+             if isinstance(e, ev.QuarantineEvent)]
+    assert len(quars) == 1
+    finals = _run_collect(fe)
+    assert len(finals) == 4                      # zero lost
+    assert all(o.output.finish_reason == FINISH_LENGTH
+               for o in finals.values())
+    assert all(list(o.output.versions) == sorted(o.output.versions)
+               for o in finals.values())
+
+
+def test_staged_push_failure_resolved_at_boundary(setup):
+    inj = FaultInjector(FaultPlan(installs=(
+        InstallFault(replica=0, version=1, times=1),)))
+    fe = _mk_fleet(setup, replicas=2, faults=inj)
+    # work on BOTH replicas: staged installs only commit at a step
+    # boundary, and an idle replica never reaches one
+    fe.submit(_prompt(0, 6), max_new=8, rid=0)
+    fe.submit(_prompt(1, 6), max_new=8, rid=1)
+    fe.step()
+    fe.stage_weights(_next_version(setup), 1)
+    finals = _run_collect(fe)
+    assert len(finals) == 2
+    assert fe.push_retries == 1                  # boundary failure retried
+    assert fe.healthy_replicas == 2
+    assert all(e.weight_version == 1 for e in fe.engines)
+
+
+def test_quarantined_replica_excluded_from_dispatch(setup):
+    inj = FaultInjector(FaultPlan(installs=(
+        InstallFault(replica=0, version=1, times=-1),)))
+    fe = _mk_fleet(setup, replicas=2, faults=inj)
+    fe.update_weights(_next_version(setup), 1)
+    assert fe.health == ["quarantined", "healthy"]
+    for i in range(3):
+        rid = fe.submit(_prompt(i, 6), max_new=4)
+        assert fe._tracked[rid].replica == 1
+    finals = _run_collect(fe)
+    assert len(finals) == 3                      # N-1 degradation works
+
+
+# ---------------------------------------------------------------------------
+# WeightSyncer: failure handling without version desync
+# ---------------------------------------------------------------------------
+
+class _FlakyFleet:
+    """Fleet double whose update_weights fails `fail` times."""
+
+    def __init__(self, fail):
+        self.fail = fail
+        self.installed = []
+
+    def update_weights(self, params, version):
+        if self.fail > 0:
+            self.fail -= 1
+            raise WeightInstallError(0, version)
+        self.installed.append(version)
+
+
+def test_push_to_mints_version_only_on_success(setup):
+    cfg, params, prec, _ = setup
+    syncer = WeightSyncer(prec, install_retries=2)
+    fleet = _FlakyFleet(fail=2)
+    vw = syncer.push_to(params, fleet)           # 2 failures absorbed
+    assert vw.version == 1 and syncer.version == 1
+    assert fleet.installed == [1]
+    assert syncer.push_failures == 2
+
+
+def test_push_to_failure_leaves_version_untouched(setup):
+    cfg, params, prec, _ = setup
+    syncer = WeightSyncer(prec, install_retries=1)
+    fleet = _FlakyFleet(fail=99)
+    with pytest.raises(WeightInstallError):
+        syncer.push_to(params, fleet)
+    assert syncer.version == 0                   # no skip, no split
+    assert fleet.installed == []
+    ok = _FlakyFleet(fail=0)
+    vw = syncer.push_to(params, ok)              # next push reuses v1
+    assert vw.version == 1 and ok.installed == [1]
+
+
+# ---------------------------------------------------------------------------
+# silent-loss fixes: stall / deadline aborts, cancel frees blocks
+# ---------------------------------------------------------------------------
+
+def test_deadline_tokens_aborts_on_fleet_clock(setup):
+    fe = _mk_fleet(setup, replicas=1)
+    fe.submit(_prompt(0, 6), max_new=40, rid=0, deadline_tokens=8)
+    finals = _run_collect(fe)
+    out = finals[0]
+    assert out.output.finish_reason == FINISH_ABORT
+    assert 0 < len(out.output.token_ids) < 40    # partial stream delivered
+    assert fe.engines[0].block_mgr.blocks_in_use == 0   # blocks freed
+
+
+def test_stall_aborts_instead_of_silent_loss(setup):
+    # a prompt too big for the pool: admission never succeeds, the old
+    # frontend dropped the request from the report entirely
+    cfg, _params, prec, roll = setup
+    eng = _mk_engine(setup, max_slots=1, kv_budget_bytes=1)
+    fe = ServingFrontend([eng])
+    fe.submit(_prompt(0, 10), max_new=8, rid=0)
+    rep = fe.run(max_steps=50)
+    assert rep.stalled
+    assert len(rep.outputs) == 1                 # accounted, not lost
+    assert rep.outputs[0].output.finish_reason == FINISH_ABORT
+    assert rep.aborted == 1
+
+
+def test_engine_cancel_frees_blocks_queue_and_slots(setup):
+    eng = _mk_engine(setup)
+    eng.submit(_prompt(0, 6), max_new=6, rid=0)
+    assert eng.cancel(0)                         # still queued
+    assert not eng.cancel(0)                     # idempotent-false
+    eng.submit(_prompt(1, 6), max_new=6, rid=1)
+    for _ in range(2):
+        eng.step()                               # admitted into a slot
+    assert any(r is not None and r.rid == 1 for r in eng.slot_req)
+    assert eng.cancel(1)
+    assert eng.block_mgr.blocks_in_use == 0
+    assert all(r is None for r in eng.slot_req)
+    rep = eng.run(max_steps=50)
+    assert len(rep.completed) == 0 and not eng.queue
+
+
+def test_host_copy_fault_degrades_to_drop(setup):
+    from repro.serving import kv_bytes_per_token, request_state_bytes
+    cfg, _params, prec, roll = setup
+    per = kv_bytes_per_token(cfg, prec)
+    budget = per * 4 * 7 + 2 * request_state_bytes(cfg, prec)
+
+    def serve(faults):
+        eng = _mk_engine(setup, max_slots=2, kv_budget_bytes=budget,
+                         host_kv_blocks=6, faults=faults)
+        toks = {}
+        for wave in range(2):
+            for j in range(2):
+                eng.submit(_prompt(10 * wave + j, 10), max_new=4,
+                           rid=2 * wave + j)
+            rep = eng.run(max_steps=300)
+            assert not rep.stalled
+            toks.update({r.rid: list(map(int, r.generated))
+                         for r in rep.completed})
+        return eng, toks
+
+    eng0, base = serve(None)
+    assert eng0.block_mgr.cache_demotions >= 1   # the trace demotes
+    inj = FaultInjector(FaultPlan(host_copies=(HostCopyFault(0, 0),)))
+    eng1, got = serve(inj)
+    assert inj.injected["host_copy_failures"] == 1
+    assert eng1.block_mgr.host_copy_faults == 1
+    assert got == base                           # never corrupts
+
+
+# ---------------------------------------------------------------------------
+# property: random fault schedules never lose, duplicate, or corrupt
+# ---------------------------------------------------------------------------
+
+def test_random_crash_schedules_property(setup):
+    hyp = pytest.importorskip("hypothesis")
+    st = hyp.strategies
+    prompts = [_prompt(s, 5 + 2 * (s % 3)) for s in range(4)]
+
+    oracle_cache = {}
+
+    def oracle(trace_key):
+        # fault-free oracle per (replicas, request-set); greedy decode
+        # makes it placement-invariant, so one fleet layout suffices
+        if trace_key not in oracle_cache:
+            replicas, reqs = trace_key
+            fe = _mk_fleet(setup, replicas=replicas, max_slots=2)
+            for rid, (pi, max_new) in enumerate(reqs):
+                fe.submit(prompts[pi], max_new=max_new, rid=rid)
+            finals = _run_collect(fe)
+            oracle_cache[trace_key] = {
+                rid: (tuple(o.output.token_ids),
+                      tuple(o.output.versions),
+                      o.output.finish_reason)
+                for rid, o in finals.items()}
+        return oracle_cache[trace_key]
+
+    @hyp.settings(deadline=None, max_examples=12)
+    @hyp.given(
+        reqs=st.lists(st.tuples(st.integers(0, 3),     # prompt index
+                                st.integers(3, 6)),    # max_new
+                      min_size=2, max_size=4),
+        replicas=st.integers(2, 3),
+        plan_seed=st.integers(0, 10_000),
+        n_crashes=st.integers(1, 2),
+    )
+    def run(reqs, replicas, plan_seed, n_crashes):
+        # crash-only chaos (no pushes): full bit-exactness vs the
+        # fault-free oracle is the contract (greedy + forced-prefix
+        # replay under one weight version)
+        plan = FaultPlan.random(plan_seed, replicas=replicas,
+                                max_step=12, n_crashes=n_crashes,
+                                down_steps=2)
+        inj = FaultInjector(plan)
+        fe = _mk_fleet(setup, replicas=replicas, max_slots=2, faults=inj)
+        for rid, (pi, max_new) in enumerate(reqs):
+            fe.submit(prompts[pi], max_new=max_new, rid=rid)
+        finals = _run_collect(fe)
+        got = {rid: (tuple(o.output.token_ids),
+                     tuple(o.output.versions),
+                     o.output.finish_reason)
+               for rid, o in finals.items()}
+        want = oracle(( replicas, tuple(reqs)))
+        assert sorted(got) == sorted(want)       # no request lost
+        for rid, (toks, vers, reason) in got.items():
+            wt, wv, wr = want[rid]
+            assert toks == wt                    # bit-exact, no dup
+            assert vers == wv                    # exact attribution
+            assert reason == wr
+
+    run()
